@@ -1,0 +1,49 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  Fig 9      whole-job reuse speedup        (whole_job_reuse)
+  Figs 10+12 sub-job reuse speedup, 2 scales (subjob_reuse)
+  Fig 11     Store-injection overhead, 2 scales (store_overhead)
+  Figs 13+14 + Table 1  NH / H_C / H_A      (heuristics)
+  Fig 16     projection data-reduction sweep (projection_sweep)
+  Fig 17     filter selectivity sweep        (filter_sweep)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from benchmarks import (filter_sweep, heuristics, prefix_reuse_bench,  # noqa
+                        projection_sweep, store_overhead, subjob_reuse,
+                        whole_job_reuse)
+
+SUITES = {
+    "fig9_whole_job": whole_job_reuse.run,
+    "fig10_12_subjob": subjob_reuse.run,
+    "fig11_overhead": store_overhead.run,
+    "fig13_14_table1_heuristics": heuristics.run,
+    "fig16_projection": projection_sweep.run,
+    "fig17_filter": filter_sweep.run,
+    "beyond_prefix_reuse": prefix_reuse_bench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(SUITES) + [None])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        fn()
+        print(f"# suite {name} finished in {time.time() - t0:.1f}s",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Serving with ReStore-style prefix reuse (beyond-paper extension).
+
+A fleet of prompts sharing a long system prefix: the first request
+prefills everything; later requests reuse the stored prefix state and
+prefill only their suffix.  Outputs are verified identical to a no-reuse
+engine.
+
+Usage: PYTHONPATH=src python examples/serve_prefix_reuse.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np     # noqa: E402
+import jax             # noqa: E402
+
+from repro.configs import get_config                     # noqa: E402
+from repro.models.api import build                       # noqa: E402
+from repro.serve.engine import ServeEngine               # noqa: E402
+from repro.serve.prefix_repo import PrefixRepository     # noqa: E402
+
+
+def main():
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    repo = PrefixRepository(model_version="demo-v1")
+    engine = ServeEngine(model, params, max_len=96, prefix_repo=repo)
+    plain = ServeEngine(model, params, max_len=96)
+
+    rng = np.random.default_rng(0)
+    system_prefix = rng.integers(1, cfg.vocab_size, 48)
+
+    total_prefilled = total_reused = 0
+    for i in range(4):
+        user_part = rng.integers(1, cfg.vocab_size, 16)
+        prompt = np.concatenate([system_prefix, user_part])
+        out, stats = engine.serve(prompt, n_decode=8)
+        ref, _ = plain.serve(prompt, n_decode=8)
+        assert (out == ref).all(), "reuse must not change outputs"
+        total_prefilled += stats.prefilled_tokens
+        total_reused += stats.reused_tokens
+        print(f"request {i}: reused {stats.reused_tokens:3d} tokens, "
+              f"prefilled {stats.prefilled_tokens:3d}, "
+              f"wall {stats.wall_s:.2f}s")
+
+    frac = total_reused / (total_reused + total_prefilled)
+    print(f"prefix repo entries: {len(repo)}; "
+          f"fraction of prompt tokens answered from the repository: "
+          f"{frac:.0%}")
+    print("serve_prefix_reuse OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Sub-job enumeration (paper §4).
+
+For every physical operator selected by the active heuristic, inject a
+Split + Store so its output is materialized during job execution and
+becomes a repository candidate:
+
+  * Conservative H_C — input-reducing operators: PROJECT, FILTER (and
+    FOREACH, Pig's projection carrier);
+  * Aggressive   H_A — H_C plus the expensive operators: JOIN, GROUPBY,
+    COGROUP;
+  * NoHeuristic  NH  — every operator.
+
+Candidate artifacts are named by the fingerprint of the *original-form*
+operator (pre-rewrite), so the same logical value always maps to the same
+artifact regardless of how much of the plan was answered from the
+repository this time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from ..dataflow.compiler import art_name
+from .plan import Operator, PhysicalPlan, split, store
+
+CONSERVATIVE = frozenset({"PROJECT", "FILTER", "FOREACH"})
+AGGRESSIVE = CONSERVATIVE | {"JOIN", "GROUPBY", "COGROUP"}
+ALL_OPS = AGGRESSIVE | {"UNION", "DISTINCT"}
+
+HEURISTICS = {
+    "conservative": CONSERVATIVE,
+    "aggressive": AGGRESSIVE,
+    "none": ALL_OPS,          # the paper's "No Heuristic" policy
+    "off": frozenset(),       # no sub-job materialization at all
+}
+
+
+@dataclasses.dataclass
+class Candidate:
+    artifact: str
+    plan: PhysicalPlan        # original-form Load...→op→Store
+    exec_op_uid: int          # uid of the op in the executed plan
+
+
+def enumerate_subjobs(exec_plan: PhysicalPlan, origin: Dict[int, Operator],
+                      orig_plan: PhysicalPlan,
+                      heuristic: str) -> tuple[PhysicalPlan, List[Candidate]]:
+    kinds = HEURISTICS[heuristic]
+    orig_fps = orig_plan.fingerprints()
+
+    existing = {s.params["name"] for s in exec_plan.sinks
+                if s.kind == "STORE"}
+    sinks = list(exec_plan.sinks)
+    candidates: List[Candidate] = []
+    for op in exec_plan.topo():
+        if op.kind not in kinds:
+            continue
+        orig = origin.get(id(op))
+        if orig is None:
+            continue
+        name = art_name(orig_fps[id(orig)])
+        if name in existing:
+            continue
+        existing.add(name)
+        sinks.append(store(split(op), name))
+        candidates.append(Candidate(
+            artifact=name,
+            plan=orig_plan.subplan_upto(orig, name),
+            exec_op_uid=op.uid))
+    return PhysicalPlan(sinks), candidates
+
+
+def whole_job_candidates(exec_plan: PhysicalPlan, origin: Dict[int, Operator],
+                         orig_plan: PhysicalPlan) -> List[Candidate]:
+    """Every job output is a repository candidate (paper §4 ¶2) — at zero
+    extra cost, since workflow outputs are stored anyway."""
+    orig_fps = orig_plan.fingerprints()
+    out: List[Candidate] = []
+    for s in exec_plan.sinks:
+        if s.kind != "STORE":
+            continue
+        inp = s.inputs[0]
+        target = inp.inputs[0] if inp.kind == "SPLIT" else inp
+        if target.kind == "LOAD":
+            continue
+        orig = origin.get(id(target))
+        if orig is None:
+            continue
+        out.append(Candidate(
+            artifact=s.params["name"],
+            plan=orig_plan.subplan_upto(orig, s.params["name"]),
+            exec_op_uid=target.uid))
+    return out

@@ -1,0 +1,146 @@
+"""Plan containment matching (paper §3).
+
+Two implementations, tested to agree:
+
+* ``match_bottom_up`` — the production path.  Operator equivalence (same
+  function over equivalent inputs) is exactly Merkle-fingerprint equality,
+  so containment of a repository plan in an input plan reduces to: "does
+  the input plan contain an operator whose fingerprint equals the
+  fingerprint of the repository plan's output operator?".  O(|plan|) with
+  an index, instead of the paper's repeated pairwise traversals.
+
+* ``pairwise_plan_traversal`` — a faithful port of the paper's
+  Algorithm 1 (simultaneous depth-first traversal from the Load
+  operators).  Kept as the reference implementation and exercised by the
+  benchmarks that reproduce the paper's matcher behaviour.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from .plan import Operator, PhysicalPlan
+
+
+def _output_op(plan: PhysicalPlan) -> Operator:
+    sink = plan.sinks[0]
+    return sink.inputs[0] if sink.kind == "STORE" else sink
+
+
+# ---------------------------------------------------------------------------
+# Production matcher: bottom-up / fingerprint
+
+
+def match_bottom_up(input_plan: PhysicalPlan,
+                    repo_plan: PhysicalPlan) -> Optional[Operator]:
+    """Return the operator in ``input_plan`` equivalent to ``repo_plan``'s
+    output, or None if the repository plan is not contained."""
+    target_fp = repo_plan.fingerprints()[id(_output_op(repo_plan))]
+    in_fps = input_plan.fingerprints()
+    for op in input_plan.topo():
+        if op.kind in ("LOAD", "STORE"):
+            continue  # rewriting a Load with a Load is useless
+        if in_fps[id(op)] == target_fp:
+            return op
+    return None
+
+
+class FingerprintIndex:
+    """Beyond-paper fast path: index input-plan ops by fingerprint once,
+    then each repository probe is O(1) instead of a plan scan."""
+
+    def __init__(self, input_plan: PhysicalPlan):
+        self.by_fp: Dict[str, Operator] = {}
+        fps = input_plan.fingerprints()
+        for op in input_plan.topo():
+            if op.kind in ("LOAD", "STORE"):
+                continue
+            self.by_fp.setdefault(fps[id(op)], op)
+
+    def probe(self, repo_plan: PhysicalPlan) -> Optional[Operator]:
+        fp = repo_plan.fingerprints()[id(_output_op(repo_plan))]
+        return self.by_fp.get(fp)
+
+
+# ---------------------------------------------------------------------------
+# Paper Algorithm 1 (faithful port)
+
+
+def _find_equivalent(op: Operator, candidates: List[Operator]) -> Optional[Operator]:
+    for c in candidates:
+        if c.local_sig() == op.local_sig():
+            return c
+    return None
+
+
+def pairwise_plan_traversal(input_plan: PhysicalPlan,
+                            repo_plan: PhysicalPlan) -> Optional[Operator]:
+    """Algorithm 1: simultaneous DFS from the Load operators.  Returns the
+    last matched operator of the *input* plan (the rewrite anchor), or
+    None.  As in the paper, matching starts by pairing Load operators that
+    read the same dataset."""
+    succ1 = input_plan.successors()
+    succ2 = repo_plan.successors()
+
+    loads1 = input_plan.loads()
+    loads2 = repo_plan.loads()
+    # each repo Load must have an equivalent input Load
+    pairs = []
+    used = set()
+    for l2 in loads2:
+        found = None
+        for l1 in loads1:
+            if id(l1) in used:
+                continue
+            if l1.local_sig() == l2.local_sig():
+                found = l1
+                break
+        if found is None:
+            return None
+        used.add(id(found))
+        pairs.append((found, l2))
+
+    remaining2 = [o for o in repo_plan.topo()
+                  if o.kind not in ("LOAD", "STORE")]
+    matched: Dict[int, Operator] = {}   # repo op id -> input op
+    seen = set()
+
+    def traverse(succs1: List[Operator], succs2: List[Operator],
+                 last_match: Optional[Operator]) -> Optional[Operator]:
+        succs2 = [s for s in succs2 if s.kind != "STORE"]
+        if not succs2:
+            return last_match
+        if not succs1:
+            return None
+        ret: Optional[Operator] = None
+        s2_left = list(succs2)
+        for s in succs1:
+            if id(s) in seen:
+                continue
+            seen.add(id(s))
+            eq = _find_equivalent(s, s2_left)
+            if eq is None:
+                continue
+            ret = traverse(succ1[id(s)], succ2[id(eq)], s)
+            if ret is None:
+                return None
+            matched[id(eq)] = s
+            s2_left.remove(eq)
+            if not s2_left:
+                break
+        if s2_left:
+            return None
+        return ret
+
+    last: Optional[Operator] = None
+    for l1, l2 in pairs:
+        r = traverse(succ1[id(l1)], succ2[id(l2)], last)
+        if r is None:
+            return None
+        last = r
+
+    # all repo ops must be matched
+    for o in remaining2:
+        if id(o) not in matched:
+            return None
+    out2 = _output_op(repo_plan)
+    return matched.get(id(out2), last)

@@ -1,0 +1,228 @@
+"""Physical plan IR: DAGs of physical operators, exactly the abstraction
+ReStore matches and rewrites (paper §2, §3).
+
+Operator kinds (the Pig physical-operator set used by the paper):
+  LOAD, STORE, PROJECT, FOREACH, FILTER, JOIN, GROUPBY, COGROUP,
+  DISTINCT, UNION, SPLIT.
+
+Every operator has a canonical ``local_sig`` (kind + parameters) and a
+Merkle ``fingerprint`` (sha256 over local_sig + input fingerprints).  Two
+operators are *equivalent* in the paper's sense — same function over
+equivalent inputs — iff their fingerprints are equal.  LOAD fingerprints
+include the dataset version, which implements eviction rule R4 (modified
+inputs never match) structurally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..dataflow.expr import Expr, agg_key
+
+# operator kinds whose inputs are order-insensitive
+_COMMUTATIVE_KINDS = {"UNION"}
+# operators that force a shuffle boundary (map -> reduce)
+BLOCKING_KINDS = {"JOIN", "GROUPBY", "COGROUP", "DISTINCT"}
+
+
+_op_counter = itertools.count()
+
+
+@dataclasses.dataclass(eq=False)
+class Operator:
+    kind: str
+    params: Dict
+    inputs: List["Operator"]
+    uid: int = dataclasses.field(default_factory=lambda: next(_op_counter))
+
+    # ------------------------------------------------------------------
+    def param_key(self) -> Tuple:
+        p = self.params
+        k = self.kind
+        if k == "LOAD":
+            return (p["dataset"], p.get("version", 0))
+        if k == "STORE":
+            return ()  # store target name is irrelevant for equivalence
+        if k == "PROJECT":
+            return tuple(sorted(p["cols"]))
+        if k == "FOREACH":
+            return tuple(sorted((n, e.key()) for n, e in p["gens"].items()))
+        if k == "FILTER":
+            return p["pred"].key()
+        if k == "JOIN":
+            return (tuple(p["left_keys"]), tuple(p["right_keys"]),
+                    p.get("expansion", 1))
+        if k == "GROUPBY":
+            return (tuple(sorted(p["keys"])), agg_key(p["aggs"]))
+        if k == "COGROUP":
+            return (tuple(p["keys_left"]), tuple(p["keys_right"]),
+                    agg_key(p["aggs_left"]), agg_key(p["aggs_right"]))
+        if k in ("DISTINCT", "UNION", "SPLIT"):
+            return ()
+        raise ValueError(f"unknown operator kind {k}")
+
+    def local_sig(self) -> Tuple:
+        return (self.kind, self.param_key())
+
+    def __repr__(self):
+        return f"{self.kind}#{self.uid}"
+
+
+# ---------------------------------------------------------------------------
+# Builder helpers
+
+
+def load(dataset: str, version: int = 0, capacity: int | None = None,
+         schema=None) -> Operator:
+    return Operator("LOAD", dict(dataset=dataset, version=version,
+                                 capacity=capacity, schema=schema), [])
+
+
+def store(inp: Operator, name: str) -> Operator:
+    return Operator("STORE", dict(name=name), [inp])
+
+
+def project(inp: Operator, cols: Sequence[str]) -> Operator:
+    return Operator("PROJECT", dict(cols=tuple(cols)), [inp])
+
+
+def foreach(inp: Operator, gens: Dict[str, Expr]) -> Operator:
+    return Operator("FOREACH", dict(gens=dict(gens)), [inp])
+
+
+def filter_(inp: Operator, pred: Expr) -> Operator:
+    return Operator("FILTER", dict(pred=pred), [inp])
+
+
+def join(left: Operator, right: Operator, left_keys, right_keys,
+         expansion: int = 1) -> Operator:
+    return Operator("JOIN", dict(left_keys=tuple(left_keys),
+                                 right_keys=tuple(right_keys),
+                                 expansion=expansion), [left, right])
+
+
+def groupby(inp: Operator, keys, aggs: Dict[str, Tuple[str, str]]) -> Operator:
+    return Operator("GROUPBY", dict(keys=tuple(keys), aggs=dict(aggs)), [inp])
+
+
+def cogroup(left: Operator, right: Operator, keys_left, keys_right,
+            aggs_left, aggs_right) -> Operator:
+    return Operator("COGROUP", dict(keys_left=tuple(keys_left),
+                                    keys_right=tuple(keys_right),
+                                    aggs_left=dict(aggs_left),
+                                    aggs_right=dict(aggs_right)),
+                    [left, right])
+
+
+def distinct(inp: Operator) -> Operator:
+    return Operator("DISTINCT", {}, [inp])
+
+
+def union(a: Operator, b: Operator) -> Operator:
+    return Operator("UNION", {}, [a, b])
+
+
+def split(inp: Operator) -> Operator:
+    return Operator("SPLIT", {}, [inp])
+
+
+# ---------------------------------------------------------------------------
+# Plan
+
+
+@dataclasses.dataclass
+class PhysicalPlan:
+    """A DAG identified by its sink operators (STOREs)."""
+
+    sinks: List[Operator]
+
+    # -- traversal -----------------------------------------------------------
+    def topo(self) -> List[Operator]:
+        seen: Dict[int, Operator] = {}
+        order: List[Operator] = []
+
+        def visit(op: Operator):
+            if id(op) in seen:
+                return
+            seen[id(op)] = op
+            for i in op.inputs:
+                visit(i)
+            order.append(op)
+
+        for s in self.sinks:
+            visit(s)
+        return order
+
+    def loads(self) -> List[Operator]:
+        return [o for o in self.topo() if o.kind == "LOAD"]
+
+    def successors(self) -> Dict[int, List[Operator]]:
+        succ: Dict[int, List[Operator]] = {id(o): [] for o in self.topo()}
+        for o in self.topo():
+            for i in o.inputs:
+                succ[id(i)].append(o)
+        return succ
+
+    # -- fingerprints ----------------------------------------------------------
+    def fingerprints(self) -> Dict[int, str]:
+        fp: Dict[int, str] = {}
+        for op in self.topo():
+            in_fps = [fp[id(i)] for i in op.inputs]
+            if op.kind in _COMMUTATIVE_KINDS:
+                in_fps = sorted(in_fps)
+            h = hashlib.sha256(
+                repr((op.local_sig(), tuple(in_fps))).encode()).hexdigest()
+            fp[id(op)] = h
+        return fp
+
+    def fingerprint_of(self, op: Operator) -> str:
+        return self.fingerprints()[id(op)]
+
+    # -- rewriting -------------------------------------------------------------
+    def replace(self, old: Operator, new: Operator) -> "PhysicalPlan":
+        """Return a new plan with ``old``'s subtree replaced by ``new``.
+
+        Downstream operators are rebuilt; untouched subgraphs are shared.
+        """
+        mapping: Dict[int, Operator] = {id(old): new}
+
+        def rebuild(op: Operator) -> Operator:
+            if id(op) in mapping:
+                return mapping[id(op)]
+            new_inputs = [rebuild(i) for i in op.inputs]
+            if all(a is b for a, b in zip(new_inputs, op.inputs)):
+                mapping[id(op)] = op
+            else:
+                mapping[id(op)] = Operator(op.kind, dict(op.params), new_inputs)
+            return mapping[id(op)]
+
+        return PhysicalPlan([rebuild(s) for s in self.sinks])
+
+    def subplan_upto(self, op: Operator, store_name: str) -> "PhysicalPlan":
+        """The paper's sub-job J_P: everything from the Loads up to and
+        including ``op``, terminated by a Store (paper §4)."""
+        if op.kind == "STORE":
+            return PhysicalPlan([op])
+        return PhysicalPlan([store(op, store_name)])
+
+    def describe(self) -> str:
+        lines = []
+        for op in self.topo():
+            ins = ",".join(repr(i) for i in op.inputs)
+            lines.append(f"{op!r}({ins}) {op.param_key()}")
+        return "\n".join(lines)
+
+    def n_ops(self) -> int:
+        return len(self.topo())
+
+
+def plan_signature(plan: PhysicalPlan) -> str:
+    """Fingerprint of a single-sink plan's *output* (pre-Store), used as the
+    repository key: two plans with the same signature compute the same
+    result from the same inputs."""
+    assert len(plan.sinks) == 1
+    sink = plan.sinks[0]
+    target = sink.inputs[0] if sink.kind == "STORE" else sink
+    return plan.fingerprints()[id(target)]

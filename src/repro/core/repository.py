@@ -1,0 +1,151 @@
+"""The ReStore repository (paper §2.2, §3 ordering rules, §5 management).
+
+One entry per stored job/sub-job output: the physical plan that produced
+it, the artifact name in the store, and execution statistics.  Entries are
+kept partially ordered so that the *first* match found during the
+sequential scan is the best match:
+
+  rule 1 — plan A before plan B if A subsumes B (B contained in A);
+  rule 2 — otherwise, higher input:output byte ratio first, then longer
+           producing-job execution time first.
+
+Eviction (paper §5 rules):
+  R1  keep only if |output| < |input|                       (optional)
+  R2  keep only if reuse is predicted to save time          (optional)
+  R3  evict entries unused within a time window
+  R4  evict entries whose source datasets changed (handled structurally:
+      Load fingerprints embed dataset versions, so stale entries can never
+      match — ``evict_stale`` garbage-collects them)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from .matcher import match_bottom_up
+from .plan import PhysicalPlan, plan_signature
+
+
+@dataclasses.dataclass
+class RepositoryEntry:
+    plan: PhysicalPlan            # Load...→op→Store, original (unrewritten) form
+    artifact: str                 # dataset name in the artifact store
+    signature: str                # fingerprint of the output operator
+    bytes_in: int = 0
+    bytes_out: int = 0
+    rows_out: int = 0
+    exec_time_s: float = 0.0      # ET of the producing (sub-)job
+    created_at: float = 0.0
+    last_used: float = 0.0
+    use_count: int = 0
+    source_versions: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def reduction(self) -> float:
+        return self.bytes_in / max(self.bytes_out, 1)
+
+    def n_ops(self) -> int:
+        return self.plan.n_ops()
+
+
+class Repository:
+    def __init__(self, keep_only_reducing: bool = False,
+                 keep_only_time_saving: bool = False,
+                 load_bandwidth_bytes_s: float = 2e9):
+        self.entries: List[RepositoryEntry] = []
+        self.by_sig: Dict[str, RepositoryEntry] = {}
+        self.keep_only_reducing = keep_only_reducing
+        self.keep_only_time_saving = keep_only_time_saving
+        self.load_bw = load_bandwidth_bytes_s
+        self._ordered_dirty = True
+        self._ordered: List[RepositoryEntry] = []
+
+    # ------------------------------------------------------------- insert
+    def add(self, entry: RepositoryEntry) -> bool:
+        """Apply keep-rules R1/R2, then insert (idempotent by signature)."""
+        if entry.signature in self.by_sig:
+            return False
+        if self.keep_only_reducing and entry.bytes_out >= entry.bytes_in:
+            return False            # rule R1
+        if self.keep_only_time_saving:
+            load_time = entry.bytes_out / self.load_bw
+            if entry.exec_time_s <= load_time:
+                return False        # rule R2 (Eq. 1/2 estimate)
+        entry.created_at = entry.created_at or time.time()
+        self.entries.append(entry)
+        self.by_sig[entry.signature] = entry
+        self._ordered_dirty = True
+        return True
+
+    # ------------------------------------------------------------- ordering
+    def ordered(self) -> List[RepositoryEntry]:
+        """Entries in scan order per the two ordering rules."""
+        if not self._ordered_dirty:
+            return self._ordered
+        # subsumption partial order: A subsumes B iff B's plan is contained
+        # in A's plan.  n_ops is a cheap necessary condition.
+        es = sorted(self.entries,
+                    key=lambda e: (-e.n_ops(), -e.reduction, -e.exec_time_s))
+        # stable insertion respecting subsumption (larger plans first
+        # already guarantees a subsumer precedes what it subsumes, since a
+        # subsumer has strictly more operators unless equal)
+        self._ordered = es
+        self._ordered_dirty = False
+        return self._ordered
+
+    def subsumes(self, a: RepositoryEntry, b: RepositoryEntry) -> bool:
+        return match_bottom_up(a.plan, b.plan) is not None
+
+    # ------------------------------------------------------------- use/evict
+    def touch(self, entry: RepositoryEntry):
+        entry.last_used = time.time()
+        entry.use_count += 1
+
+    def evict_unused(self, window_s: float, store=None) -> int:
+        """Rule R3."""
+        now = time.time()
+        keep, drop = [], []
+        for e in self.entries:
+            ref = e.last_used or e.created_at
+            (keep if now - ref <= window_s else drop).append(e)
+        self._replace(keep, drop, store)
+        return len(drop)
+
+    def evict_stale(self, catalog) -> int:
+        """Rule R4 garbage collection: an entry whose recorded source
+        versions no longer match the catalog can never match again."""
+        keep, drop = [], []
+        for e in self.entries:
+            stale = any(catalog.version(ds) != v
+                        for ds, v in e.source_versions.items())
+            (drop if stale else keep).append(e)
+        self._replace(keep, drop, None)
+        return len(drop)
+
+    def _replace(self, keep, drop, store):
+        self.entries = keep
+        self.by_sig = {e.signature: e for e in keep}
+        self._ordered_dirty = True
+        if store is not None:
+            for e in drop:
+                store.delete(e.artifact)
+
+    # ------------------------------------------------------------- helpers
+    def __len__(self):
+        return len(self.entries)
+
+    def total_stored_bytes(self) -> int:
+        return sum(e.bytes_out for e in self.entries)
+
+
+def make_entry(plan: PhysicalPlan, artifact: str, *, bytes_in=0, bytes_out=0,
+               rows_out=0, exec_time_s=0.0,
+               source_versions: Optional[Dict[str, int]] = None
+               ) -> RepositoryEntry:
+    return RepositoryEntry(plan=plan, artifact=artifact,
+                           signature=plan_signature(plan),
+                           bytes_in=bytes_in, bytes_out=bytes_out,
+                           rows_out=rows_out, exec_time_s=exec_time_s,
+                           created_at=time.time(),
+                           source_versions=dict(source_versions or {}))

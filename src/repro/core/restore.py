@@ -1,0 +1,132 @@
+"""The ReStore driver (paper Fig. 7, §6.2).
+
+Mirrors the extended JobControlCompiler: jobs are processed in dependency
+order; each job's plan goes through (1) matching + rewriting against the
+repository, (2) sub-job enumeration, then is executed; statistics are
+retrieved and the outputs registered in the repository.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from ..dataflow.compiler import Job, Workflow, compile_workflow
+from ..dataflow.executor import Engine, JobStats
+from ..store.artifacts import ArtifactStore, Catalog
+from .enumerator import enumerate_subjobs, whole_job_candidates
+from .plan import PhysicalPlan
+from .repository import Repository, make_entry
+from .rewriter import is_trivial, rewrite_plan
+
+
+@dataclasses.dataclass
+class JobReport:
+    job_id: int
+    executed: bool
+    reused_artifacts: List[str]
+    stored_candidates: List[str]
+    stats: Optional[JobStats]
+    n_ops_before: int = 0
+    n_ops_after: int = 0
+
+
+@dataclasses.dataclass
+class RunReport:
+    jobs: List[JobReport]
+    wall_s: float = 0.0
+
+    @property
+    def n_executed(self) -> int:
+        return sum(1 for j in self.jobs if j.executed)
+
+    @property
+    def n_reused(self) -> int:
+        return sum(len(j.reused_artifacts) for j in self.jobs)
+
+    @property
+    def total_wall_s(self) -> float:
+        return sum(j.stats.wall_s for j in self.jobs if j.stats)
+
+
+class ReStore:
+    def __init__(self, catalog: Catalog, store: ArtifactStore,
+                 repository: Optional[Repository] = None,
+                 heuristic: str = "aggressive",
+                 use_algorithm1: bool = False,
+                 rewrite_enabled: bool = True,
+                 measure_exec: bool = False):
+        self.catalog = catalog
+        self.store = store
+        self.repo = repository if repository is not None else Repository()
+        self.engine = Engine(catalog, store, measure_exec=measure_exec)
+        self.heuristic = heuristic
+        self.use_algorithm1 = use_algorithm1
+        self.rewrite_enabled = rewrite_enabled
+
+    # ------------------------------------------------------------------
+    def run_plan(self, plan: PhysicalPlan):
+        return self.run_workflow(compile_workflow(plan))
+
+    def run_workflow(self, wf: Workflow):
+        reports: List[JobReport] = []
+        for job in wf.jobs:
+            reports.append(self._process_job(job))
+        results = {user: self.store.get(ds)
+                   for user, ds in wf.final_outputs.items()}
+        return results, RunReport(reports)
+
+    # ------------------------------------------------------------------
+    def _process_job(self, job: Job) -> JobReport:
+        # a job whose outputs all exist is fully answered by the store
+        if all(self.store.exists(o) for o in job.outputs):
+            return JobReport(job.job_id, False, list(job.outputs), [], None,
+                             job.plan.n_ops(), 0)
+
+        n_before = job.plan.n_ops()
+        if self.rewrite_enabled:
+            rw = rewrite_plan(job.plan, self.repo,
+                              use_algorithm1=self.use_algorithm1)
+            plan, used, origin = rw.plan, rw.used, rw.origin
+        else:
+            plan = job.plan
+            used = []
+            origin = {id(op): op for op in plan.topo()}
+
+        if is_trivial(plan):
+            # fully reused: alias outputs to the loaded artifacts
+            for s in plan.sinks:
+                self.store.alias(s.params["name"],
+                                 s.inputs[0].params["dataset"])
+            return JobReport(job.job_id, False,
+                             [e.artifact for e in used], [], None,
+                             n_before, plan.n_ops())
+
+        exec_plan, cands = enumerate_subjobs(plan, origin, job.plan,
+                                             self.heuristic)
+        cands = cands + whole_job_candidates(plan, origin, job.plan)
+
+        exec_job = Job(job.job_id, exec_plan,
+                       inputs=sorted({o.params["dataset"]
+                                      for o in exec_plan.loads()}),
+                       outputs=[s.params["name"] for s in exec_plan.sinks],
+                       blocking=job.blocking)
+        outputs, stats = self.engine.run_job(exec_job)
+
+        stored = []
+        versions = {ds: self.catalog.version(ds) for ds in exec_job.inputs
+                    if not ds.startswith("art/")}
+        for c in cands:
+            if not self.store.exists(c.artifact):
+                continue
+            entry = make_entry(
+                c.plan, c.artifact,
+                bytes_in=stats.bytes_in,
+                bytes_out=self.store.nbytes(c.artifact),
+                rows_out=stats.op_rows.get(c.exec_op_uid, 0),
+                exec_time_s=stats.wall_s,
+                source_versions=versions)
+            if self.repo.add(entry):
+                stored.append(c.artifact)
+
+        return JobReport(job.job_id, True, [e.artifact for e in used],
+                         stored, stats, n_before, exec_plan.n_ops())

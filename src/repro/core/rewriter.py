@@ -1,0 +1,100 @@
+"""Plan rewriting (paper §3).
+
+Given a job's physical plan and the repository, repeatedly:
+  scan the repository in its partial order; the first entry whose plan is
+  contained in the job plan rewrites it — the matched region is replaced
+  by a Load of the entry's artifact — then a fresh scan starts (so several
+  repository plans can rewrite one job, exactly as in the paper).
+
+The rewriter tracks, for every operator of the rewritten plan, which
+operator of the *original* plan it computes.  The sub-job enumerator uses
+this to name candidate artifacts by original-form fingerprints, keeping
+the repository language canonical across runs (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .matcher import FingerprintIndex, match_bottom_up, pairwise_plan_traversal
+from .plan import Operator, PhysicalPlan, load
+from .repository import Repository, RepositoryEntry
+
+
+@dataclasses.dataclass
+class RewriteResult:
+    plan: PhysicalPlan
+    used: List[RepositoryEntry]              # entries applied, in order
+    origin: Dict[int, Operator]              # rewritten op id -> original op
+
+
+def _replace_tracking(plan: PhysicalPlan, old: Operator, new: Operator,
+                      origin: Dict[int, Operator]) -> Tuple[PhysicalPlan,
+                                                            Dict[int, Operator]]:
+    mapping: Dict[int, Operator] = {id(old): new}
+    new_origin: Dict[int, Operator] = {}
+
+    def rebuild(op: Operator) -> Operator:
+        if id(op) in mapping:
+            return mapping[id(op)]
+        new_inputs = [rebuild(i) for i in op.inputs]
+        if all(a is b for a, b in zip(new_inputs, op.inputs)):
+            out = op
+        else:
+            out = Operator(op.kind, dict(op.params), new_inputs)
+        mapping[id(op)] = out
+        return out
+
+    sinks = [rebuild(s) for s in plan.sinks]
+    rewritten = PhysicalPlan(sinks)
+    for op in plan.topo():
+        new_op = mapping.get(id(op))
+        if new_op is None:
+            continue
+        orig = origin.get(id(op))
+        if orig is not None:
+            new_origin[id(new_op)] = orig
+    # the injected Load computes what `old` computed
+    if id(old) in origin:
+        new_origin[id(new)] = origin[id(old)]
+    return rewritten, new_origin
+
+
+def rewrite_plan(plan: PhysicalPlan, repo: Repository,
+                 use_algorithm1: bool = False,
+                 max_rewrites: int = 64) -> RewriteResult:
+    origin: Dict[int, Operator] = {id(op): op for op in plan.topo()}
+    used: List[RepositoryEntry] = []
+
+    for _ in range(max_rewrites):
+        hit: Optional[Tuple[RepositoryEntry, Operator]] = None
+        if use_algorithm1:
+            # faithful sequential scan with Algorithm 1 per entry
+            for entry in repo.ordered():
+                anchor = pairwise_plan_traversal(plan, entry.plan)
+                if anchor is not None and anchor.kind not in ("LOAD", "STORE"):
+                    hit = (entry, anchor)
+                    break
+        else:
+            index = FingerprintIndex(plan)
+            for entry in repo.ordered():
+                anchor = index.probe(entry.plan)
+                if anchor is not None:
+                    hit = (entry, anchor)
+                    break
+        if hit is None:
+            break
+        entry, anchor = hit
+        new_load = load(entry.artifact)
+        plan, origin = _replace_tracking(plan, anchor, new_load, origin)
+        used.append(entry)
+        repo.touch(entry)
+    return RewriteResult(plan, used, origin)
+
+
+def is_trivial(plan: PhysicalPlan) -> bool:
+    """True when every sink is STORE(LOAD(...)) — a fully-reused job."""
+    for s in plan.sinks:
+        if s.kind != "STORE" or s.inputs[0].kind != "LOAD":
+            return False
+    return True

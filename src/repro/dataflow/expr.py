@@ -1,0 +1,159 @@
+"""Row expressions for Filter predicates and ForEach generators.
+
+Expressions are tiny trees with (a) a JAX evaluator over a Table and (b) a
+canonical ``key()`` used for operator-equivalence tests and plan
+fingerprints (paper §3: two operators are equivalent iff they perform the
+same function over equivalent inputs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from .table import Table, encode_strings
+
+
+class Expr:
+    def key(self) -> Tuple:
+        raise NotImplementedError
+
+    def eval(self, t: Table) -> jnp.ndarray:
+        raise NotImplementedError
+
+    # sugar
+    def _bin(self, op, other):
+        other = other if isinstance(other, Expr) else Const(other)
+        return BinOp(op, self, other)
+
+    def __add__(self, o):
+        return self._bin("add", o)
+
+    def __sub__(self, o):
+        return self._bin("sub", o)
+
+    def __mul__(self, o):
+        return self._bin("mul", o)
+
+    def __truediv__(self, o):
+        return self._bin("div", o)
+
+    def __mod__(self, o):
+        return self._bin("mod", o)
+
+    def __eq__(self, o):  # type: ignore[override]
+        return self._bin("eq", o)
+
+    def __ne__(self, o):  # type: ignore[override]
+        return self._bin("ne", o)
+
+    def __lt__(self, o):
+        return self._bin("lt", o)
+
+    def __le__(self, o):
+        return self._bin("le", o)
+
+    def __gt__(self, o):
+        return self._bin("gt", o)
+
+    def __ge__(self, o):
+        return self._bin("ge", o)
+
+    def __and__(self, o):
+        return self._bin("and", o)
+
+    def __or__(self, o):
+        return self._bin("or", o)
+
+    def __hash__(self):
+        return hash(self.key())
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Col(Expr):
+    name: str
+
+    def key(self):
+        return ("col", self.name)
+
+    def eval(self, t):
+        return t.col(self.name)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Const(Expr):
+    value: object  # int | float | str
+
+    def key(self):
+        return ("const", repr(self.value))
+
+    def eval(self, t):
+        if isinstance(self.value, str):
+            return jnp.asarray(encode_strings([self.value])[0])
+        return jnp.asarray(self.value)
+
+
+_OPS = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "div": lambda a, b: a / jnp.where(b == 0, jnp.ones_like(b), b),
+    "mod": lambda a, b: a % jnp.where(b == 0, jnp.ones_like(b), b),
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+    "lt": lambda a, b: a < b,
+    "le": lambda a, b: a <= b,
+    "gt": lambda a, b: a > b,
+    "ge": lambda a, b: a >= b,
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+}
+
+_COMMUTATIVE = {"add", "mul", "eq", "ne", "and", "or"}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BinOp(Expr):
+    op: str
+    lhs: Expr
+    rhs: Expr
+
+    def key(self):
+        lk, rk = self.lhs.key(), self.rhs.key()
+        if self.op in _COMMUTATIVE and rk < lk:  # canonical arg order
+            lk, rk = rk, lk
+        return ("bin", self.op, lk, rk)
+
+    def eval(self, t):
+        a, b = self.lhs.eval(t), self.rhs.eval(t)
+        if a.ndim == 2 or (hasattr(b, "ndim") and b.ndim >= 1 and b.shape[-1:] == a.shape[-1:] and a.ndim == 2):
+            # fixed-width string comparison: reduce across width
+            r = _OPS[self.op](a, b)
+            if self.op in ("eq",):
+                return r.all(axis=-1)
+            if self.op in ("ne",):
+                return r.any(axis=-1)
+            return r
+        return _OPS[self.op](a, b)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Cast(Expr):
+    inner: Expr
+    dtype: str
+
+    def key(self):
+        return ("cast", self.dtype, self.inner.key())
+
+    def eval(self, t):
+        return self.inner.eval(t).astype(self.dtype)
+
+
+# Aggregation spec used by GROUPBY / COGROUP: (fn, column) pairs.
+AGG_FNS = ("sum", "count", "min", "max", "mean")
+
+
+def agg_key(aggs) -> Tuple:
+    """aggs: dict outname -> (fn, colname)."""
+    return tuple(sorted((o, fn, c) for o, (fn, c) in aggs.items()))

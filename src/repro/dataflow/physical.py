@@ -1,0 +1,308 @@
+"""Execution of physical plans over Tables, in pure JAX.
+
+All operators are static-shape: capacities are compile-time, deletion is
+masking.  The blocking operators (JOIN / GROUPBY / COGROUP / DISTINCT) are
+implemented sort-based — the TPU-native replacement for Hadoop's
+sort-shuffle and for GPU shared-memory hash tables (see DESIGN.md §7).
+
+Hash-collision handling: rows are ordered by a (h1, h2) pair of
+independent uint32 hashes, but *all* equality decisions (segment
+boundaries, join-match verification) compare the actual key columns, so
+grouping/distinct are exact and joins are exact up to a bounded probe
+window whose overflows are counted in job stats.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.plan import Operator, PhysicalPlan
+from .table import Table, cols_equal, hash_columns
+
+_U32_MAX = jnp.uint32(0xFFFFFFFF)
+
+# Pallas kernel integration for the relational hot spots (join probe,
+# segment aggregation).  interpret=True executes the kernel bodies in
+# Python — correct everywhere, fast only on real TPUs — so the switch is
+# explicit rather than automatic.
+_USE_PALLAS = False
+
+
+def set_use_pallas(v: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = v
+
+
+def use_pallas() -> bool:
+    return _USE_PALLAS or jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Sorting & segments shared by GROUPBY / DISTINCT / COGROUP
+
+
+def _sort_by_keys(t: Table, keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (order, new_seg): stable order by (h1, h2) with invalid rows
+    last, and exact segment-start mask in sorted order."""
+    h1 = jnp.where(t.valid, hash_columns(t, keys, seed=0), _U32_MAX)
+    h2 = jnp.where(t.valid, hash_columns(t, keys, seed=101), _U32_MAX)
+    order = jnp.lexsort((h2, h1))
+    sv = jnp.take(t.valid, order)
+    prev = jnp.roll(order, 1)
+    same_as_prev = cols_equal(t, order, t, prev, keys)
+    same_as_prev = same_as_prev & jnp.take(t.valid, prev)
+    same_as_prev = same_as_prev.at[0].set(False)
+    new_seg = sv & ~same_as_prev
+    return order, new_seg
+
+
+def _segment_aggregate(t: Table, keys, aggs, order, new_seg) -> Table:
+    cap = t.capacity
+    sv = jnp.take(t.valid, order)
+    seg_id = jnp.cumsum(new_seg.astype(jnp.int32)) - 1
+    seg_id = jnp.where(sv, seg_id, cap - 1)  # park invalid in last bucket
+    n_seg = jnp.sum(new_seg.astype(jnp.int32))
+    out_valid = jnp.arange(cap) < n_seg
+
+    # representative row per segment (for key columns)
+    rep = jnp.zeros(cap, dtype=jnp.int32)
+    rep = rep.at[jnp.where(new_seg, seg_id, cap - 1)].set(
+        order.astype(jnp.int32), mode="drop")
+
+    cols: Dict[str, jnp.ndarray] = {}
+    for k in keys:
+        kc = jnp.take(t.col(k), rep, axis=0)
+        cols[k] = jnp.where(
+            out_valid.reshape((-1,) + (1,) * (kc.ndim - 1)), kc,
+            jnp.zeros_like(kc))
+
+    def _segsum(v):
+        if use_pallas() and cap % min(256, cap) == 0:
+            from ..kernels.segment_reduce.ops import segment_sum
+            return segment_sum(v[:, None], seg_id, num_segments=cap,
+                               impl="pallas",
+                               interpret=jax.default_backend() != "tpu"
+                               )[:, 0]
+        return jax.ops.segment_sum(v, seg_id, num_segments=cap)
+
+    ones = sv.astype(jnp.float32)
+    counts = _segsum(ones)
+    for out_name, (fn, cname) in aggs.items():
+        if fn == "count":
+            cols[out_name] = counts.astype(jnp.float32)
+            continue
+        v = jnp.take(t.col(cname), order, axis=0).astype(jnp.float32)
+        v = jnp.where(sv, v, 0.0)
+        if fn in ("sum", "mean"):
+            s = _segsum(v)
+            cols[out_name] = s if fn == "sum" else s / jnp.maximum(counts, 1.0)
+        elif fn == "min":
+            v = jnp.where(sv, v, jnp.inf)
+            cols[out_name] = jax.ops.segment_min(v, seg_id, num_segments=cap)
+        elif fn == "max":
+            v = jnp.where(sv, v, -jnp.inf)
+            cols[out_name] = jax.ops.segment_max(v, seg_id, num_segments=cap)
+        else:
+            raise ValueError(f"unknown aggregate {fn}")
+        cols[out_name] = jnp.where(out_valid, cols[out_name], 0.0)
+    return Table(cols, out_valid)
+
+
+# ---------------------------------------------------------------------------
+# Operator implementations
+
+
+def op_filter(t: Table, pred) -> Table:
+    p = pred.eval(t)
+    return t.with_valid(t.valid & p.astype(bool))
+
+
+def op_project(t: Table, cols) -> Table:
+    return t.select(cols)
+
+
+def op_foreach(t: Table, gens) -> Table:
+    out = {}
+    for name, e in gens.items():
+        v = e.eval(t)
+        if v.ndim == 0:
+            v = jnp.broadcast_to(v, (t.capacity,))
+        out[name] = v
+    return Table(out, t.valid)
+
+
+def op_groupby(t: Table, keys, aggs) -> Table:
+    order, new_seg = _sort_by_keys(t, keys)
+    return _segment_aggregate(t, keys, aggs, order, new_seg)
+
+
+def op_distinct(t: Table) -> Table:
+    keys = t.names
+    order, new_seg = _sort_by_keys(t, keys)
+    return t.gather(order, new_seg)
+
+
+def op_union(a: Table, b: Table) -> Table:
+    names = a.names
+    assert set(names) == set(b.columns), "UNION schema mismatch"
+    cols = {n: jnp.concatenate([a.col(n), b.col(n)], axis=0) for n in names}
+    return Table(cols, jnp.concatenate([a.valid, b.valid]))
+
+
+def op_join(left: Table, right: Table, lkeys, rkeys,
+            expansion: int = 1) -> Tuple[Table, jnp.ndarray]:
+    """Inner equi-join, sort+probe based.  Output capacity =
+    left.capacity * expansion.  Returns (table, overflow_count)."""
+    probe_w = expansion + 4  # slack for h1 ties
+    cap_r = right.capacity
+
+    h_r = jnp.where(right.valid, hash_columns(right, rkeys, seed=0), _U32_MAX)
+    r_order = jnp.argsort(h_r, stable=True)
+    h_r_sorted = jnp.take(h_r, r_order)
+
+    h_l = hash_columns(left, lkeys, seed=0)
+    if use_pallas() and h_l.shape[0] % min(256, h_l.shape[0]) == 0:
+        from ..kernels.hash_join.ops import probe
+        pos = probe(h_l, h_r_sorted, impl="pallas", tile_n=256,
+                    interpret=jax.default_backend() != "tpu")
+    else:
+        pos = jnp.searchsorted(h_r_sorted, h_l, side="left")
+    cand = jnp.clip(pos[:, None] + jnp.arange(probe_w)[None, :], 0, cap_r - 1)
+    cand_rows = jnp.take(r_order, cand)  # (Cl, W) right row ids
+    hash_ok = jnp.take(h_r_sorted, cand) == h_l[:, None]
+
+    # exact key verification
+    eq = jnp.ones(cand_rows.shape, dtype=bool)
+    for lk, rk in zip(lkeys, rkeys):
+        lc = left.col(lk)
+        rc = jnp.take(right.col(rk), cand_rows, axis=0)
+        e = lc[:, None] == rc if lc.ndim == 1 else \
+            (lc[:, None, :] == rc).all(axis=-1)
+        eq = eq & e
+    ok = (hash_ok & eq & jnp.take(right.valid, cand_rows)
+          & left.valid[:, None])
+
+    rank = jnp.cumsum(ok.astype(jnp.int32), axis=1) - 1
+    # overflow: window exhausted while hashes were still equal
+    tail = jnp.clip(pos + probe_w, 0, cap_r - 1)
+    overflow = jnp.sum(((jnp.take(h_r_sorted, tail) == h_l)
+                        & left.valid).astype(jnp.int32))
+
+    out_cols: Dict[str, jnp.ndarray] = {}
+    matched_list: List[jnp.ndarray] = []
+    ridx_list: List[jnp.ndarray] = []
+    for j in range(expansion):
+        sel = ok & (rank == j)
+        matched_list.append(sel.any(axis=1))
+        ridx_list.append(jnp.take(cand_rows[..., None], jnp.argmax(
+            sel, axis=1)[:, None], axis=1)[:, 0, 0])
+    matched = jnp.stack(matched_list, 1).reshape(-1)      # (Cl*exp,)
+    ridx = jnp.stack(ridx_list, 1).reshape(-1)
+
+    for n in left.names:
+        c = jnp.repeat(left.col(n), expansion, axis=0)
+        out_cols[n] = c
+    for n in right.names:
+        name = n if n not in out_cols else n + "_r"
+        out_cols[name] = jnp.take(right.col(n), ridx, axis=0)
+    return Table(out_cols, matched), overflow
+
+
+def op_cogroup(a: Table, b: Table, keys_l, keys_r, aggs_l, aggs_r) -> Table:
+    """Group both inputs by key; per-key aggregates from each side."""
+    # unify key names under the left names, tag sides, reuse groupby path
+    a_cols = {f"k{i}": a.col(k) for i, k in enumerate(keys_l)}
+    b_cols = {f"k{i}": b.col(k) for i, k in enumerate(keys_r)}
+    # carry aggregated columns
+    for out, (fn, c) in aggs_l.items():
+        a_cols[f"va_{out}"] = (a.col(c).astype(jnp.float32)
+                               if fn != "count" else jnp.ones(a.capacity))
+        b_cols[f"va_{out}"] = jnp.zeros(b.capacity, jnp.float32)
+    for out, (fn, c) in aggs_r.items():
+        b_cols[f"vb_{out}"] = (b.col(c).astype(jnp.float32)
+                               if fn != "count" else jnp.ones(b.capacity))
+        a_cols[f"vb_{out}"] = jnp.zeros(a.capacity, jnp.float32)
+    a_cols["side"] = jnp.zeros(a.capacity, jnp.int32)
+    b_cols["side"] = jnp.ones(b.capacity, jnp.int32)
+    both = op_union(Table(a_cols, a.valid), Table(b_cols, b.valid))
+
+    keys = [f"k{i}" for i in range(len(keys_l))]
+    side = both.col("side")
+    aggs = {}
+    for out, (fn, _c) in aggs_l.items():
+        fn2 = "sum" if fn == "count" else fn
+        both.columns[f"va_{out}"] = jnp.where(
+            side == 0, both.col(f"va_{out}"),
+            0.0 if fn2 in ("sum",) else jnp.nan)
+        aggs[f"l_{out}"] = (fn2, f"va_{out}")
+    for out, (fn, _c) in aggs_r.items():
+        fn2 = "sum" if fn == "count" else fn
+        both.columns[f"vb_{out}"] = jnp.where(
+            side == 1, both.col(f"vb_{out}"),
+            0.0 if fn2 in ("sum",) else jnp.nan)
+        aggs[f"r_{out}"] = (fn2, f"vb_{out}")
+    grouped = op_groupby(both, keys, aggs)
+    # restore original key names
+    renamed = {}
+    for i, k in enumerate(keys_l):
+        renamed[k] = grouped.col(f"k{i}")
+    for n in grouped.names:
+        if not n.startswith("k"):
+            renamed[n] = grouped.col(n)
+    return Table(renamed, grouped.valid)
+
+
+def op_store(t: Table) -> Table:
+    return t.compact()
+
+
+# ---------------------------------------------------------------------------
+# Plan evaluation
+
+
+def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table]):
+    """Evaluate a physical plan.  Returns (outputs, stats):
+    outputs: store-name -> compacted Table;
+    stats: op uid -> dict of traced scalars (rows_out, join_overflow)."""
+    values: Dict[int, Table] = {}
+    outputs: Dict[str, Table] = {}
+    stats: Dict[int, Dict[str, jnp.ndarray]] = {}
+
+    for op in plan.topo():
+        p = op.params
+        ins = [values[id(i)] for i in op.inputs]
+        extra: Dict[str, jnp.ndarray] = {}
+        if op.kind == "LOAD":
+            v = datasets[p["dataset"]]
+        elif op.kind == "FILTER":
+            v = op_filter(ins[0], p["pred"])
+        elif op.kind == "PROJECT":
+            v = op_project(ins[0], p["cols"])
+        elif op.kind == "FOREACH":
+            v = op_foreach(ins[0], p["gens"])
+        elif op.kind == "JOIN":
+            v, ovf = op_join(ins[0], ins[1], p["left_keys"], p["right_keys"],
+                             p.get("expansion", 1))
+            extra["join_overflow"] = ovf
+        elif op.kind == "GROUPBY":
+            v = op_groupby(ins[0], p["keys"], p["aggs"])
+        elif op.kind == "COGROUP":
+            v = op_cogroup(ins[0], ins[1], p["keys_left"], p["keys_right"],
+                           p["aggs_left"], p["aggs_right"])
+        elif op.kind == "DISTINCT":
+            v = op_distinct(ins[0])
+        elif op.kind == "UNION":
+            v = op_union(ins[0], ins[1])
+        elif op.kind == "SPLIT":
+            v = ins[0]
+        elif op.kind == "STORE":
+            v = op_store(ins[0])
+            outputs[p["name"]] = v
+        else:
+            raise ValueError(op.kind)
+        values[id(op)] = v
+        extra["rows_out"] = v.num_valid()
+        stats[op.uid] = extra
+    return outputs, stats

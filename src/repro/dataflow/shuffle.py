@@ -1,0 +1,88 @@
+"""Distributed shuffle for the relational engine: the MapReduce
+map->shuffle->reduce stage as a shard_map program.
+
+Hadoop's sort-shuffle writes spill files; the TPU-native exchange is:
+
+  map side   : hash rows -> destination shard (radix_partition kernel's
+               binning), bucket rows per destination with a bounded
+               per-destination capacity (skew overflows are counted, as
+               in the join's probe-window contract);
+  shuffle    : one jax.lax.all_to_all along the "data" axis per column
+               (the T_sort term of Eq. 2 becomes ICI traffic);
+  reduce side: rows for the same key are now co-located — the ordinary
+               sort-based segment aggregation runs per shard.
+
+This is the engine's scale-out path: the dry-run lowers a GROUPBY job on
+the production 16x16 mesh, and the parity test checks an 8-device run
+against the single-device operator.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .physical import op_groupby
+from .table import Table, hash_columns
+
+
+def distributed_groupby(table: Table, keys, aggs, mesh,
+                        axis: str = "data", skew_factor: float = 4.0
+                        ) -> Tuple[Table, jnp.ndarray]:
+    """GROUPBY over a row-sharded Table.  Returns (result table sharded
+    over ``axis`` — each shard holds the groups of its hash range —
+    and the global overflow count)."""
+    n_shards = mesh.shape[axis]
+    names = table.names
+    cap_loc = table.capacity // n_shards
+    bucket = max(8, int(cap_loc * skew_factor / n_shards))
+
+    def body(*cols_and_valid):
+        cols = dict(zip(names, cols_and_valid[:-1]))
+        valid = cols_and_valid[-1]
+        local = Table(cols, valid)
+
+        dest = (hash_columns(local, keys, seed=7)
+                % jnp.uint32(n_shards)).astype(jnp.int32)
+        dest = jnp.where(valid, dest, n_shards)       # park invalid
+        order = jnp.argsort(dest)
+        sdest = jnp.take(dest, order)
+        seg_start = jnp.searchsorted(sdest, sdest, side="left")
+        rank = jnp.arange(sdest.shape[0]) - seg_start
+        keep = (sdest < n_shards) & (rank < bucket)
+        slot = jnp.where(keep, sdest * bucket + rank, n_shards * bucket)
+        overflow = jnp.sum(((sdest < n_shards) & ~keep).astype(jnp.int32))
+        overflow = jax.lax.psum(overflow, axis)
+
+        out_cols = {}
+        for n in names:
+            c = jnp.take(local.col(n), order, axis=0)
+            buf = jnp.zeros((n_shards * bucket,) + c.shape[1:], c.dtype)
+            buf = buf.at[slot].set(c, mode="drop")
+            buf = buf.reshape((n_shards, bucket) + c.shape[1:])
+            out_cols[n] = jax.lax.all_to_all(
+                buf, axis, split_axis=0, concat_axis=0, tiled=False
+            ).reshape((n_shards * bucket,) + c.shape[1:])
+        vbuf = jnp.zeros((n_shards * bucket,), bool).at[slot].set(
+            jnp.take(valid, order), mode="drop")
+        vrecv = jax.lax.all_to_all(
+            vbuf.reshape(n_shards, bucket), axis,
+            split_axis=0, concat_axis=0, tiled=False).reshape(-1)
+
+        grouped = op_groupby(Table(out_cols, vrecv), keys, aggs)
+        flat = tuple(grouped.col(n) for n in grouped.names) \
+            + (grouped.valid, overflow)
+        return flat
+
+    in_specs = tuple(P(axis) for _ in names) + (P(axis),)
+    # probe output structure once to build out_specs
+    out_names = sorted(set(list(keys) + list(aggs)))
+    out_specs = tuple(P(axis) for _ in out_names) + (P(axis), P())
+
+    flat = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(
+        *(table.col(n) for n in names), table.valid)
+    cols = dict(zip(out_names, flat[:-2]))
+    return Table(cols, flat[-2]), flat[-1]

@@ -1,0 +1,207 @@
+"""Table: the tuple-stream representation of the dataflow engine.
+
+Hadoop streams tuples between operators; XLA wants static shapes.  A Table
+is a struct-of-arrays with a *compile-time capacity* and a validity mask:
+
+  * every column is a jnp array of shape ``(capacity,)`` (numeric) or
+    ``(capacity, width)`` (fixed-width byte strings, dtype uint8);
+  * ``valid`` is a boolean ``(capacity,)`` mask — Filter marks rows
+    invalid instead of compacting, Store compacts.
+
+Tables are pytrees so they flow through jit/shard_map unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Schema
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnType:
+    """dtype + optional byte-width (width > 0 means fixed-width string)."""
+
+    dtype: str  # numpy dtype name, e.g. "int32", "float32", "uint8"
+    width: int = 0  # 0 => scalar column; >0 => (capacity, width) bytes
+
+    @property
+    def is_string(self) -> bool:
+        return self.width > 0
+
+    def key(self) -> Tuple:
+        return ("col", self.dtype, self.width)
+
+
+INT = ColumnType("int32")
+FLOAT = ColumnType("float32")
+
+
+def STR(width: int = 20) -> ColumnType:
+    return ColumnType("uint8", width)
+
+
+Schema = Dict[str, ColumnType]
+
+
+def schema_key(schema: Schema) -> Tuple:
+    return tuple(sorted((n, t.key()) for n, t in schema.items()))
+
+
+# ---------------------------------------------------------------------------
+# Table pytree
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Table:
+    columns: Dict[str, jnp.ndarray]
+    valid: jnp.ndarray  # bool (capacity,)
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        children = tuple(self.columns[n] for n in names) + (self.valid,)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(columns=dict(zip(names, children[:-1])), valid=children[-1])
+
+    # -- accessors ----------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[0])
+
+    @property
+    def names(self):
+        return sorted(self.columns)
+
+    def col(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    def schema(self) -> Schema:
+        out: Schema = {}
+        for n, c in self.columns.items():
+            if c.ndim == 2:
+                out[n] = ColumnType("uint8", int(c.shape[1]))
+            else:
+                out[n] = ColumnType(str(c.dtype))
+        return out
+
+    def num_valid(self) -> jnp.ndarray:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def nbytes(self) -> int:
+        """Logical bytes at full capacity (the T_load/T_store proxy)."""
+        total = self.valid.size  # 1 byte/bool
+        for c in self.columns.values():
+            total += c.size * c.dtype.itemsize
+        return int(total)
+
+    # -- construction helpers ----------------------------------------------
+    @staticmethod
+    def from_numpy(cols: Dict[str, np.ndarray], nvalid: int | None = None,
+                   capacity: int | None = None) -> "Table":
+        n = len(next(iter(cols.values())))
+        nvalid = n if nvalid is None else nvalid
+        capacity = n if capacity is None else capacity
+        out = {}
+        for name, a in cols.items():
+            a = np.asarray(a)
+            if capacity != n:
+                pad = [(0, capacity - n)] + [(0, 0)] * (a.ndim - 1)
+                a = np.pad(a, pad)
+            out[name] = jnp.asarray(a)
+        valid = jnp.arange(capacity) < nvalid
+        return Table(out, valid)
+
+    def to_numpy(self, only_valid: bool = True) -> Dict[str, np.ndarray]:
+        mask = np.asarray(self.valid)
+        out = {}
+        for n, c in self.columns.items():
+            a = np.asarray(c)
+            out[n] = a[mask] if only_valid else a
+        return out
+
+    # -- row ops used by physical operators ----------------------------------
+    def gather(self, idx: jnp.ndarray, valid: jnp.ndarray) -> "Table":
+        cols = {n: jnp.take(c, idx, axis=0) for n, c in self.columns.items()}
+        return Table(cols, valid)
+
+    def with_valid(self, valid: jnp.ndarray) -> "Table":
+        return Table(dict(self.columns), valid)
+
+    def select(self, names) -> "Table":
+        return Table({n: self.columns[n] for n in names}, self.valid)
+
+    def compact(self) -> "Table":
+        """Reorder rows so valid rows form a prefix (stable)."""
+        order = jnp.argsort(~self.valid, stable=True)
+        return self.gather(order, jnp.take(self.valid, order))
+
+
+def encode_strings(values, width: int = 20) -> np.ndarray:
+    """Python strings -> (n, width) uint8, truncated/zero-padded."""
+    out = np.zeros((len(values), width), dtype=np.uint8)
+    for i, s in enumerate(values):
+        b = s.encode("utf-8")[:width]
+        out[i, : len(b)] = np.frombuffer(b, dtype=np.uint8)
+    return out
+
+
+def decode_strings(arr: np.ndarray):
+    return ["".join(chr(c) for c in row if c) for row in np.asarray(arr)]
+
+
+# ---------------------------------------------------------------------------
+# Hashing (uint32; two independent lanes available for sort tie-breaking)
+
+_FNV_OFFSET = np.uint32(2166136261)
+_FNV_PRIME = np.uint32(16777619)
+
+
+def _mix32(x: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """splitmix-style avalanche on uint32."""
+    x = x.astype(jnp.uint32) ^ jnp.uint32(seed)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def hash_column(col: jnp.ndarray, seed: int = 0) -> jnp.ndarray:
+    """uint32 hash of one column (any dtype, 1-D or 2-D bytes)."""
+    if col.ndim == 2:  # fixed-width string: FNV-1a fold, then mix
+        h = jnp.full(col.shape[:1], _FNV_OFFSET, dtype=jnp.uint32)
+        for j in range(col.shape[1]):
+            h = (h ^ col[:, j].astype(jnp.uint32)) * _FNV_PRIME
+        return _mix32(h, seed)
+    if jnp.issubdtype(col.dtype, jnp.floating):
+        col = jax.lax.bitcast_convert_type(col.astype(jnp.float32), jnp.uint32)
+    return _mix32(col.astype(jnp.uint32), seed)
+
+
+def hash_columns(table: Table, names, seed: int = 0) -> jnp.ndarray:
+    """Combined uint32 hash over several key columns."""
+    h = jnp.zeros(table.capacity, dtype=jnp.uint32)
+    for i, n in enumerate(sorted(names)):
+        h = _mix32(h * jnp.uint32(31) + hash_column(table.col(n), seed + i), seed)
+    return h
+
+
+def cols_equal(table_a: Table, idx_a, table_b: Table, idx_b, names) -> jnp.ndarray:
+    """Exact row equality on key columns between gathered row indices."""
+    eq = jnp.ones(jnp.shape(idx_a), dtype=bool)
+    for n in names:
+        ca = jnp.take(table_a.col(n), idx_a, axis=0)
+        cb = jnp.take(table_b.col(n), idx_b, axis=0)
+        e = ca == cb
+        if e.ndim == 2:
+            e = e.all(axis=-1)
+        eq = eq & e
+    return eq

@@ -1,0 +1,75 @@
+"""Fused filter + compaction as a Pallas TPU kernel.
+
+The Store-time compaction hot spot (filter marks rows invalid; storing
+needs the survivors contiguous).  GPUs do this with warp ballots and
+atomics; the TPU-native design compacts each tile with a permutation
+matmul on the MXU:
+
+    pos_i  = cumsum(mask)[i] - 1                    (slot for live row i)
+    P[i,j] = 1 if pos_i == j and mask_i             (TN x TN one-hot)
+    tile_out = P^T @ rows                           (live rows to front)
+
+plus a per-tile count; the ops wrapper stitches tiles with a cheap
+jnp gather using the exclusive scan of counts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fp_kernel(mask_ref, val_ref, count_ref, out_ref, *, tile_n):
+    mask = mask_ref[0].astype(jnp.int32)           # (TN,)
+    vals = val_ref[0].astype(jnp.float32)          # (TN, D)
+    pos = jnp.cumsum(mask) - 1                     # slot per live row
+    onehot = ((pos[:, None] ==
+               jax.lax.broadcasted_iota(jnp.int32, (tile_n, tile_n), 1))
+              & (mask[:, None] > 0)).astype(jnp.float32)
+    out_ref[0] = jax.lax.dot_general(
+        onehot, vals, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    count_ref[0, 0] = mask.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def filter_compact(values, mask, *, tile_n: int = 256,
+                   interpret: bool = False):
+    """values: (N, D) f32; mask: (N,) bool.  Returns (out, total):
+    out (N, D) with survivors compacted to the front, total survivors."""
+    n, d = values.shape
+    tile_n = min(tile_n, n)
+    assert n % tile_n == 0
+    n_tiles = n // tile_n
+
+    counts, tiles = pl.pallas_call(
+        functools.partial(_fp_kernel, tile_n=tile_n),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, tile_n), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile_n, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile_n, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, tile_n, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(mask.reshape(n_tiles, tile_n), values.reshape(n_tiles, tile_n, d))
+
+    counts = counts.reshape(n_tiles)
+    offsets = jnp.cumsum(counts) - counts          # exclusive scan
+    total = counts.sum()
+
+    # global stitch: row j of tile t lands at offsets[t] + j if j < count[t]
+    dst = offsets[:, None] + jnp.arange(tile_n)[None, :]
+    live = jnp.arange(tile_n)[None, :] < counts[:, None]
+    dst = jnp.where(live, dst, n)                  # park dead rows OOB
+    out = jnp.zeros((n, d), jnp.float32)
+    out = out.at[dst.reshape(-1)].set(tiles.reshape(-1, d), mode="drop")
+    return out, total

@@ -1,0 +1,11 @@
+"""Jit'd wrapper with impl dispatch."""
+from .filter_project import filter_compact
+from .ref import filter_compact_ref
+
+
+def compact(values, mask, *, impl: str = "ref", tile_n: int = 256,
+            interpret: bool = True):
+    if impl == "pallas":
+        return filter_compact(values, mask, tile_n=tile_n,
+                              interpret=interpret)
+    return filter_compact_ref(values, mask)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for filter+compact."""
+import jax.numpy as jnp
+
+
+def filter_compact_ref(values, mask):
+    n, d = values.shape
+    order = jnp.argsort(~mask, stable=True)
+    out = jnp.take(values, order, axis=0).astype(jnp.float32)
+    total = mask.sum()
+    live = jnp.arange(n) < total
+    return jnp.where(live[:, None], out, 0.0), total

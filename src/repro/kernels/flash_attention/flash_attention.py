@@ -1,0 +1,124 @@
+"""Blockwise online-softmax attention (FlashAttention) as a Pallas TPU
+kernel.
+
+TPU adaptation notes (vs the CUDA original): tiles are sized for VMEM and
+the 128-lane MXU rather than SM shared memory — block shapes are multiples
+of 128 in the lane dimension; the online-softmax carry (m, l, acc) lives
+in VMEM scratch and the KV loop is the innermost *grid* dimension
+(sequential on TPU), not a warp-level loop.
+
+Layout: q (BH, Sq, D), k/v (BH, Skv, D) — the ops wrapper folds batch and
+heads.  Causal masking supports a query offset (decode: queries sit at the
+end of the KV timeline) and a valid KV length (masking cache padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(kv_len_ref, q_ref, k_ref, v_ref, o_ref,
+                 m_scr, l_scr, acc_scr, *, block_q, block_k,
+                 causal, q_offset, scale):
+    kv_j = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(kv_j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_i = pl.program_id(1)
+    q_start = q_i * block_q + q_offset
+    k_start = kv_j * block_k
+
+    run = True
+    if causal:
+        # skip blocks strictly above the diagonal
+        run = k_start <= q_start + block_q - 1
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0].astype(jnp.float32)            # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                # (bq, bk)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < kv_len_ref[0]
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                          # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+        l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kv_j == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_k", "q_offset", "interpret"))
+def flash_attention_bhsd(q, k, v, kv_len=None, *, causal=True,
+                         q_offset=None, block_q=128, block_k=128,
+                         interpret=False):
+    """q: (BH, Sq, D); k, v: (BH, Skv, D); kv_len: int32 () or (1,)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0
+    if q_offset is None:
+        q_offset = skv - sq
+    if kv_len is None:
+        kv_len = jnp.array([skv], jnp.int32)
+    else:
+        kv_len = jnp.asarray(kv_len, jnp.int32).reshape((1,))
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k,
+        causal=causal, q_offset=q_offset, scale=scale)
+
+    grid = (bh, sq // block_q, skv // block_k)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_q, d), lambda b, i, j, _: (b, i, 0)),
+                pl.BlockSpec((1, block_k, d), lambda b, i, j, _: (b, j, 0)),
+                pl.BlockSpec((1, block_k, d), lambda b, i, j, _: (b, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, d),
+                                   lambda b, i, j, _: (b, i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(kv_len, q, k, v)

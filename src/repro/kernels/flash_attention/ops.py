@@ -1,0 +1,39 @@
+"""Jit'd public wrapper: GQA-aware multihead attention on (B, H, S, D)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+from .ref import attention_ref
+
+
+def _fold(x):
+    b, h, s, d = x.shape
+    return x.reshape(b * h, s, d)
+
+
+def mha(q, k, v, kv_len=None, *, causal=True, q_offset=None,
+        impl="ref", block_q=128, block_k=128, interpret=True):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+
+    impl: "ref" (jnp oracle — default on CPU) or "pallas" (the TPU
+    kernel; interpret=True executes it in Python for validation).
+    A production deployment folds the GQA group into the q tile; here we
+    broadcast KV heads, which is bit-identical.
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf, kf, vf = _fold(q), _fold(k), _fold(v)
+    if impl == "pallas":
+        out = flash_attention_bhsd(qf, kf, vf, kv_len, causal=causal,
+                                   q_offset=q_offset, block_q=block_q,
+                                   block_k=block_k, interpret=interpret)
+    else:
+        out = attention_ref(qf, kf, vf, kv_len, causal=causal,
+                            q_offset=q_offset)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash attention."""
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, kv_len=None, *, causal=True, q_offset=None):
+    """q: (BH, Sq, D); k, v: (BH, Skv, D)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    if q_offset is None:
+        q_offset = skv - sq
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) / (d ** 0.5)
+    k_pos = jnp.arange(skv)[None, None, :]
+    q_pos = (jnp.arange(sq) + q_offset)[None, :, None]
+    mask = jnp.ones((1, sq, skv), bool)
+    if kv_len is not None:
+        mask = mask & (k_pos < jnp.asarray(kv_len).reshape(-1, 1, 1))
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

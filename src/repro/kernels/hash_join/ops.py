@@ -1,0 +1,11 @@
+"""Jit'd wrapper with impl dispatch."""
+from .hash_join import join_probe
+from .ref import join_probe_ref
+
+
+def probe(left_hashes, right_hashes_sorted, *, impl: str = "ref",
+          tile_n: int = 256, interpret: bool = True):
+    if impl == "pallas":
+        return join_probe(left_hashes, right_hashes_sorted,
+                          tile_n=tile_n, interpret=interpret)
+    return join_probe_ref(left_hashes, right_hashes_sorted)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the join probe."""
+import jax.numpy as jnp
+
+
+def join_probe_ref(left_hashes, right_hashes_sorted):
+    return jnp.searchsorted(right_hashes_sorted, left_hashes,
+                            side="left").astype(jnp.int32)

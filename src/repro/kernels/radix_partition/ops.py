@@ -1,0 +1,12 @@
+"""Jit'd wrapper with impl dispatch."""
+from .radix_partition import radix_partition
+from .ref import radix_partition_ref
+
+
+def partition(hashes, valid, *, n_parts: int, impl: str = "ref",
+              tile_n: int = 256, interpret: bool = True):
+    if impl == "pallas":
+        return radix_partition(hashes, valid, n_parts=n_parts,
+                               tile_n=tile_n, interpret=interpret)
+    return radix_partition_ref(hashes, valid, n_parts=n_parts,
+                               tile_n=tile_n)

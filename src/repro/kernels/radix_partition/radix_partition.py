@@ -1,0 +1,64 @@
+"""Radix partitioning (hash binning) as a Pallas TPU kernel.
+
+The shuffle-preparation hot spot: every row gets a partition id
+``h & (P-1)`` and the all-to-all needs per-tile histograms to compute send
+offsets.  GPU radix partitioning uses shared-memory atomics; the
+TPU-native histogram is a one-hot matmul on the MXU:
+
+    hist[tile] = sum_i onehot(pid_i, P)            (P,)
+
+computed as ``ones(1,TN) @ onehot`` so the reduction runs on the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _radix_kernel(hash_ref, valid_ref, pid_ref, hist_ref, *, tile_n,
+                  n_parts):
+    h = hash_ref[0]                                  # (TN,) uint32
+    valid = valid_ref[0].astype(jnp.bool_)
+    pid = (h & jnp.uint32(n_parts - 1)).astype(jnp.int32)
+    pid = jnp.where(valid, pid, n_parts)             # park invalid
+    pid_ref[0] = pid
+    onehot = (pid[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (tile_n, n_parts), 1))
+    hist_ref[0] = jnp.sum(onehot.astype(jnp.float32), axis=0,
+                          dtype=jnp.float32).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_parts", "tile_n",
+                                             "interpret"))
+def radix_partition(hashes, valid, *, n_parts: int, tile_n: int = 256,
+                    interpret: bool = False):
+    """hashes: (N,) uint32; valid: (N,) bool; n_parts power of two.
+    Returns (pid (N,) int32 with invalid rows = n_parts,
+             hist (n_tiles, n_parts) int32)."""
+    assert n_parts & (n_parts - 1) == 0
+    n = hashes.shape[0]
+    tile_n = min(tile_n, n)
+    assert n % tile_n == 0
+    n_tiles = n // tile_n
+
+    pid, hist = pl.pallas_call(
+        functools.partial(_radix_kernel, tile_n=tile_n, n_parts=n_parts),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, tile_n), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile_n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_parts), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, tile_n), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, n_parts), jnp.int32),
+        ],
+        interpret=interpret,
+    )(hashes.reshape(n_tiles, tile_n), valid.reshape(n_tiles, tile_n))
+    return pid.reshape(n), hist

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for radix partitioning."""
+import jax.numpy as jnp
+
+
+def radix_partition_ref(hashes, valid, *, n_parts: int, tile_n: int = 256):
+    n = hashes.shape[0]
+    tile_n = min(tile_n, n)
+    n_tiles = n // tile_n
+    pid = (hashes & jnp.uint32(n_parts - 1)).astype(jnp.int32)
+    pid = jnp.where(valid, pid, n_parts)
+    onehot = (pid[:, None] == jnp.arange(n_parts)[None, :]).astype(jnp.int32)
+    hist = onehot.reshape(n_tiles, tile_n, n_parts).sum(axis=1)
+    return pid, hist

@@ -1,0 +1,12 @@
+"""Jit'd wrapper with impl dispatch."""
+from .ref import segment_sum_ref
+from .segment_reduce import segment_sum_sorted
+
+
+def segment_sum(values, seg_ids, *, num_segments: int, impl: str = "ref",
+                tile_n: int = 256, interpret: bool = True):
+    if impl == "pallas":
+        return segment_sum_sorted(values, seg_ids,
+                                  num_segments=num_segments,
+                                  tile_n=tile_n, interpret=interpret)
+    return segment_sum_ref(values, seg_ids, num_segments=num_segments)

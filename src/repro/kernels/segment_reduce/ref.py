@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for sorted segment sum."""
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(values, seg_ids, *, num_segments: int):
+    ok = (seg_ids >= 0) & (seg_ids < num_segments)
+    v = jnp.where(ok[:, None], values.astype(jnp.float32), 0.0)
+    sid = jnp.where(ok, seg_ids, num_segments)
+    out = jax.ops.segment_sum(v, sid, num_segments=num_segments + 1)
+    return out[:num_segments]

@@ -1,0 +1,312 @@
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+cell lowers and compiles under the production sharding config, and emit
+the compiled-cost numbers the roofline analysis consumes.
+
+MUST set XLA_FLAGS before ANY other import (jax locks the device count on
+first init).  Do not copy these lines into conftest.py or pyproject —
+smoke tests and benches must see 1 device.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, get_config
+from ..models.api import SHAPES, build, shape_applicable
+from ..train.optimizer import AdamW
+from .mesh import make_production_mesh
+from .sharding import (batch_specs, cache_specs, opt_specs, param_specs,
+                       to_named)
+
+_DTYPE_BYTES = {
+    "f32": 4, "f16": 2, "bf16": 2, "f64": 8, "s32": 4, "u32": 4,
+    "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# --opt: enable the manually-distributed layer implementations
+# (shard_map MoE, sharded decode attention) -- EXPERIMENTS.md §Perf
+OPTIMIZED = False
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op in post-SPMD HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    shape_re = re.compile(r"=\s*(?:\()?\s*(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = shape_re.search(s)
+        if not m:
+            continue
+        op = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start)?\(", s):
+                op = k
+                break
+        if op is None or f"{op}-done" in s:
+            continue
+        dt, dims = m.group(1), m.group(2)
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        out[op] += nbytes
+        counts[op] += 1
+    return out, counts
+
+
+def _cost_dict(compiled):
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0]
+        return {k: float(v) for k, v in c.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _memory_dict(compiled):
+    try:
+        m = compiled.memory_analysis()
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")
+        return {k: int(getattr(m, k)) for k in keys if hasattr(m, k)}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _compile_step(cfg, shape, mesh):
+    """Lower + compile the step for (cfg, shape) on mesh."""
+    from ..models import dist
+    dist.set_mesh(mesh if OPTIMIZED else None)
+    dist.set_optimized(OPTIMIZED)
+    model = build(cfg)
+    seq, gbs, kind = SHAPES[shape]
+    params_shapes = model.init_shapes(jax.random.PRNGKey(0))
+    p_shard = to_named(param_specs(cfg, params_shapes, mesh), mesh)
+
+    with mesh:
+        if kind == "train":
+            # bf16 optimizer states for the >=200B archs (fits one pod)
+            state_dtype = ("bfloat16" if cfg.total_params() > 1.5e11
+                           else "float32")
+            opt = AdamW(state_dtype=state_dtype)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            o_shard = to_named(opt_specs(cfg, params_shapes, mesh), mesh)
+            batch = model.input_specs(shape)
+            b_shard = to_named(batch_specs(cfg, batch, mesh), mesh)
+
+            def train_step(params, opt_state, b):
+                (tot, (loss, aux)), grads = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, b)
+                params, opt_state, gnorm = opt.update(grads, opt_state,
+                                                      params)
+                return params, opt_state, loss, gnorm
+
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None, None),
+            ).lower(params_shapes, opt_shapes, batch)
+
+        elif kind == "prefill":
+            spec = model.input_specs(shape)
+            batch, cache = spec["batch"], spec["cache"]
+            b_shard = to_named(batch_specs(cfg, batch, mesh), mesh)
+            c_shard = to_named(cache_specs(cfg, cache, mesh), mesh)
+            lowered = jax.jit(
+                lambda params, b, c: model.prefill(params, b, c),
+                in_shardings=(p_shard, b_shard, c_shard),
+                out_shardings=(None, c_shard),
+            ).lower(params_shapes, batch, cache)
+
+        else:  # decode
+            spec = model.input_specs(shape)
+            batch, cache, index = (spec["batch"], spec["cache"],
+                                   spec["index"])
+            b_shard = to_named(batch_specs(cfg, batch, mesh), mesh)
+            c_shard = to_named(cache_specs(cfg, cache, mesh), mesh)
+            lowered = jax.jit(
+                lambda params, b, c, i: model.decode_step(params, b, c, i),
+                in_shardings=(p_shard, b_shard, c_shard, None),
+                out_shardings=(None, c_shard),
+            ).lower(params_shapes, batch, cache, index)
+
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware cost extrapolation.  XLA's HloCostAnalysis counts while-loop
+# bodies ONCE (verified: depth 1/2/4 compiles report identical flops), so
+# per-cell we also compile depth = 1 and 2 superblock-periods and
+# extrapolate the per-period delta to the full depth.
+
+
+def _depth_variant(cfg, k: int, seq: int = 4096):
+    """Depth-k-periods, UNROLLED (scan_layers=False) so every layer's ops
+    are visible to cost analysis.  The Mamba chunk loop also unrolls in
+    this mode (ssm.py); chunk size scales with the sequence so the
+    unrolled body count stays ~8 per layer."""
+    import dataclasses as _dc
+    from ..models.lm import block_period
+    kw = dict(scan_layers=False)
+    if cfg.ssm is not None:
+        kw["ssm"] = _dc.replace(cfg.ssm, chunk=max(256, seq // 8))
+    if cfg.family == "encdec":
+        return cfg.with_(n_layers=k, n_encoder_layers=k, **kw)
+    return cfg.with_(n_layers=k * block_period(cfg), **kw)
+
+
+def _n_periods(cfg) -> int:
+    from ..models.lm import block_period
+    if cfg.family == "encdec":
+        return cfg.n_layers
+    return cfg.n_layers // block_period(cfg)
+
+
+def _cell_cost(cfg, shape, mesh) -> dict:
+    _, compiled = _compile_step(cfg, shape, mesh)
+    cost = _cost_dict(compiled)
+    cb, cc = parse_collective_bytes(compiled.as_text())
+    return {"flops": cost.get("flops", 0.0),
+            "bytes": cost.get("bytes accessed", 0.0),
+            "transcendentals": cost.get("transcendentals", 0.0),
+            "collective_bytes": cb, "collective_counts": cc}
+
+
+def extrapolated_cost(cfg, shape, mesh) -> dict:
+    seq = SHAPES[shape][0]
+    c1 = _cell_cost(_depth_variant(cfg, 1, seq), shape, mesh)
+    c2 = _cell_cost(_depth_variant(cfg, 2, seq), shape, mesh)
+    n = _n_periods(cfg)
+
+    def ext(a, b):
+        return a + (n - 1) * (b - a)
+
+    out = {"flops": ext(c1["flops"], c2["flops"]),
+           "bytes": ext(c1["bytes"], c2["bytes"]),
+           "transcendentals": ext(c1["transcendentals"],
+                                  c2["transcendentals"])}
+    out["collective_bytes"] = {
+        k: int(ext(c1["collective_bytes"][k], c2["collective_bytes"][k]))
+        for k in c1["collective_bytes"]}
+    out["collective_counts"] = {
+        k: int(ext(c1["collective_counts"][k], c2["collective_counts"][k]))
+        for k in c1["collective_counts"]}
+    out["method"] = ("per-period differencing over depth-1/-2 compiles, "
+                     f"extrapolated to {n} periods")
+    return out
+
+
+def lower_cell(arch, shape, multi_pod=False, save_hlo=None,
+               extract_cost=True):
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    seq, gbs, kind = SHAPES[shape]
+    t0 = time.time()
+    lowered, compiled = _compile_step(cfg, shape, mesh)
+    t_compile = time.time() - t0
+
+    hlo = compiled.as_text()
+    coll_bytes, coll_counts = parse_collective_bytes(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    report = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "compile_s": round(t_compile, 1),
+        "cost_raw": _cost_dict(compiled),
+        "memory": _memory_dict(compiled),
+        "collective_bytes_raw": coll_bytes,
+        "collective_counts_raw": coll_counts,
+        "total_params": cfg.total_params(),
+        "active_params": cfg.active_params(),
+        "seq": seq, "global_batch": gbs, "kind": kind,
+    }
+    if extract_cost:
+        report["cost_extrapolated"] = extrapolated_cost(cfg, shape, mesh)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all (arch x shape) cells for the chosen mesh")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip the depth-variant cost extrapolation "
+                         "(multi-pod pass only proves compilation)")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable the beyond-baseline distributed layer "
+                         "implementations (EXPERIMENTS.md §Perf)")
+    args = ap.parse_args()
+    global OPTIMIZED
+    OPTIMIZED = args.opt
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        tag = f"{arch}_{shape}_{mesh_tag}" + ("_opt" if args.opt else "")
+        hlo_path = (os.path.join(args.out_dir, tag + ".hlo.txt")
+                    if args.save_hlo else None)
+        try:
+            rep = lower_cell(arch, shape, args.multi_pod, hlo_path,
+                             extract_cost=not args.no_cost)
+        except Exception as e:
+            rep = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                   "status": "FAILED", "error": str(e)[-2000:],
+                   "traceback": traceback.format_exc()[-4000:]}
+            failures += 1
+        with open(os.path.join(args.out_dir, tag + ".json"), "w") as f:
+            json.dump(rep, f, indent=1)
+        status = rep["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f"compile={rep['compile_s']}s "
+                     f"flops={rep['cost_raw'].get('flops', 0):.3g}")
+        print(f"[{status:>7s}] {tag} {extra}", flush=True)
+    print(f"done: {len(cells)} cells, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

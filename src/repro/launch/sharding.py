@@ -1,0 +1,169 @@
+"""Sharding-spec inference for parameters, optimizer states, batches and
+decode caches.
+
+Rule-based tensor parallelism over the "model" axis, data parallelism over
+("pod", "data"), and a ZeRO-1 extension that additionally shards optimizer
+states (and optionally the bf16 params' master copies) over the DP axes on
+the largest still-unsharded, divisible dimension.
+
+Every rule checks divisibility; anything that doesn't divide cleanly is
+replicated — the dry-run then proves the whole (arch x shape x mesh) cell
+lowers and compiles.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from .mesh import dp_axes
+
+# leaf-name classes: which dim (from the right) gets the "model" axis
+_SHARD_LAST = {"wq", "wk", "wv", "wg", "wu", "wuq", "wuk", "wuv", "up",
+               "in_proj", "dt_proj", "lm_head", "wi", "wf", "wz", "wo_gate"}
+_SHARD_FIRST = {"wo", "wd", "down", "out_proj", "x_proj"}
+_BIAS_LIKE = {"bq", "bk", "bv", "conv_b", "dt_bias", "D", "conv_w",
+              "A_log"}
+_REPLICATE = {"ln1", "ln2", "ln_f", "ln_enc", "ln_x", "q_norm", "k_norm",
+              "kv_norm", "gn", "router", "bi", "bf", "bz", "bo",
+              "step"}
+
+
+def _divisible(n: int, mesh: Mesh, axis) -> bool:
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return n % size == 0 and n >= size
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh) -> P:
+    name = path[-1]
+    nd = len(shape)
+    # MoE expert weights are (..., E, d, f): 4-D when layer-stacked, 3-D
+    # never (dense MLPs are (L', d, f)) — require the expert dim present
+    in_expert = any(p in ("ffn",) for p in path) and nd >= 4 and \
+        name in ("wg", "wu", "wd")
+
+    def spec_with(dim_from_right: int):
+        dim = nd - dim_from_right
+        if dim < 0 or not _divisible(shape[dim], mesh, "model"):
+            return P()
+        out = [None] * nd
+        out[dim] = "model"
+        return P(*out)
+
+    if name == "embed":
+        # vocab-sharded embedding table
+        if _divisible(shape[0], mesh, "model"):
+            return P("model", *([None] * (nd - 1)))
+        return P()
+    if name in _REPLICATE or name in _BIAS_LIKE and nd <= 2:
+        return P()
+    if in_expert:
+        # experts over "model" (expert parallelism): dim -3
+        return spec_with(3)
+    if name in _SHARD_LAST:
+        return spec_with(1)
+    if name in _SHARD_FIRST:
+        return spec_with(2)
+    if name in _BIAS_LIKE:
+        return P()
+    return P()
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh: Mesh):
+    """Tree of PartitionSpec mirroring the params tree."""
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, tuple):
+            return tuple(walk(v, path + (str(i),))
+                         for i, v in enumerate(tree))
+        return param_spec(path, tree.shape, mesh)
+    return walk(params_shape, ())
+
+
+def zero_extend(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: add DP sharding on the largest unsharded divisible dim."""
+    dp = dp_axes(mesh)
+    if not dp:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_size = None, 0
+    for i, (s, n) in enumerate(zip(entries, shape)):
+        if s is None and _divisible(n, mesh, dp) and n > best_size:
+            best, best_size = i, n
+    if best is None:
+        return spec
+    entries[best] = dp if len(dp) > 1 else dp[0]
+    return P(*entries)
+
+
+def opt_specs(cfg: ModelConfig, params_shape, mesh: Mesh):
+    base = param_specs(cfg, params_shape, mesh)
+
+    def walk(spec_tree, shape_tree):
+        if isinstance(spec_tree, dict):
+            return {k: walk(spec_tree[k], shape_tree[k]) for k in spec_tree}
+        if isinstance(spec_tree, tuple):
+            return tuple(walk(s, sh) for s, sh in
+                         zip(spec_tree, shape_tree))
+        return zero_extend(spec_tree, shape_tree.shape, mesh)
+
+    mv = walk(base, params_shape)
+    return {"m": mv, "v": mv, "step": P()}
+
+
+def batch_specs(cfg: ModelConfig, batch_shapes: Dict, mesh: Mesh):
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec(name, shape):
+        nd = len(shape)
+        if name in ("positions", "enc_positions") and nd <= 1:
+            return P()
+        if name == "positions" and nd == 3:        # m-rope (3, B, S)
+            return P(None, dp, None)
+        if nd == 0:
+            return P()
+        if shape[0] == 1:                          # long_500k batch 1
+            return P(*([None] * nd))
+        return P(dp, *([None] * (nd - 1)))
+
+    return {k: spec(k, v.shape) for k, v in batch_shapes.items()}
+
+
+def cache_spec(path, shape: Tuple[int, ...], cfg: ModelConfig, mesh: Mesh):
+    """Decode caches: (L', B, ...).  Batch over DP when divisible; the
+    longest remaining divisible dim (heads or sequence) over "model"."""
+    dp = dp_axes(mesh)
+    nd = len(shape)
+    entries = [None] * nd
+    if nd >= 2 and _divisible(shape[1], mesh, dp):
+        entries[1] = dp if len(dp) > 1 else dp[0]
+    # choose a model-sharded dim among the rest (prefer heads, then seq)
+    for dim in range(2, nd):
+        if _divisible(shape[dim], mesh, "model") and shape[dim] >= 128:
+            entries[dim] = "model"
+            break
+    return P(*entries)
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes, mesh: Mesh):
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, tuple):
+            return tuple(walk(v, path + (str(i),))
+                         for i, v in enumerate(tree))
+        return cache_spec(path, tree.shape, cfg, mesh)
+    return walk(cache_shapes, ())
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

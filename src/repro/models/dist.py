@@ -1,0 +1,39 @@
+"""Ambient mesh context for explicitly-distributed layer implementations
+(shard_map MoE dispatch, sharded decode attention).
+
+Model code is mesh-agnostic by default (GSPMD infers collectives); the
+launch layer calls ``set_mesh`` to unlock the manual paths where GSPMD's
+inference is measurably bad (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_MESH: Optional[jax.sharding.Mesh] = None
+_OPTIMIZED = False
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def set_optimized(v: bool) -> None:
+    """Enable the beyond-baseline implementations (chunked attention,
+    shard_map MoE, sharded decode attention)."""
+    global _OPTIMIZED
+    _OPTIMIZED = v
+
+
+def optimized() -> bool:
+    return _OPTIMIZED
+
+
+def dp_axis_names(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

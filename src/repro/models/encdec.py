@@ -1,0 +1,162 @@
+"""Encoder–decoder backbone (SeamlessM4T text/speech transformer).
+
+The speech frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, T, d).  The decoder is a standard causal
+stack with cross-attention; decode caches both its self-attention KV and
+the projected cross KV (computed once at prefill).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (Params, _dtype, _init, attn_forward, init_attn,
+                     init_mlp, mlp_forward, rmsnorm)
+
+
+def init_encdec(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = _dtype(cfg)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": jnp.ones((cfg.d_model,), dt),
+                "attn": init_attn(cfg, k1),
+                "ln2": jnp.ones((cfg.d_model,), dt),
+                "ffn": init_mlp(cfg, k1, cfg.d_ff)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": jnp.ones((cfg.d_model,), dt),
+                "self_attn": init_attn(cfg, k1),
+                "ln_x": jnp.ones((cfg.d_model,), dt),
+                "cross_attn": init_attn(cfg, k2),
+                "ln2": jnp.ones((cfg.d_model,), dt),
+                "ffn": init_mlp(cfg, k3, cfg.d_ff)}
+
+    ek = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dk = jax.random.split(ks[1], cfg.n_layers)
+    enc = jax.tree_util.tree_map(lambda *x: jnp.stack(x),
+                                 *[enc_layer(k) for k in ek])
+    dec = jax.tree_util.tree_map(lambda *x: jnp.stack(x),
+                                 *[dec_layer(k) for k in dk])
+    return {
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "embed": _init(ks[2], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "ln_enc": jnp.ones((cfg.d_model,), dt),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "lm_head": _init(ks[3], (cfg.d_model, cfg.vocab_size), dt),
+    }
+
+
+def encode(cfg: ModelConfig, p: Params, enc_embeds, enc_pos):
+    x = enc_embeds.astype(_dtype(cfg))
+
+    def body(x, bp):
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        o, _ = attn_forward(cfg, bp["attn"], h, enc_pos, causal=False)
+        x = x + o
+        h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        return x + mlp_forward(bp["ffn"], h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    from .lm import scan_blocks
+    x, _ = scan_blocks(cfg, body, x, p["enc_blocks"])
+    return rmsnorm(x, p["ln_enc"], cfg.norm_eps)
+
+
+def _cross_kv(cfg: ModelConfig, bp: Params, enc_out):
+    b, t, _ = enc_out.shape
+    h, dh = cfg.n_kv_heads, cfg.head_dim
+    k = jnp.einsum("btd,de->bte", enc_out, bp["cross_attn"]["wk"])
+    v = jnp.einsum("btd,de->bte", enc_out, bp["cross_attn"]["wv"])
+    return (k.reshape(b, t, h, dh).transpose(0, 2, 1, 3),
+            v.reshape(b, t, h, dh).transpose(0, 2, 1, 3))
+
+
+def _dec_sublayer(cfg, bp, x, pos, self_cache, index, cross_kv):
+    h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    o, new_self = attn_forward(cfg, bp["self_attn"], h, pos,
+                               self_cache, index)
+    x = x + o
+    h = rmsnorm(x, bp["ln_x"], cfg.norm_eps)
+    o, _ = attn_forward(cfg, bp["cross_attn"], h, pos,
+                        kv_override=cross_kv)
+    x = x + o
+    h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+    return x + mlp_forward(bp["ffn"], h), new_self
+
+
+def encdec_forward(cfg: ModelConfig, p: Params, enc_embeds, dec_tokens,
+                   enc_pos, dec_pos):
+    """Teacher-forcing training forward.  Returns (logits, aux=0)."""
+    enc_out = encode(cfg, p, enc_embeds, enc_pos)
+    x = jnp.take(p["embed"], dec_tokens, axis=0)
+
+    def body(x, bp):
+        ckv = _cross_kv(cfg, bp, enc_out)
+        x, _ = _dec_sublayer(cfg, bp, x, dec_pos, None, None, ckv)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    from .lm import scan_blocks
+    x, _ = scan_blocks(cfg, body, x, p["dec_blocks"])
+    x = rmsnorm(x, p["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"]).astype(jnp.float32)
+    return logits, jnp.float32(0.0)
+
+
+def init_dec_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   enc_len: int) -> Dict:
+    dt = _dtype(cfg)
+    nl = cfg.n_layers
+    kv = (nl, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    ckv = (nl, batch, cfg.n_kv_heads, enc_len, cfg.head_dim)
+    return {"self": (jnp.zeros(kv, dt), jnp.zeros(kv, dt)),
+            "cross": (jnp.zeros(ckv, dt), jnp.zeros(ckv, dt))}
+
+
+def encdec_prefill(cfg: ModelConfig, p: Params, enc_embeds, enc_pos,
+                   dec_tokens, dec_pos, cache: Dict):
+    """Encode + run decoder prefix, filling self- and cross-caches."""
+    enc_out = encode(cfg, p, enc_embeds, enc_pos)
+    x = jnp.take(p["embed"], dec_tokens, axis=0)
+    zero = jnp.int32(0)
+
+    def body(x, scan_in):
+        bp, sc = scan_in
+        ckv = _cross_kv(cfg, bp, enc_out)
+        x, new_self = _dec_sublayer(cfg, bp, x, dec_pos, sc, zero, ckv)
+        return x, (new_self, ckv)
+
+    from .lm import scan_blocks
+    x, (new_self, new_cross) = scan_blocks(cfg, body, x,
+                                           (p["dec_blocks"], cache["self"]))
+    x = rmsnorm(x, p["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], p["lm_head"]) \
+        .astype(jnp.float32)
+    return logits, {"self": new_self, "cross": new_cross}
+
+
+def encdec_decode(cfg: ModelConfig, p: Params, dec_tokens, dec_pos,
+                  cache: Dict, index):
+    """One decode step against cached self-KV + cross-KV."""
+    x = jnp.take(p["embed"], dec_tokens, axis=0)
+
+    def body(x, scan_in):
+        bp, sc, ckv = scan_in
+        x, new_self = _dec_sublayer(cfg, bp, x, dec_pos, sc, index, ckv)
+        return x, new_self
+
+    from .lm import scan_blocks
+    x, new_self = scan_blocks(cfg, body, x, (p["dec_blocks"], cache["self"],
+                                             cache["cross"]))
+    x = rmsnorm(x, p["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"]).astype(jnp.float32)
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,647 @@
+"""Transformer building blocks, functional style (params = pytrees).
+
+Covers every attention variant in the assigned architecture set: GQA with
+optional qk-norm and biases, MLA (compressed-KV latent attention), and
+M-RoPE (3-axis rotary for VLM backbones).  The MoE block is the sort-based
+dropping implementation (static shapes, expert-parallel over the "model"
+mesh axis; the scatter into (E, C, d) expert buffers is where GSPMD plants
+the all-to-all).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / (shape[0] ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def rmsnorm(x, w, eps):
+    # NOTE(§Perf cell 2, refuted): a "traffic-lean" variant (f32 variance
+    # reduction, bf16 apply path) measured WORSE (+7% memory term) — the
+    # f32 copy is still materialized for the reduction and the extra bf16
+    # ops outweigh the saved converts under the host backend's fusion.
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (n * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+
+
+def rope_cos_sin(positions, dim, theta, dtype):
+    """positions: (..., S) int32; returns cos/sin (..., S, dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, H, S, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    if cos.ndim == 2:
+        cos = cos[None, None]
+        sin = sin[None, None]
+    else:
+        cos = cos[:, None]
+        sin = sin[:, None]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def mrope_cos_sin(positions3, dim, theta, sections, dtype):
+    """positions3: (3, B, S) — temporal/height/width position ids.
+    Each frequency band takes its positions from the section it belongs to
+    (Qwen2-VL M-RoPE)."""
+    import numpy as np
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions3.astype(jnp.float32)[..., None] * inv  # (3, B, S, D/2)
+    idx = np.repeat(np.arange(3), np.asarray(sections))     # (D/2,) static
+    ang = jnp.take_along_axis(
+        ang, jnp.asarray(idx, jnp.int32)[None, None, None, :], axis=0)[0]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core (shared softmax path)
+
+
+def _sdpa_chunked(q, k, v, *, causal, q_offset, kv_len=None,
+                  chunk=2048, unroll=False):
+    """Memory-efficient attention (Rabe & Staats / flash-style) in pure
+    XLA: online softmax over KV chunks, so no (Sq, Skv) tensor ever hits
+    HBM.  The chunk body is rematerialized (p recomputed in the backward
+    pass).  ``unroll=True`` is used by the dry-run cost variants — XLA
+    cost analysis is trip-count-blind on while loops."""
+    b, h, sq, dh = q.shape
+    skv = k.shape[2]
+    dv = v.shape[3]            # may differ from dh (MLA)
+    nc = skv // chunk
+    scale = 1.0 / (dh ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    q_pos = (jnp.arange(sq) + q_offset)[None, None, :, None]
+    kvl = None if kv_len is None else jnp.reshape(kv_len, (-1, 1, 1, 1))
+
+    kc = jnp.moveaxis(k.reshape(b, h, nc, chunk, dh), 2, 0)
+    vc = jnp.moveaxis(v.reshape(b, h, nc, chunk, dv), 2, 0)
+    starts = jnp.arange(nc) * chunk
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kcb, vcb, c0 = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kcb.astype(jnp.float32))
+        k_pos = c0 + jnp.arange(chunk)[None, None, None, :]
+        mask = jnp.ones(s.shape, bool)
+        if kvl is not None:
+            mask = mask & (k_pos < kvl)
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vcb.dtype), vcb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, h, sq), -1e30, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, dv), jnp.float32))
+    if unroll:
+        carry = init
+        for i in range(nc):
+            carry, _ = body(carry, (kc[i], vc[i], starts[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), init,
+                                      (kc, vc, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def _sdpa(q, k, v, *, causal, q_offset, kv_len=None, cfg=None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D).
+
+    GQA is handled by broadcasting KV heads to Hq (not by folding query
+    heads into the KV-head dim): the folded form would leave the
+    (B, Hkv, ...) score tensor unshardable over a 16-way "model" axis when
+    Hkv < 16, replicating the softmax on every device — measured as a 6x
+    per-layer compute-term inflation in the dry-run (EXPERIMENTS.md §Perf,
+    iteration 0)."""
+    from . import dist
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    # chunked (flash-style) attention for LONG sequences: at 32k the
+    # (S, S) tensor is 4 GiB/head-batch f32 and cannot be materialized;
+    # at 4k the naive form is metric-equivalent (HLO bytes-accessed is
+    # residency-blind — §Perf cell 2 iteration 1) and fuses better.
+    if dist.optimized() and sq >= 8192:
+        chunk = 2048 if skv % 2048 == 0 else (
+            1024 if skv % 1024 == 0 else 0)
+        if chunk and skv > chunk:
+            unroll = bool(cfg is not None and not cfg.scan_layers)
+            return _sdpa_chunked(q, k, v, causal=causal,
+                                 q_offset=q_offset, kv_len=kv_len,
+                                 chunk=chunk, unroll=unroll)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    s *= 1.0 / (d ** 0.5)
+    k_pos = jnp.arange(skv)[None, None, None, :]
+    q_pos = (jnp.arange(sq) + q_offset)[None, None, :, None]
+    mask = jnp.ones((1, 1, sq, skv), bool)
+    if kv_len is not None:
+        mask = mask & (k_pos < jnp.reshape(kv_len, (-1, 1, 1, 1)))
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # NOTE(§Perf cell 2, refuted): casting p to bf16 before the PV dot
+    # measured +1.7% bytes on the host backend (the convert doesn't fuse
+    # there); kept only inside the chunked long-sequence path where the
+    # VMEM win is structural.
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def _decode_attn_seq_sharded(q, k_new, v_new, cache, cache_index, mesh):
+    """Flash-decoding with a SEQUENCE-sharded KV cache under shard_map.
+
+    Baseline GSPMD decode reshards/gathers the model-sharded cache every
+    step ("involuntary full rematerialization" warnings; llama4 decode_32k
+    measured 2.07s of collective time PER TOKEN).  Here the cache never
+    moves: each model shard updates its own S-slice (the owner is decided
+    by the index) and computes a partial softmax over its slice; partials
+    combine with one tiny psum of (B, H, 1, D)-sized tensors.
+
+    q/k_new/v_new: (B, H|Hkv, 1, Dh) replicated over "model";
+    cache: (k, v) with shape (B, Hkv, Smax, Dh), S sharded over "model".
+    """
+    from jax.sharding import PartitionSpec as P
+    from . import dist
+
+    ck, cv = cache
+    b, hq = q.shape[0], q.shape[1]
+    hkv, smax, dh = ck.shape[1], ck.shape[2], ck.shape[3]
+    tp = mesh.shape["model"]
+    s_loc = smax // tp
+    dp = dist.dp_axis_names(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    dp_spec = None
+    if dp and b % dp_total == 0 and b >= dp_total:
+        dp_spec = dp if len(dp) > 1 else dp[0]
+
+    def body(q, kn, vn, ckl, cvl, idx):
+        i = jax.lax.axis_index("model")
+        base = i * s_loc
+        lpos = idx - base
+        in_rng = (lpos >= 0) & (lpos < s_loc)
+        lp = jnp.clip(lpos, 0, s_loc - 1)
+        ck2 = jax.lax.dynamic_update_slice(ckl, kn.astype(ckl.dtype),
+                                           (0, 0, lp, 0))
+        ck2 = jnp.where(in_rng, ck2, ckl)
+        cv2 = jax.lax.dynamic_update_slice(cvl, vn.astype(cvl.dtype),
+                                           (0, 0, lp, 0))
+        cv2 = jnp.where(in_rng, cv2, cvl)
+
+        g = hq // hkv
+        k = jnp.repeat(ck2, g, axis=1) if g > 1 else ck2
+        v = jnp.repeat(cv2, g, axis=1) if g > 1 else cv2
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * (1.0 / dh ** 0.5)
+        pos = base + jnp.arange(s_loc)
+        s = jnp.where((pos <= idx)[None, None, None, :], s, -1e30)
+        m = s.max(-1)
+        m_all = jax.lax.pmax(m, "model")
+        p = jnp.exp(s - m_all[..., None])
+        l = jax.lax.psum(p.sum(-1), "model")
+        o = jax.lax.psum(
+            jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)),
+            "model")
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype), ck2, cv2
+
+    rep4 = P(dp_spec, None, None, None)
+    cache_spec = P(dp_spec, None, "model", None)
+    out, ck2, cv2 = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(rep4, rep4, rep4, cache_spec, cache_spec, P()),
+        out_specs=(rep4, cache_spec, cache_spec),
+        check_vma=False,
+    )(q, k_new, v_new, ck, cv, cache_index)
+    return out, (ck2, cv2)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+
+
+def init_attn(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p = {
+        "wq": _init(ks[0], (d, cfg.q_dim), dt),
+        "wk": _init(ks[1], (d, cfg.kv_dim), dt),
+        "wv": _init(ks[2], (d, cfg.kv_dim), dt),
+        "wo": _init(ks[3], (cfg.q_dim, d), dt),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), dt)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), dt)
+    return p
+
+
+def attn_forward(cfg: ModelConfig, p: Params, x, positions,
+                 cache: Optional[Tuple] = None, cache_index=None,
+                 causal: bool = True, kv_override=None):
+    """x: (B, S, d).  cache: (k, v) rings (B, Hkv, Smax, Dh) when decoding;
+    cache_index: () int32 current length.  kv_override: (k, v) from an
+    encoder for cross-attention.  Returns (out, new_cache)."""
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    if kv_override is None:
+        k = jnp.einsum("bsd,de->bse", x, p["wk"])
+        v = jnp.einsum("bsd,de->bse", x, p["wv"])
+        if "bk" in p:
+            k = k + p["bk"]
+            v = v + p["bv"]
+        k = k.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    else:
+        k, v = kv_override
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        if kv_override is None:
+            k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+
+    if kv_override is None:
+        if cfg.m_rope:
+            cos, sin = mrope_cos_sin(positions, dh, cfg.rope_theta,
+                                     cfg.mrope_sections, x.dtype)
+        else:
+            cos, sin = rope_cos_sin(positions, dh, cfg.rope_theta, x.dtype)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    kv_len = None
+    q_offset = 0
+    if cache is not None and kv_override is None:
+        from . import dist
+        mesh = dist.get_mesh()
+        if (s == 1 and dist.optimized() and mesh is not None
+                and "model" in mesh.axis_names
+                and cache[0].shape[2] % mesh.shape["model"] == 0):
+            # sequence-sharded flash-decoding (§Perf cell 3)
+            o4, new_cache = _decode_attn_seq_sharded(
+                q, k, v, cache, jnp.asarray(cache_index, jnp.int32),
+                mesh)
+            o = o4.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+            return jnp.einsum("bse,ed->bsd", o, p["wo"]), new_cache
+        ck, cv = cache
+        if getattr(cache_index, "ndim", 0) == 1:
+            # per-row cache indices (continuous batching: each slot is at
+            # its own position).  vmapped update; causality = the per-row
+            # kv_len mask (exact for single-token decode).
+            upd = jax.vmap(lambda c, x2, i: jax.lax.dynamic_update_slice(
+                c, x2, (0, i, 0)))
+            ck = upd(ck, k.astype(ck.dtype), cache_index)
+            cv = upd(cv, v.astype(cv.dtype), cache_index)
+            k, v = ck, cv
+            new_cache = (ck, cv)
+            kv_len = cache_index + s
+            q_offset = 0
+            causal = False
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, 0, cache_index, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, 0, cache_index, 0))
+            k, v = ck, cv
+            new_cache = (ck, cv)
+            kv_len = cache_index + s
+            q_offset = cache_index
+            causal = True
+    elif kv_override is not None:
+        causal = False
+        q_offset = 0
+    else:
+        q_offset = 0
+
+    o = _sdpa(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+              cfg=cfg)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (MiniCPM3 / DeepSeek-V2)
+
+
+def init_mla(cfg: ModelConfig, key) -> Params:
+    m = cfg.mla
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": _init(ks[0], (d, m.q_lora_rank), dt),
+        "q_norm": jnp.ones((m.q_lora_rank,), dt),
+        "wuq": _init(ks[1], (m.q_lora_rank, h * qk_head), dt),
+        "wdkv": _init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dt),
+        "wuk": _init(ks[3], (m.kv_lora_rank, h * m.qk_nope_head_dim), dt),
+        "wuv": _init(ks[4], (m.kv_lora_rank, h * m.v_head_dim), dt),
+        "wo": _init(ks[5], (h * m.v_head_dim, d), dt),
+    }
+
+
+def mla_forward(cfg: ModelConfig, p: Params, x, positions,
+                cache: Optional[Tuple] = None, cache_index=None):
+    """MLA: caches the compressed latent (c_kv, k_rope) — the paper-level
+    memory win.  cache: (c_kv (B, Smax, r), k_rope (B, Smax, dr))."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+
+    q = jnp.einsum("bsd,dr->bsr", x, p["wdq"])
+    q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,re->bse", q, p["wuq"])
+    q = q.reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q = q.transpose(0, 2, 1, 3)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim:]
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
+    c_kv, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c_kv = rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+
+    cos, sin = rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta,
+                            x.dtype)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, None], cos, sin)[:, 0]   # (B, S, dr)
+
+    new_cache = None
+    kv_len = None
+    q_offset = 0
+    if cache is not None:
+        cc, cr = cache
+        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype),
+                                          (0, cache_index, 0))
+        cr = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype),
+                                          (0, cache_index, 0))
+        c_kv, k_rope = cc, cr
+        new_cache = (cc, cr)
+        kv_len = cache_index + s
+        q_offset = cache_index
+
+    k_nope = jnp.einsum("bsr,re->bse", c_kv, p["wuk"]).reshape(
+        b, -1, h, m.qk_nope_head_dim).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsr,re->bse", c_kv, p["wuv"]).reshape(
+        b, -1, h, m.v_head_dim).transpose(0, 2, 1, 3)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None],
+                                  (b, h) + k_rope.shape[1:])], -1)
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+
+    o = _sdpa(qq, k, v, causal=True, q_offset=q_offset, kv_len=kv_len,
+              cfg=cfg)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"wg": _init(ks[0], (d, d_ff), dt),
+            "wu": _init(ks[1], (d, d_ff), dt),
+            "wd": _init(ks[2], (d_ff, d), dt)}
+
+
+def mlp_forward(p: Params, x):
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    return jnp.einsum("bsf,fd->bsd", g * u, p["wd"])
+
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    m = cfg.moe
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    d, e, f = cfg.d_model, m.n_experts, m.d_expert
+    p = {
+        "router": _init(ks[0], (d, e), jnp.float32, scale=0.02),
+        "wg": _init(ks[1], (e, d, f), dt),
+        "wu": _init(ks[2], (e, d, f), dt),
+        "wd": _init(ks[3], (e, f, d), dt),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(cfg.with_(d_ff=m.d_expert * m.n_shared),
+                               ks[4], m.d_expert * m.n_shared)
+    return p
+
+
+def moe_forward(cfg: ModelConfig, p: Params, x):
+    """MoE dispatch.  x: (B, S, d) -> (out, aux_loss).
+
+    Two implementations:
+      * GSPMD path (default; correct everywhere) — the sort-based scatter
+        below.  GSPMD cannot shard the data-dependent scatter and falls
+        back to replicating the token tensor across the model axis: the
+        dry-run measured ~3.4e13 collective bytes/device/step on
+        qwen3-moe train_4k (~500x the analytic dispatch volume).
+      * shard_map path (production) — experts live on their model shard;
+        activations are replicated across the model axis between TP
+        layers anyway, so each shard locally selects the tokens routed to
+        ITS experts and the only collective is the same output psum TP
+        already pays.  See EXPERIMENTS.md §Perf cell 1.
+    """
+    from . import dist
+    mesh = dist.get_mesh()
+    if (mesh is not None and "model" in mesh.axis_names
+            and cfg.moe.n_experts % mesh.shape["model"] == 0):
+        return _moe_forward_shard_map(cfg, p, x, mesh)
+    return _moe_forward_gspmd(cfg, p, x)
+
+
+def _moe_forward_gspmd(cfg: ModelConfig, p: Params, x):
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = m.top_k
+    e = m.n_experts
+    cap = max(1, int(t * k * m.capacity_factor / e))
+    # keep MXU-aligned capacity where possible
+    cap = max(8, (cap + 7) // 8 * 8)
+
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    gates, eidx = jax.lax.top_k(probs, k)                 # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): e * sum_e f_e * p_e
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[eidx.reshape(-1)].add(
+        1.0 / (t * k))
+    aux = e * jnp.sum(me * ce)
+
+    # sort-based dispatch
+    flat_e = eidx.reshape(-1)                             # (T*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = jnp.take(flat_e, order)
+    # rank within expert = position - segment start
+    seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(t * k) - seg_start
+    slot = sorted_e * cap + rank
+    keep = rank < cap
+    slot = jnp.where(keep, slot, e * cap)                 # park drops OOB
+
+    tok = jnp.take(order // k, jnp.arange(t * k))         # token per entry
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[slot].set(jnp.take(xf, tok, axis=0), mode="drop")
+    buf = buf.reshape(e, cap, d)
+
+    # expert FFN (batched over experts; E shards over "model")
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    eo = jnp.einsum("ecf,efd->ecd", g * u, p["wd"]).reshape(e * cap, d)
+
+    # combine
+    gathered = jnp.take(eo, jnp.clip(slot, 0, e * cap - 1), axis=0)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    gate_per_entry = jnp.take(gates.reshape(-1), order)
+    out = jnp.zeros((t, d), x.dtype)
+    out = out.at[tok].add((gathered.astype(jnp.float32)
+                           * gate_per_entry[:, None]).astype(x.dtype))
+
+    if m.n_shared:
+        out = out + mlp_forward(p["shared"], xf[None])[0]
+    return out.reshape(b, s, d), aux
+
+
+def _moe_forward_shard_map(cfg: ModelConfig, p: Params, x, mesh):
+    """Expert-parallel MoE under shard_map: experts sharded over "model",
+    tokens sharded over the DP axes and replicated over "model".  Each
+    model shard routes its (replicated) tokens to its local experts; the
+    only collective is the psum of partial outputs over "model"."""
+    from jax.sharding import PartitionSpec as P
+    from . import dist
+
+    m = cfg.moe
+    tp = mesh.shape["model"]
+    e = m.n_experts
+    e_loc = e // tp
+    k = m.top_k
+    b, s, d = x.shape
+    dp = dist.dp_axis_names(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    if not dp or b % dp_total != 0 or b < dp_total:
+        dp, dp_total = (), 1          # small batch: replicate over DP
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    t_loc = (b // dp_total) * s
+    cap = max(8, (int(t_loc * k * m.capacity_factor / e) + 7) // 8 * 8)
+
+    def body(xb, router, wg, wu, wd):
+        bl, sl, _ = xb.shape
+        t = bl * sl
+        xf = xb.reshape(t, d)
+        logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, -1)
+        gates, eidx = jax.lax.top_k(probs, k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+        me = probs.mean(0)
+        ce = jnp.zeros((e,), jnp.float32).at[eidx.reshape(-1)].add(
+            1.0 / (t * k))
+        aux = e * jnp.sum(me * ce)
+        for ax in dp:
+            aux = jax.lax.pmean(aux, ax)
+
+        # local-expert selection
+        first = jax.lax.axis_index("model") * e_loc
+        flat_e = eidx.reshape(-1)
+        lid = flat_e - first
+        local = (lid >= 0) & (lid < e_loc)
+        sort_key = jnp.where(local, lid, e_loc)
+        order = jnp.argsort(sort_key)
+        sorted_lid = jnp.take(sort_key, order)
+        seg_start = jnp.searchsorted(sorted_lid, sorted_lid, side="left")
+        rank = jnp.arange(t * k) - seg_start
+        keep = (sorted_lid < e_loc) & (rank < cap)
+        slot = jnp.where(keep, sorted_lid * cap + rank, e_loc * cap)
+
+        tok = jnp.take(order // k, jnp.arange(t * k))
+        buf = jnp.zeros((e_loc * cap, d), xb.dtype)
+        buf = buf.at[slot].set(jnp.take(xf, tok, axis=0), mode="drop")
+        buf = buf.reshape(e_loc, cap, d)
+
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg))
+        u = jnp.einsum("ecd,edf->ecf", buf, wu)
+        eo = jnp.einsum("ecf,efd->ecd", g * u, wd).reshape(e_loc * cap, d)
+
+        gathered = jnp.take(eo, jnp.clip(slot, 0, e_loc * cap - 1), axis=0)
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        gate_per_entry = jnp.take(gates.reshape(-1), order)
+        out = jnp.zeros((t, d), xb.dtype)
+        out = out.at[tok].add((gathered.astype(jnp.float32)
+                               * gate_per_entry[:, None]).astype(xb.dtype))
+        out = jax.lax.psum(out, "model")
+        return out.reshape(bl, sl, d), aux
+
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp_spec, None, None), P(), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(P(dp_spec, None, None), P()),
+        check_vma=False,
+    )(x, p["router"], p["wg"], p["wu"], p["wd"])
+
+    if m.n_shared:   # shared expert: plain TP outside the shard_map
+        out = out + mlp_forward(p["shared"], x.reshape(1, -1, d)) \
+            .reshape(b, s, d)
+    return out, aux

@@ -1,0 +1,316 @@
+"""Decoder-only LM assembly for all assigned families.
+
+Layers are grouped into homogeneous *superblocks* (period = lcm of the
+attention interleave and the MoE interleave) and scanned with lax.scan —
+94-layer models lower as one loop, not 94 inlined layers.  Each superblock
+slot is one sublayer: attention (GQA or MLA), Mamba, mLSTM or sLSTM mixer,
+followed by an MLP or MoE (except for xLSTM blocks, which carry their own
+projections).
+
+Caches for decode are pytrees stacked along the superblock axis so the
+decode step scans them alongside the parameters.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (Params, _dtype, _init, attn_forward, init_attn,
+                     init_mla, init_moe, init_mlp, mla_forward, mlp_forward,
+                     moe_forward, rmsnorm)
+from .ssm import (init_mamba, init_mlstm, init_slstm, mamba_forward,
+                  mlstm_forward, slstm_forward)
+
+
+# ---------------------------------------------------------------------------
+# Superblock layout
+
+
+def block_period(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.attn_every:
+        p = cfg.attn_every
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.every_k_layers)
+    if cfg.xlstm is not None:
+        p = math.lcm(p, cfg.xlstm.slstm_every)
+    return p
+
+
+def slot_kinds(cfg: ModelConfig) -> List[Tuple[str, str]]:
+    """Per superblock: list of (mixer, ffn) kinds; ffn == "none" for xLSTM."""
+    period = block_period(cfg)
+    out = []
+    for i in range(period):
+        if cfg.family == "ssm":
+            x = cfg.xlstm
+            mixer = "slstm" if (i % x.slstm_every == x.slstm_every - 1) \
+                else "mlstm"
+            out.append((mixer, "none"))
+            continue
+        if cfg.attn_on_layer(i):
+            mixer = "mla" if cfg.mla else "attn"
+        else:
+            mixer = "mamba"
+        ffn = "moe" if cfg.moe_on_layer(i) else "mlp"
+        out.append((mixer, ffn))
+    return out
+
+
+def n_superblocks(cfg: ModelConfig) -> int:
+    period = block_period(cfg)
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    return cfg.n_layers // period
+
+
+# ---------------------------------------------------------------------------
+# Init
+
+
+def _init_sublayer(cfg: ModelConfig, key, mixer: str, ffn: str) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    if mixer == "attn":
+        p["mixer"] = init_attn(cfg, ks[0])
+    elif mixer == "mla":
+        p["mixer"] = init_mla(cfg, ks[0])
+    elif mixer == "mamba":
+        p["mixer"] = init_mamba(cfg, ks[0])
+    elif mixer == "mlstm":
+        p["mixer"] = init_mlstm(cfg, ks[0])
+    elif mixer == "slstm":
+        p["mixer"] = init_slstm(cfg, ks[0])
+    if ffn == "mlp":
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        p["ffn"] = init_mlp(cfg, ks[1], cfg.d_ff)
+    elif ffn == "moe":
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        p["ffn"] = init_moe(cfg, ks[1])
+    return p
+
+
+def init_lm(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    kinds = slot_kinds(cfg)
+    ns = n_superblocks(cfg)
+
+    supers = []
+    bkeys = jax.random.split(ks[0], ns)
+    for si in range(ns):
+        skeys = jax.random.split(bkeys[si], len(kinds))
+        supers.append({f"slot{j}": _init_sublayer(cfg, skeys[j], m, f)
+                       for j, (m, f) in enumerate(kinds)})
+    blocks = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *supers) \
+        if ns > 1 else jax.tree_util.tree_map(lambda x: x[None], supers[0])
+
+    p: Params = {
+        "embed": _init(ks[1], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "blocks": blocks,
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _init(ks[2], (cfg.d_model, cfg.vocab_size), dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Sublayer application
+
+
+def _apply_sublayer(cfg: ModelConfig, p: Params, kind: Tuple[str, str], x,
+                    positions, cache=None, cache_index=None):
+    mixer, ffn = kind
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    new_cache = None
+    if mixer == "attn":
+        o, new_cache = attn_forward(cfg, p["mixer"], h, positions,
+                                    cache, cache_index)
+    elif mixer == "mla":
+        o, new_cache = mla_forward(cfg, p["mixer"], h, positions,
+                                   cache, cache_index)
+    elif mixer == "mamba":
+        o, new_cache = mamba_forward(cfg, p["mixer"], h, cache)
+    elif mixer == "mlstm":
+        o, new_cache = mlstm_forward(cfg, p["mixer"], h, cache)
+    elif mixer == "slstm":
+        o, new_cache = slstm_forward(cfg, p["mixer"], h, cache)
+    x = x + o
+    if ffn != "none":
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if ffn == "moe":
+            o2, aux = moe_forward(cfg, p["ffn"], h2)
+        else:
+            o2 = mlp_forward(p["ffn"], h2)
+        x = x + o2
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Scan-or-unroll over superblocks.  scan_layers=False exists for the
+# dry-run's cost extraction: XLA cost analysis counts while bodies once,
+# so the depth-1/-2 cost variants compile unrolled.
+
+
+def scan_blocks(cfg: ModelConfig, body, carry, xs):
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    ns = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(ns):
+        sl = jax.tree_util.tree_map(lambda t: t[i], xs)
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *t: jnp.stack(t), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Stacked (per-superblock) decode caches for each slot."""
+    kinds = slot_kinds(cfg)
+    ns = n_superblocks(cfg)
+    dt = _dtype(cfg)
+    cache: Dict[str, Tuple] = {}
+    for j, (mixer, _f) in enumerate(kinds):
+        if mixer == "attn":
+            shape = (ns, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+            cache[f"slot{j}"] = (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+        elif mixer == "mla":
+            m = cfg.mla
+            cache[f"slot{j}"] = (
+                jnp.zeros((ns, batch, max_len, m.kv_lora_rank), dt),
+                jnp.zeros((ns, batch, max_len, m.qk_rope_head_dim), dt))
+        elif mixer == "mamba":
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            cache[f"slot{j}"] = (
+                jnp.zeros((ns, batch, s.d_conv - 1, d_in), dt),
+                jnp.zeros((ns, batch, d_in, s.d_state), jnp.float32))
+        elif mixer == "mlstm":
+            x = cfg.xlstm
+            d_in = int(x.proj_factor * cfg.d_model)
+            h = cfg.n_heads
+            dh = d_in // h
+            cache[f"slot{j}"] = (
+                jnp.zeros((ns, batch, h, dh, dh), jnp.float32),
+                jnp.zeros((ns, batch, h, dh), jnp.float32),
+                jnp.zeros((ns, batch, h), jnp.float32))
+        elif mixer == "slstm":
+            d = cfg.d_model
+            z = jnp.zeros((ns, batch, d), jnp.float32)
+            cache[f"slot{j}"] = (z, z, z - 10.0, z)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+
+
+def _embed(cfg: ModelConfig, p: Params, tokens_or_embeds):
+    if cfg.frontend == "embeds":
+        return tokens_or_embeds.astype(_dtype(cfg))
+    return jnp.take(p["embed"], tokens_or_embeds, axis=0)
+
+
+def _unembed(cfg: ModelConfig, p: Params, x):
+    x = rmsnorm(x, p["ln_f"], cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+
+
+def lm_forward(cfg: ModelConfig, p: Params, tokens_or_embeds, positions):
+    """Training/prefill forward without cache.  Returns (logits, aux)."""
+    kinds = slot_kinds(cfg)
+    x = _embed(cfg, p, tokens_or_embeds)
+
+    def body(carry, bp):
+        x, aux = carry
+        for j, kind in enumerate(kinds):
+            x, a, _ = _apply_sublayer(cfg, bp[f"slot{j}"], kind, x,
+                                      positions)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = scan_blocks(cfg, body, (x, jnp.float32(0.0)),
+                              p["blocks"])
+    return _unembed(cfg, p, x), aux
+
+
+def lm_prefill(cfg: ModelConfig, p: Params, tokens_or_embeds, positions,
+               cache: Dict, start=None):
+    """Forward that fills the cache from position ``start`` (prefix-reuse
+    serving prefills only the un-cached suffix).  Returns (last-token
+    logits, cache)."""
+    kinds = slot_kinds(cfg)
+    x = _embed(cfg, p, tokens_or_embeds)
+    zero = jnp.int32(0) if start is None else jnp.asarray(start, jnp.int32)
+
+    def body(carry, scan_in):
+        x = carry
+        bp, bc = scan_in
+        new_bc = {}
+        for j, kind in enumerate(kinds):
+            x, _a, nc = _apply_sublayer(cfg, bp[f"slot{j}"], kind, x,
+                                        positions, bc[f"slot{j}"], zero)
+            new_bc[f"slot{j}"] = _cache_like(bc[f"slot{j}"], nc)
+        return x, new_bc
+
+    x, new_cache = scan_blocks(cfg, body, x, (p["blocks"], cache))
+    logits = _unembed(cfg, p, x[:, -1:])
+    return logits, new_cache
+
+
+def lm_decode(cfg: ModelConfig, p: Params, tokens_or_embeds, positions,
+              cache: Dict, index):
+    """One decode step.  tokens: (B, 1).  Returns (logits, cache)."""
+    kinds = slot_kinds(cfg)
+    x = _embed(cfg, p, tokens_or_embeds)
+
+    def body(carry, scan_in):
+        x = carry
+        bp, bc = scan_in
+        new_bc = {}
+        for j, kind in enumerate(kinds):
+            x, _a, nc = _apply_sublayer(cfg, bp[f"slot{j}"], kind, x,
+                                        positions, bc[f"slot{j}"], index)
+            new_bc[f"slot{j}"] = _cache_like(bc[f"slot{j}"], nc)
+        return x, new_bc
+
+    x, new_cache = scan_blocks(cfg, body, x, (p["blocks"], cache))
+    return _unembed(cfg, p, x), new_cache
+
+
+def _cache_like(old, new):
+    """Keep cache pytree structure stable across sublayers (mamba training
+    path returns None ssm state)."""
+    if new is None:
+        return old
+    return tuple(o if n is None else n for o, n in zip(old, new))
+
+
+# ---------------------------------------------------------------------------
+# Loss
+
+
+def lm_loss(cfg: ModelConfig, p: Params, tokens_or_embeds, positions,
+            labels, aux_weight: float = 0.01):
+    logits, aux = lm_forward(cfg, p, tokens_or_embeds, positions)
+    logp = jax.nn.log_softmax(logits, -1)
+    ll = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    loss = -ll.mean()
+    return loss + aux_weight * aux, (loss, aux)

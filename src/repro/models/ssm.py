@@ -1,0 +1,315 @@
+"""State-space / recurrent blocks: Mamba-1 selective SSM (Jamba's mixer)
+and xLSTM cells (mLSTM matrix memory + sLSTM scalar memory).
+
+Mamba uses a *chunked* scan: the (B, S, d_inner, d_state) discretized
+tensors are never materialized at once — an outer lax.scan walks chunks of
+``chunk`` steps, and within a chunk an associative scan composes the
+affine recurrences.  This is the TPU-native replacement for the fused CUDA
+selective-scan kernel (HBM-resident activations, VMEM-sized chunks).
+
+xLSTM cells run as exact sequential scans (lax.scan over time) — correct
+for train/prefill and identical to the decode step function; the
+chunkwise-parallel training form is a recorded optimization opportunity
+(EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dtype, _init, rmsnorm
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    return s.dt_rank or math.ceil(cfg.d_model / 16)
+
+
+def init_mamba(cfg: ModelConfig, key) -> Params:
+    s = cfg.ssm
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    d_in = s.expand * d
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_in, 1))
+    return {
+        "in_proj": _init(ks[0], (d, 2 * d_in), dt),
+        "conv_w": _init(ks[1], (s.d_conv, d_in), dt, scale=0.5),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "x_proj": _init(ks[2], (d_in, r + 2 * s.d_state), dt),
+        "dt_proj": _init(ks[3], (r, d_in), dt),
+        "dt_bias": jnp.full((d_in,), -4.6, dt),   # softplus^-1(0.01)
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _init(ks[4], (d_in, d), dt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, S, C); w: (K, C) depthwise.  state: (B, K-1, C) past inputs."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return out + b[None, None], new_state
+
+
+def mamba_forward(cfg: ModelConfig, p: Params, x,
+                  state: Optional[Tuple] = None):
+    chunk = cfg.ssm.chunk or x.shape[1]
+    """x: (B, S, d).  state: (conv_state, ssm_state) for decode (S == 1).
+    Returns (y, new_state)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in = s_cfg.expand * d
+    n = s_cfg.d_state
+    r = _dt_rank(cfg)
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+
+    conv_state = state[0] if state is not None else None
+    xc, new_conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    xc = jax.nn.silu(xc)
+
+    dbc = jnp.einsum("bsc,ce->bse", xc, p["x_proj"])
+    dt = dbc[..., :r]
+    bmat = dbc[..., r:r + n].astype(jnp.float32)          # (B,S,N)
+    cmat = dbc[..., r + n:].astype(jnp.float32)           # (B,S,N)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rc->bsc", dt, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))               # (B,S,d_in)
+    a = -jnp.exp(p["A_log"])                              # (d_in, N)
+    xcf = xc.astype(jnp.float32)
+
+    if s == 1:   # decode step
+        h0 = state[1] if state is not None else jnp.zeros((b, d_in, n),
+                                                          jnp.float32)
+        da = jnp.exp(dt[:, 0, :, None] * a[None])          # (B,d_in,N)
+        dbx = (dt[:, 0, :, None] * bmat[:, 0, None, :]
+               * xcf[:, 0, :, None])
+        h = da * h0 + dbx
+        y = jnp.einsum("bcn,bn->bc", h, cmat[:, 0])[:, None]
+        y = y + p["D"][None, None] * xcf
+        out = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        return jnp.einsum("bsc,cd->bsd", out, p["out_proj"]), \
+            (new_conv_state, h)
+
+    # chunked scan over the sequence
+    assert s % chunk == 0 or s < chunk
+    q = min(chunk, s)
+    nc = s // q
+    dt_c = dt.reshape(b, nc, q, d_in)
+    b_c = bmat.reshape(b, nc, q, n)
+    c_c = cmat.reshape(b, nc, q, n)
+    x_c = xcf.reshape(b, nc, q, d_in)
+
+    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+
+    def chunk_body(h, inp):
+        dtq, bq, cq, xq = inp                              # (B,Q,...)
+        da = jnp.exp(dtq[..., None] * a[None, None])       # (B,Q,d_in,N)
+        dbx = dtq[..., None] * bq[:, :, None, :] * xq[..., None]
+
+        def compose(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        acum, hrel = jax.lax.associative_scan(compose, (da, dbx), axis=1)
+        hs = acum * h[:, None] + hrel                      # (B,Q,d_in,N)
+        y = jnp.einsum("bqcn,bqn->bqc", hs, cq)
+        return hs[:, -1], y
+
+    swap = lambda t: jnp.swapaxes(t, 0, 1)                 # scan over chunks
+    if not cfg.scan_layers:
+        # cost-extraction mode: unroll the chunk loop so XLA cost
+        # analysis (trip-count-blind on while loops) counts every chunk
+        h_last, ys_l = h0, []
+        for i in range(nc):
+            h_last, yi = chunk_body(h_last, (dt_c[:, i], b_c[:, i],
+                                             c_c[:, i], x_c[:, i]))
+            ys_l.append(yi)
+        y = jnp.stack(ys_l, axis=1).reshape(b, s, d_in)
+    else:
+        h_last, ys = jax.lax.scan(chunk_body, h0,
+                                  (swap(dt_c), swap(b_c), swap(c_c),
+                                   swap(x_c)))
+        y = swap(ys).reshape(b, s, d_in)
+    y = y + p["D"][None, None] * xcf
+    out = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    # final state returned so prefill can hand off to decode
+    return jnp.einsum("bsc,cd->bsd", out, p["out_proj"]), \
+        (new_conv_state, h_last)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory)
+
+
+def init_mlstm(cfg: ModelConfig, key) -> Params:
+    x = cfg.xlstm
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    d_in = int(x.proj_factor * d)
+    h = cfg.n_heads
+    dh = d_in // h
+    ks = jax.random.split(key, 8)
+    return {
+        "up": _init(ks[0], (d, 2 * d_in), dt),
+        "wq": _init(ks[1], (d_in, d_in), dt),
+        "wk": _init(ks[2], (d_in, d_in), dt),
+        "wv": _init(ks[3], (d_in, d_in), dt),
+        "wi": _init(ks[4], (d_in, h), jnp.float32, scale=0.01),
+        "wf": _init(ks[5], (d_in, h), jnp.float32, scale=0.01),
+        "bf": jnp.full((h,), 3.0, jnp.float32),   # open forget gates
+        "bi": jnp.zeros((h,), jnp.float32),
+        "gn": jnp.ones((d_in,), dt),
+        "down": _init(ks[6], (d_in, d), dt),
+    }
+
+
+def _mlstm_step(q, k, v, i_raw, f_raw, carry):
+    """One mLSTM step.  q/k/v: (B,H,Dh); gates: (B,H).  carry: (C,n,m)."""
+    c, nrm, m = carry
+    log_f = jax.nn.log_sigmoid(f_raw)
+    log_i = i_raw
+    m_new = jnp.maximum(log_f + m, log_i)
+    fg = jnp.exp(log_f + m - m_new)[..., None, None]
+    ig = jnp.exp(log_i - m_new)[..., None, None]
+    c = fg * c + ig * (k[..., :, None] * v[..., None, :])   # (B,H,Dh,Dh)
+    nrm = fg[..., 0] * nrm + ig[..., 0] * k
+    h_num = jnp.einsum("bhd,bhde->bhe", q, c)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, nrm)),
+                        jnp.exp(-m_new))[..., None]
+    return (c, nrm, m_new), h_num / h_den
+
+
+def mlstm_forward(cfg: ModelConfig, p: Params, x,
+                  state: Optional[Tuple] = None):
+    """x: (B, S, d).  Exact sequential scan (also the decode step)."""
+    xl = cfg.xlstm
+    b, s, d = x.shape
+    d_in = int(xl.proj_factor * d)
+    h = cfg.n_heads
+    dh = d_in // h
+
+    up = jnp.einsum("bsd,de->bse", x, p["up"])
+    xm, z = up[..., :d_in], up[..., d_in:]
+    q = jnp.einsum("bse,ef->bsf", xm, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bse,ef->bsf", xm, p["wk"]).reshape(b, s, h, dh)
+    k = k / (dh ** 0.5)
+    v = jnp.einsum("bse,ef->bsf", xm, p["wv"]).reshape(b, s, h, dh)
+    i_raw = (jnp.einsum("bse,eh->bsh", xm.astype(jnp.float32), p["wi"])
+             + p["bi"])
+    f_raw = (jnp.einsum("bse,eh->bsh", xm.astype(jnp.float32), p["wf"])
+             + p["bf"])
+
+    if state is None:
+        carry = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                 jnp.zeros((b, h, dh), jnp.float32),
+                 jnp.zeros((b, h), jnp.float32))
+    else:
+        carry = state
+
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+
+    def step(carry, inp):
+        qt, kt, vt, it, ft = inp
+        carry, ht = _mlstm_step(qt, kt, vt, it, ft, carry)
+        return carry, ht
+
+    swap = lambda t: jnp.swapaxes(t, 0, 1)
+    carry, hs = jax.lax.scan(
+        step, carry, (swap(qf), swap(kf), swap(vf), swap(i_raw),
+                      swap(f_raw)))
+    hseq = swap(hs).reshape(b, s, d_in).astype(x.dtype)
+    hseq = rmsnorm(hseq, p["gn"], cfg.norm_eps)
+    out = hseq * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", out, p["down"]), carry
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM (scalar memory, post-up-projection block with FFN)
+
+
+def init_slstm(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 12)
+    p = {}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = _init(ks[i], (d, d), dt)
+        p[f"r{g}"] = _init(ks[4 + i], (h, dh, dh), dt, scale=1.0 / dh ** 0.5)
+        p[f"b{g}"] = (jnp.full((d,), 1.0, jnp.float32) if g == "f"
+                      else jnp.zeros((d,), jnp.float32))
+    p["gn"] = jnp.ones((d,), dt)
+    p["ffn"] = {
+        "wg": _init(ks[8], (d, cfg.d_ff or 4 * d // 3, ), dt),
+        "wu": _init(ks[9], (d, cfg.d_ff or 4 * d // 3), dt),
+        "wd": _init(ks[10], (cfg.d_ff or 4 * d // 3, d), dt),
+    }
+    return p
+
+
+def slstm_forward(cfg: ModelConfig, p: Params, x,
+                  state: Optional[Tuple] = None):
+    """x: (B, S, d).  Returns (y, new_state)."""
+    from .layers import mlp_forward
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+
+    wx = {g: jnp.einsum("bsd,de->bse", x, p[f"w{g}"]).astype(jnp.float32)
+          for g in ("i", "f", "z", "o")}
+
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = (zeros, zeros, zeros - 10.0, zeros)   # c, n, m, h
+
+    def step(carry, inp):
+        c, nrm, m, hprev = carry
+        xi, xf, xz, xo = inp
+        hh = hprev.reshape(b, h, dh)
+        rec = {g: jnp.einsum("bhd,hde->bhe", hh, p[f"r{g}"]
+                             .astype(jnp.float32)).reshape(b, d)
+               for g in ("i", "f", "z", "o")}
+        i_raw = xi + rec["i"] + p["bi"]
+        f_raw = xf + rec["f"] + p["bf"]
+        z_t = jnp.tanh(xz + rec["z"] + p["bz"])
+        o_t = jax.nn.sigmoid(xo + rec["o"] + p["bo"])
+        log_f = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(log_f + m, i_raw)
+        ig = jnp.exp(i_raw - m_new)
+        fg = jnp.exp(log_f + m - m_new)
+        c_new = fg * c + ig * z_t
+        n_new = fg * nrm + ig
+        h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    swap = lambda t: jnp.swapaxes(t, 0, 1)
+    carry, hs = jax.lax.scan(step, state, tuple(swap(wx[g]) for g in
+                                                ("i", "f", "z", "o")))
+    hseq = swap(hs).astype(x.dtype)
+    hseq = rmsnorm(hseq, p["gn"], cfg.norm_eps)
+    out = hseq + mlp_forward(p["ffn"], hseq)
+    return out, carry

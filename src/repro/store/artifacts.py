@@ -1,0 +1,163 @@
+"""Artifact store: the HDFS analogue.
+
+Stores Tables (and, through the checkpoint layer, arbitrary pytrees) under
+content-addressed names.  Two backends:
+
+  * in-memory — used by tests and CPU benchmarks (models Hadoop's case
+    where intermediate data fits the page cache);
+  * on-disk  — one directory per artifact: ``data.npz`` + ``manifest.json``
+    (schema, capacity, row count, byte size, creation time).  Writes are
+    atomic (tmp dir + rename) so a killed writer never leaves a torn
+    artifact — the fault-tolerance contract the checkpoint layer relies on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..dataflow.table import Table
+
+
+class ArtifactStore:
+    def __init__(self, root: Optional[str] = None):
+        self.root = root
+        self.mem: Dict[str, Table] = {}
+        self.meta: Dict[str, dict] = {}
+        self.aliases: Dict[str, str] = {}
+        if root:
+            os.makedirs(root, exist_ok=True)
+            for name in self._scan_disk():
+                self.meta[name] = self._read_manifest(name)
+
+    def _resolve(self, name: str) -> str:
+        seen = set()
+        while name in self.aliases and name not in seen:
+            seen.add(name)
+            name = self.aliases[name]
+        return name
+
+    def alias(self, name: str, target: str):
+        if name != target:
+            self.aliases[name] = target
+
+    # ------------------------------------------------------------------ disk
+    def _path(self, name: str) -> str:
+        return os.path.join(self.root, name.replace("/", "__"))
+
+    def _scan_disk(self):
+        out = []
+        for d in os.listdir(self.root):
+            if os.path.exists(os.path.join(self.root, d, "manifest.json")):
+                out.append(d.replace("__", "/"))
+        return out
+
+    def _read_manifest(self, name: str) -> dict:
+        with open(os.path.join(self._path(name), "manifest.json")) as f:
+            return json.load(f)
+
+    # ------------------------------------------------------------------ api
+    def exists(self, name: str) -> bool:
+        name = self._resolve(name)
+        if name in self.mem:
+            return True
+        return bool(self.root) and os.path.exists(
+            os.path.join(self._path(name), "manifest.json"))
+
+    def put(self, name: str, table: Table) -> dict:
+        name = self._resolve(name)
+        arrays = {n: np.asarray(c) for n, c in table.columns.items()}
+        valid = np.asarray(table.valid)
+        # Stored artifacts shrink to the live row count (next power of 2):
+        # this is what makes reusing a selective Filter/Project output
+        # cheaper than recomputing it (paper Figs 16/17) — a stored HDFS
+        # file is only as big as its rows.  Host-side, so the dynamic
+        # shape never touches XLA.
+        nvalid = int(valid.sum())
+        if valid[:nvalid].all():            # compacted (Store compacts)
+            cap = max(8, 1 << (max(nvalid, 1) - 1).bit_length())
+            if cap < len(valid):
+                arrays = {n: a[:cap] for n, a in arrays.items()}
+                valid = valid[:cap]
+        nbytes = int(sum(a.nbytes for a in arrays.values()) + valid.nbytes)
+        meta = dict(name=name, capacity=table.capacity,
+                    rows=int(valid.sum()), nbytes=nbytes, created=time.time())
+        if self.root:
+            final = self._path(name)
+            tmp = tempfile.mkdtemp(dir=self.root)
+            try:
+                np.savez(os.path.join(tmp, "data.npz"),
+                         __valid__=valid, **arrays)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(meta, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)        # atomic publish
+            except Exception:
+                shutil.rmtree(tmp, ignore_errors=True)
+                raise
+        else:
+            self.mem[name] = table
+        self.meta[name] = meta
+        return meta
+
+    def get(self, name: str) -> Table:
+        name = self._resolve(name)
+        if name in self.mem:
+            return self.mem[name]
+        if not self.root:
+            raise KeyError(name)
+        z = np.load(os.path.join(self._path(name), "data.npz"))
+        valid = z["__valid__"]
+        cols = {n: z[n] for n in z.files if n != "__valid__"}
+        import jax.numpy as jnp
+        return Table({n: jnp.asarray(a) for n, a in cols.items()},
+                     jnp.asarray(valid))
+
+    def delete(self, name: str):
+        self.mem.pop(name, None)
+        self.meta.pop(name, None)
+        if self.root:
+            p = self._path(name)
+            if os.path.exists(p):
+                shutil.rmtree(p)
+
+    def nbytes(self, name: str) -> int:
+        return self.meta[self._resolve(name)]["nbytes"]
+
+    def total_bytes(self) -> int:
+        return sum(m["nbytes"] for m in self.meta.values())
+
+    def names(self):
+        return sorted(self.meta)
+
+
+class Catalog:
+    """Source-dataset catalog with version stamps (eviction rule R4:
+    modifying a dataset bumps its version, so old fingerprints never match
+    and dependent artifacts are invalidated)."""
+
+    def __init__(self, store: ArtifactStore):
+        self.store = store
+        self.versions: Dict[str, int] = {}
+        self.sources: Dict[str, Table] = {}
+
+    def register(self, name: str, table: Table):
+        self.versions[name] = self.versions.get(name, -1) + 1
+        self.sources[name] = table
+
+    def version(self, name: str) -> int:
+        return self.versions.get(name, 0)
+
+    def get(self, name: str) -> Table:
+        if name in self.sources:
+            return self.sources[name]
+        return self.store.get(name)
+
+    def has(self, name: str) -> bool:
+        return name in self.sources or self.store.exists(name)

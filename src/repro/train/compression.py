@@ -1,0 +1,80 @@
+"""Gradient compression for the data-parallel all-reduce: int8
+quantization with error feedback.
+
+At 1000+ nodes the DP gradient all-reduce is the dominant inter-pod
+collective (the pod axis rides DCI, ~10x slower than ICI).  int8
+quantization cuts it 4x vs f32 / 2x vs bf16; error feedback (the
+quantization residual is carried and added to the next step's gradient)
+restores convergence — the 1-bit-Adam / PowerSGD family of results.
+
+``compressed_psum`` is the primitive (usable inside any shard_map over
+the DP axes); ``make_compressed_sync`` wraps a gradient pytree.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(g: jnp.ndarray, axis,
+                    error: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean of per-shard gradients over ``axis``, exchanged in int8.
+
+    Must run inside a shard_map with ``axis`` bound.  Returns
+    (mean_gradient f32, new_error) — feed ``new_error`` back in on the
+    next step (error feedback)."""
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    gf = g.astype(jnp.float32)
+    if error is not None:
+        gf = gf + error
+    # shared scale: the max |g| across shards keeps the int8 grids aligned
+    amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = quantize_int8(gf, scale)
+    new_error = gf - dequantize(q, scale)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    return dequantize(total, scale) / n, new_error
+
+
+def make_compressed_sync(mesh, dp_axes=("data",)):
+    """Returns sync(per_shard_grads, error_tree) -> (mean_grads,
+    error_tree): a jit-able pytree wrapper around compressed_psum.
+
+    per_shard_grads leaves carry a leading DP dim (one slice per shard);
+    outputs are replicated means."""
+    from jax.sharding import PartitionSpec as P
+
+    axis = dp_axes[0] if len(dp_axes) == 1 else dp_axes
+
+    def sync(grads, errors):
+        def body(g_tree, e_tree):
+            out = jax.tree_util.tree_map(
+                lambda g, e: compressed_psum(g[0], axis, e),
+                g_tree, e_tree)
+            means = jax.tree_util.tree_map(lambda x: x[0], out,
+                                           is_leaf=lambda x:
+                                           isinstance(x, tuple))
+            errs = jax.tree_util.tree_map(lambda x: x[1], out,
+                                          is_leaf=lambda x:
+                                          isinstance(x, tuple))
+            return means, errs
+
+        in_g = jax.tree_util.tree_map(lambda _: P(axis), grads)
+        rep = jax.tree_util.tree_map(lambda _: P(), errors)
+        return jax.shard_map(body, mesh=mesh,
+                             in_specs=(in_g, rep),
+                             out_specs=(rep, rep),
+                             check_vma=False)(grads, errors)
+
+    return sync

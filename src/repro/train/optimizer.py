@@ -1,0 +1,65 @@
+"""AdamW with global-norm clipping, built from scratch (no optax).
+
+Optimizer-state dtype is configurable: fp32 by default, bf16 for the
+>=235B architectures so single-pod training fits HBM (recorded in
+DESIGN.md §6).  States are sharded like their parameters plus a ZeRO-1
+extension over the data axes (launch/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+
+    def init(self, params) -> Dict[str, Any]:
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params) -> Tuple[Any, Dict[str, Any]]:
+        step = state["step"] + 1
+        # global-norm clip in fp32
+        leaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in leaves))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(self.state_dtype)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32) * scale
+            m32 = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(gf) * (1 - b2)
+            u = (m32 / c1) / (jnp.sqrt(v32 / c2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - self.lr * u
+            return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p
+               in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

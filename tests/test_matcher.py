@@ -1,0 +1,217 @@
+"""ReStore core: containment matching, Algorithm-1 agreement, rewriting
+correctness, repository ordering + eviction rules, with hypothesis
+property tests over randomly generated plans."""
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import plan as P
+from repro.core.matcher import match_bottom_up, pairwise_plan_traversal
+from repro.core.repository import Repository, make_entry
+from repro.core.restore import ReStore
+from repro.core.rewriter import rewrite_plan
+from repro.dataflow.expr import Col
+from repro.dataflow.physical import execute_plan
+from repro.dataflow.table import Table, encode_strings
+from repro.store.artifacts import ArtifactStore, Catalog
+
+
+def _table(n=128, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table.from_numpy({
+        "key": encode_strings([f"k{i}" for i in
+                               rng.integers(0, 10, n)]),
+        "val": rng.uniform(0, 10, n).astype(np.float32),
+        "num": rng.integers(0, 100, n).astype(np.int32),
+    })
+
+
+# ---------------------------------------------------------------------------
+# random plan generator (chains + joins) for property tests
+
+
+def random_plan(rng: np.random.Generator, depth: int = 4):
+    op = P.load("t")
+    for _ in range(depth):
+        kind = rng.integers(0, 4)
+        if kind == 0:
+            op = P.filter_(op, Col("val") > float(rng.uniform(0, 10)))
+        elif kind == 1:
+            op = P.foreach(op, {"key": Col("key"),
+                                "val": Col("val") * float(rng.uniform(1, 3)),
+                                "num": Col("num")})
+        elif kind == 2:
+            op = P.groupby(op, ["key"], {"val": ("sum", "val"),
+                                         "num": ("max", "num"),
+                                         })
+            op = P.foreach(op, {"key": Col("key"), "val": Col("val"),
+                                "num": Col("num")})
+        else:
+            op = P.distinct(op)
+    return P.PhysicalPlan([P.store(op, "out")])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), depth=st.integers(1, 5),
+       cut=st.integers(0, 5))
+def test_property_subplan_always_contained(seed, depth, cut):
+    """Any prefix sub-plan of a plan is found by both matchers, and both
+    return the same anchor."""
+    rng = np.random.default_rng(seed)
+    plan = random_plan(rng, depth)
+    ops = [o for o in plan.topo() if o.kind not in ("LOAD", "STORE")]
+    target = ops[min(cut, len(ops) - 1)]
+    sub = plan.subplan_upto(target, "sub")
+    m1 = match_bottom_up(plan, sub)
+    m2 = pairwise_plan_traversal(plan, sub)
+    assert m1 is not None, "bottom-up must find its own sub-plan"
+    assert m2 is not None, "Algorithm 1 must find its own sub-plan"
+    fps = plan.fingerprints()
+    assert fps[id(m1)] == fps[id(target)]
+    assert fps[id(m2)] == fps[id(target)]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), depth=st.integers(1, 4))
+def test_property_rewrite_preserves_results(seed, depth):
+    """Executing the rewritten plan (with the matched region answered
+    from a stored artifact) gives the same rows as the original."""
+    rng = np.random.default_rng(seed)
+    plan = random_plan(rng, depth)
+    t = _table(seed=seed % 17)
+    ops = [o for o in plan.topo() if o.kind not in ("LOAD", "STORE")]
+    target = ops[rng.integers(0, len(ops))]
+    sub = plan.subplan_upto(target, "sub")
+
+    # execute the sub-plan, store its artifact, register in repository
+    sub_out, _ = execute_plan(sub, {"t": t})
+    repo = Repository()
+    repo.add(make_entry(sub, "art/test", bytes_in=100, bytes_out=10))
+
+    rw = rewrite_plan(plan, repo)
+    assert rw.used, "the stored sub-plan must be reused"
+    ref, _ = execute_plan(plan, {"t": t})
+    got, _ = execute_plan(rw.plan, {"t": t, "art/test": sub_out["sub"]})
+    r, g = ref["out"].to_numpy(), got["out"].to_numpy()
+    assert sorted(r) == sorted(g)
+    for c in r:
+        rv, gv = np.sort(r[c], axis=0), np.sort(g[c], axis=0)
+        assert np.allclose(rv.astype(np.float64), gv.astype(np.float64),
+                           atol=1e-3), c
+
+
+def test_no_false_containment():
+    base = P.filter_(P.load("t"), Col("val") > 1.0)
+    plan = P.PhysicalPlan([P.store(base, "out")])
+    other = P.PhysicalPlan([P.store(
+        P.filter_(P.load("t"), Col("val") > 2.0), "s")])
+    assert match_bottom_up(plan, other) is None
+    assert pairwise_plan_traversal(plan, other) is None
+    # different source dataset
+    other2 = P.PhysicalPlan([P.store(
+        P.filter_(P.load("t2"), Col("val") > 1.0), "s")])
+    assert match_bottom_up(plan, other2) is None
+    assert pairwise_plan_traversal(plan, other2) is None
+    # different dataset VERSION (eviction rule R4, structural form)
+    other3 = P.PhysicalPlan([P.store(
+        P.filter_(P.load("t", version=1), Col("val") > 1.0), "s")])
+    assert match_bottom_up(plan, other3) is None
+
+
+def test_repository_ordering_subsumption_first():
+    """A plan that subsumes another must be scanned first."""
+    small = P.PhysicalPlan([P.store(
+        P.project(P.load("t"), ["key", "val"]), "a")])
+    f = P.filter_(P.project(P.load("t"), ["key", "val"]),
+                  Col("val") > 1.0)
+    big = P.PhysicalPlan([P.store(f, "b")])
+    repo = Repository()
+    repo.add(make_entry(small, "art/s", bytes_in=100, bytes_out=90))
+    repo.add(make_entry(big, "art/b", bytes_in=100, bytes_out=10))
+    ordered = repo.ordered()
+    assert ordered[0].artifact == "art/b", "subsumer (larger plan) first"
+    assert repo.subsumes(ordered[0], ordered[1])
+
+
+def test_eviction_rules():
+    repo = Repository(keep_only_reducing=True)
+    growing = make_entry(P.PhysicalPlan([P.store(
+        P.distinct(P.load("t")), "x")]), "art/x",
+        bytes_in=10, bytes_out=100)
+    assert not repo.add(growing), "R1: growing outputs rejected"
+
+    repo2 = Repository(keep_only_time_saving=True,
+                       load_bandwidth_bytes_s=1e9)
+    cheap = make_entry(P.PhysicalPlan([P.store(
+        P.distinct(P.load("t")), "y")]), "art/y",
+        bytes_in=100, bytes_out=50, exec_time_s=1e-12)
+    assert not repo2.add(cheap), "R2: faster-to-recompute rejected"
+
+    repo3 = Repository()
+    e = make_entry(P.PhysicalPlan([P.store(
+        P.distinct(P.load("t")), "z")]), "art/z",
+        bytes_in=100, bytes_out=50)
+    repo3.add(e)
+    e.last_used = time.time() - 1000
+    assert repo3.evict_unused(window_s=10) == 1, "R3: LRU window"
+    assert len(repo3) == 0
+
+    repo4 = Repository()
+    e2 = make_entry(P.PhysicalPlan([P.store(
+        P.distinct(P.load("t")), "w")]), "art/w",
+        bytes_in=100, bytes_out=50, source_versions={"t": 0})
+    repo4.add(e2)
+    store = ArtifactStore()
+    cat = Catalog(store)
+    cat.register("t", _table())       # version 0
+    assert repo4.evict_stale(cat) == 0
+    cat.register("t", _table(seed=5))  # bump to version 1
+    assert repo4.evict_stale(cat) == 1, "R4: modified inputs evicted"
+
+
+def test_repository_persistence_roundtrip(tmp_path):
+    """Repository entries (plans + stats) survive a driver restart and
+    still match/rewrite — the cross-run durability the paper's 7-day
+    retention story requires."""
+    from repro.core.serialize import load_repository, save_repository
+    from repro.workloads import pigmix
+    from repro.core.restore import ReStore
+
+    store = ArtifactStore(root=str(tmp_path / "artifacts"))
+    cat = Catalog(store)
+    store.put("page_views", pigmix.gen_page_views(1024))
+    store.put("users", pigmix.gen_users())
+    store.put("power_users", pigmix.gen_power_users())
+    rs = ReStore(cat, store, heuristic="aggressive")
+    rs.run_plan(pigmix.L3("sum"))
+    n = len(rs.repo)
+    assert n > 0
+    save_repository(rs.repo, str(tmp_path / "repo.json"))
+
+    # "restart": new process state, same storage
+    store2 = ArtifactStore(root=str(tmp_path / "artifacts"))
+    cat2 = Catalog(store2)
+    repo2 = load_repository(str(tmp_path / "repo.json"))
+    assert len(repo2) == n
+    rs2 = ReStore(cat2, store2, repo2, heuristic="off")
+    _, rep = rs2.run_plan(pigmix.L3("mean"))
+    assert not rep.jobs[0].executed, \
+        "restored repository must still answer the shared join job"
+    # stats round-tripped
+    assert all(e.signature and e.bytes_out >= 0 for e in repo2.entries)
+
+
+def test_corrupted_entry_rejected(tmp_path):
+    from repro.core.serialize import (plan_to_json, repository_from_json,
+                                      repository_to_json)
+    from repro.core.repository import Repository
+    small = P.PhysicalPlan([P.store(
+        P.project(P.load("t"), ["key", "val"]), "a")])
+    repo = Repository()
+    repo.add(make_entry(small, "art/s", bytes_in=10, bytes_out=5))
+    text = repository_to_json(repo)
+    corrupted = text.replace('"key"', '"kez"', 1)   # tamper with the plan
+    repo2 = repository_from_json(corrupted)
+    assert len(repo2) == 0, "signature mismatch must reject the entry"

@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step
+on CPU asserting output shapes + no NaNs, plus prefill+decode consistency
+with the full forward."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.api import build
+from repro.models.lm import block_period, slot_kinds
+from repro.train.optimizer import AdamW
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(KEY)
+    batch = model.demo_batch(KEY, seq=32, gbs=2)
+
+    total, (loss, aux) = model.loss_fn(params, batch)
+    assert jnp.isfinite(total), arch
+    assert loss.shape == ()
+
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    new_params, opt_state, gnorm = opt.update(grads, opt_state, params)
+    assert jnp.isfinite(gnorm)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(new_params)):
+        assert a.shape == b.shape
+        assert jnp.isfinite(b.astype(jnp.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_full_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(KEY)
+    T, K, B = 12, 3, 2
+    full = model.demo_batch(KEY, seq=T + K, gbs=B)
+
+    if cfg.family == "encdec":
+        from repro.models.encdec import encdec_forward
+        logits_full, _ = encdec_forward(
+            cfg, params, full["enc_embeds"], full["tokens"],
+            full["enc_positions"], full["positions"])
+    else:
+        from repro.models.lm import lm_forward
+        logits_full, _ = lm_forward(
+            cfg, params, full.get("embeds", full.get("tokens")),
+            full["positions"])
+
+    def sl(b, s0, s1):
+        out = {}
+        for k2, v in b.items():
+            if k2 == "labels":
+                continue
+            if k2 in ("enc_embeds", "enc_positions"):
+                out[k2] = v
+            elif k2 == "positions":
+                out[k2] = v[..., s0:s1] if cfg.m_rope else v[s0:s1]
+            elif v.ndim >= 2:
+                out[k2] = v[:, s0:s1]
+            else:
+                out[k2] = v[s0:s1]
+        return out
+
+    cache = model.init_cache(B, T + K, enc_len=T + K)
+    logits_p, cache = model.prefill(params, sl(full, 0, T), cache)
+    errs = [float(jnp.abs(logits_p[:, -1] - logits_full[:, T - 1]).max())]
+    for t in range(K):
+        logits_d, cache = model.decode_step(
+            params, sl(full, T + t, T + t + 1), cache, jnp.int32(T + t))
+        errs.append(float(jnp.abs(logits_d[:, 0]
+                                  - logits_full[:, T + t]).max()))
+    assert max(errs) < 2e-3, (arch, errs)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_structure(arch):
+    """Full configs: layer layout divides evenly, param count matches the
+    published scale, and input_specs build for every applicable shape."""
+    cfg = get_config(arch)
+    model = build(cfg)
+    if cfg.family != "encdec":
+        assert cfg.n_layers % block_period(cfg) == 0
+        kinds = slot_kinds(cfg)
+        assert len(kinds) == block_period(cfg)
+    n = cfg.total_params()
+    expected = {"qwen3-1.7b": 1.7e9, "codeqwen1.5-7b": 7e9,
+                "minicpm3-4b": 4e9, "yi-6b": 6e9,
+                "qwen3-moe-235b-a22b": 235e9,
+                "llama4-maverick-400b-a17b": 400e9,
+                "seamless-m4t-medium": 1.2e9,   # 2x12L d1024 + 256k vocab
+                "xlstm-350m": 0.35e9, "qwen2-vl-72b": 72e9,
+                "jamba-1.5-large-398b": 398e9}[arch]
+    assert 0.5 * expected < n < 2.0 * expected, (arch, n, expected)
+    from repro.models.api import SHAPES, shape_applicable
+    for shape in SHAPES:
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            continue
+        specs = model.input_specs(shape)
+        assert specs, (arch, shape)
+
+
+def test_long_500k_only_for_subquadratic():
+    from repro.models.api import shape_applicable
+    runs = [a for a in ARCH_IDS
+            if shape_applicable(get_config(a), "long_500k")[0]]
+    assert sorted(runs) == ["jamba-1.5-large-398b", "xlstm-350m"]
+
+
+def test_moe_aux_loss_nonzero_and_balanced_router_low():
+    cfg = get_config("qwen3-moe-235b-a22b", smoke=True)
+    model = build(cfg)
+    params = model.init(KEY)
+    batch = model.demo_batch(KEY, seq=32, gbs=2)
+    _, (_, aux) = model.loss_fn(params, batch)
+    assert float(aux) > 0.0
+
+
+def test_chunked_attention_matches_naive():
+    """The optimized long-sequence attention path is exact."""
+    import numpy as np
+    from repro.models.layers import _sdpa, _sdpa_chunked
+    rng = np.random.default_rng(0)
+    for (b, h, sq, skv, causal, off, kvl) in [
+            (2, 4, 2048, 2048, True, 0, None),
+            (1, 2, 2048, 4096, True, 2048, None),
+            (2, 2, 2048, 2048, False, 0, 1500)]:
+        q = jnp.asarray(rng.normal(size=(b, h, sq, 32)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, h, skv, 32)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, h, skv, 32)), jnp.float32)
+        a = _sdpa(q, k, v, causal=causal, q_offset=off, kv_len=kvl)
+        for unroll in (False, True):
+            c = _sdpa_chunked(q, k, v, causal=causal, q_offset=off,
+                              kv_len=kvl, chunk=1024, unroll=unroll)
+            assert float(jnp.abs(a - c).max()) < 2e-3

@@ -1,0 +1,94 @@
+"""Serving + prefix-reuse repository: reuse never changes outputs, the
+sub-prefix (sub-job) aliases fire, and the eviction rules hold."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import build
+from repro.serve.engine import ServeEngine
+from repro.serve.prefix_repo import PrefixRepository, prefix_fingerprints
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_reuse_matches_plain(setup):
+    cfg, model, params = setup
+    repo = PrefixRepository()
+    reuse = ServeEngine(model, params, max_len=64, prefix_repo=repo)
+    plain = ServeEngine(model, params, max_len=64)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size, 24)
+    for i in range(3):
+        p = np.concatenate([shared, rng.integers(1, cfg.vocab_size, 8)])
+        a, sa = reuse.serve(p, 6)
+        b, _ = plain.serve(p, 6)
+        assert (a == b).all(), i
+        if i > 0:
+            assert sa.reused_tokens >= 24, "shared prefix must be reused"
+
+
+def test_recurrent_arch_exact_prefix_only(setup):
+    cfg = get_config("xlstm-350m", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    repo = PrefixRepository()
+    eng = ServeEngine(model, params, max_len=48, prefix_repo=repo)
+    plain = ServeEngine(model, params, max_len=48)
+    rng = np.random.default_rng(1)
+    p = rng.integers(1, cfg.vocab_size, 16)
+    a1, s1 = eng.serve(p, 4)
+    a2, s2 = eng.serve(p, 4)       # exact hit
+    b, _ = plain.serve(p, 4)
+    assert (a1 == b).all() and (a2 == b).all()
+    assert s2.reused_tokens == 16 and s2.prefilled_tokens == 0
+
+
+def test_fingerprint_chain_properties():
+    t1 = np.array([1, 2, 3])
+    t2 = np.array([1, 2, 4])
+    f1 = prefix_fingerprints(t1, "v0")
+    f2 = prefix_fingerprints(t2, "v0")
+    assert f1[:2] == f2[:2] and f1[2] != f2[2]
+    assert prefix_fingerprints(t1, "v1") != f1   # model version matters
+
+
+def test_eviction_rules():
+    repo = PrefixRepository(capacity_bytes=1 << 20)
+    import jax.numpy as jnp
+    big = {"k": jnp.zeros((1 << 17,), jnp.float32)}   # 512 KiB
+    t = np.arange(10)
+    repo.store(t, big)
+    repo.store(np.arange(12), big)
+    assert repo.total_bytes <= repo.capacity_bytes
+    # R3: LRU window eviction
+    for e in repo.entries.values():
+        e.last_used = 1.0
+    assert repo.evict_unused(window_s=1) >= 1
+    # R4: version invalidation clears everything
+    repo.store(t, big)
+    n = repo.invalidate_version("v2")
+    assert n >= 1 and len(repo) == 0
+
+
+def test_continuous_batching_matches_sequential(setup):
+    """BatchEngine (slot-managed batched decode, mid-flight admission)
+    produces exactly the sequential ServeEngine outputs."""
+    import numpy as np
+    from repro.serve.batch_engine import BatchEngine
+    cfg, model, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, n) for n in (9, 14, 7, 11)]
+    ref_engine = ServeEngine(model, params, max_len=48)
+    refs = [ref_engine.serve(p, 5)[0] for p in prompts]
+    be = BatchEngine(model, params, n_slots=2, max_len=48)
+    reqs = [be.submit(p, 5, rid=i) for i, p in enumerate(prompts)]
+    be.run()
+    for r, ref in zip(reqs, refs):
+        assert r.done and (np.array(r.out) == ref).all()
