@@ -72,6 +72,7 @@ def measure_query(plan_fn, n_rows: int, heuristic: str = "aggressive",
     t_plain = run_time(rs0, plan_fn())
     src_bytes = sum(rs0.store.nbytes(n) for n in rs0.store.names()
                     if not n.startswith("art/"))
+    rs0.store.close()         # stop the flusher, release the device cache
     shutil.rmtree(rs0.store.root, ignore_errors=True)
 
     rs1 = fresh_restore(n_rows, heuristic, False, datasets)
@@ -88,6 +89,7 @@ def measure_query(plan_fn, n_rows: int, heuristic: str = "aggressive",
     rs2 = ReStore(rs1.catalog, rs1.store, rs1.repo,
                   heuristic="off", rewrite_enabled=True, measure_exec=True)
     t_reuse = run_time(rs2, plan_fn())
+    rs1.store.close()         # rs2 shares rs1's store object
     shutil.rmtree(rs1.store.root, ignore_errors=True)
     return {"t_plain": t_plain, "t_store": t_store, "t_reuse": t_reuse,
             "stored_bytes": stored, "source_bytes": src_bytes}

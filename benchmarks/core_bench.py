@@ -1,0 +1,79 @@
+"""Core perf snapshot: t_plain / t_store / t_reuse per query, appended to
+``BENCH_core.json`` so the bench trajectory is tracked PR over PR.
+
+Protocol is the same disk-backed three-arm measurement as the figure
+benches (see common.measure_query): store overhead = t_store/t_plain
+(paper Fig 11), reuse speedup = t_plain/t_reuse (paper Figs 9/10).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from benchmarks.common import emit, measure_query         # noqa: E402
+from repro.workloads import pigmix                        # noqa: E402
+
+# L2/L3: join/groupby-heavy (reuse-speedup signal); L4-L11 map-heavy
+# (store-overhead signal: T_store is a visible fraction of cheap jobs)
+QUERIES = ["L2", "L3", "L4", "L6", "L7", "L8", "L11"]
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "BENCH_core.json")
+
+
+def _median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def run(label: str | None = None, n_rows: int = 1 << 15,
+        out_path: str = OUT, trials: int = 3):
+    """Each query is measured ``trials`` times and the per-metric median
+    is recorded — single-arm stalls (CPU steal, disk hiccups) otherwise
+    dominate the cheap map-only queries."""
+    rec = {"label": label or "run", "n_rows": n_rows, "trials": trials,
+           "queries": {}}
+    raw = {q: [] for q in QUERIES}
+    for trial in range(trials):
+        for q in QUERIES:
+            raw[q].append(measure_query(pigmix.QUERIES[q], n_rows,
+                                        "aggressive"))
+    for q in QUERIES:
+        t_plain = _median([m["t_plain"] for m in raw[q]])
+        t_store = _median([m["t_store"] for m in raw[q]])
+        t_reuse = _median([m["t_reuse"] for m in raw[q]])
+        rec["queries"][q] = {
+            "t_plain_s": round(t_plain, 6),
+            "t_store_s": round(t_store, 6),
+            "t_reuse_s": round(t_reuse, 6),
+            "store_overhead": round(t_store / max(t_plain, 1e-9), 4),
+            "reuse_speedup": round(t_plain / max(t_reuse, 1e-9), 4),
+        }
+        emit(f"core/{q}", t_plain,
+             f"overhead={rec['queries'][q]['store_overhead']:.2f};"
+             f"speedup={rec['queries'][q]['reuse_speedup']:.2f}")
+    ovs = [v["store_overhead"] for v in rec["queries"].values()]
+    sps = [v["reuse_speedup"] for v in rec["queries"].values()]
+    rec["avg_store_overhead"] = round(sum(ovs) / len(ovs), 4)
+    rec["avg_reuse_speedup"] = round(sum(sps) / len(sps), 4)
+
+    doc = {"runs": []}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            doc = json.load(f)
+    doc["runs"] = [r for r in doc["runs"] if r["label"] != rec["label"]]
+    doc["runs"].append(rec)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    emit("core/average", 0.0,
+         f"avg_overhead={rec['avg_store_overhead']:.2f};"
+         f"avg_speedup={rec['avg_reuse_speedup']:.2f};out={out_path}")
+
+
+if __name__ == "__main__":
+    run(label=sys.argv[1] if len(sys.argv) > 1 else None)

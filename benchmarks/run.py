@@ -11,16 +11,20 @@ Prints ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
-sys.path.insert(0, "src")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
-from benchmarks import (filter_sweep, heuristics, prefix_reuse_bench,  # noqa
-                        projection_sweep, store_overhead, subjob_reuse,
-                        whole_job_reuse)
+from benchmarks import (core_bench, filter_sweep, heuristics,  # noqa
+                        prefix_reuse_bench, projection_sweep, store_overhead,
+                        subjob_reuse, whole_job_reuse)
 
 SUITES = {
+    "core": core_bench.run,
     "fig9_whole_job": whole_job_reuse.run,
     "fig10_12_subjob": subjob_reuse.run,
     "fig11_overhead": store_overhead.run,
@@ -34,13 +38,19 @@ SUITES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(SUITES) + [None])
+    ap.add_argument("--label", default=None,
+                    help="run label recorded in BENCH_core.json "
+                         "(core suite only)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in SUITES.items():
         if args.only and name != args.only:
             continue
         t0 = time.time()
-        fn()
+        if name == "core":
+            fn(label=args.label)
+        else:
+            fn()
         print(f"# suite {name} finished in {time.time() - t0:.1f}s",
               flush=True)
 

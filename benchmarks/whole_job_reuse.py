@@ -31,6 +31,7 @@ def run(n_rows: int = 1 << 14):
     for i, v in enumerate(variants):
         rs = fresh_restore(n_rows, "off", False)
         t_plain = run_time(rs, v())
+        rs.store.close()      # release the flusher thread + device cache
 
         # warm: execute the *sibling* variant first (shares job 1), evict
         # its final output, rerun the target variant with rewriting
@@ -41,6 +42,7 @@ def run(n_rows: int = 1 << 14):
         rs3 = ReStore(rs2.catalog, rs2.store, rs2.repo, heuristic="off",
                       rewrite_enabled=True, measure_exec=True)
         t_reuse = run_time(rs3, v())
+        rs2.store.close()     # rs3 shares rs2's store object
         sp = t_plain / max(t_reuse, 1e-9)
         speedups.append(sp)
         emit(f"fig9/whole_job/variant{i}", t_reuse, f"speedup={sp:.2f}")

@@ -73,6 +73,8 @@ class ReStore:
             reports.append(self._process_job(job))
         results = {user: self.store.get(ds)
                    for user, ds in wf.final_outputs.items()}
+        # workflow end is a durability point for the write-behind store
+        self.store.flush()
         return results, RunReport(reports)
 
     # ------------------------------------------------------------------

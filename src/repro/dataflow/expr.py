@@ -127,7 +127,8 @@ class BinOp(Expr):
 
     def eval(self, t):
         a, b = self.lhs.eval(t), self.rhs.eval(t)
-        if a.ndim == 2 or (hasattr(b, "ndim") and b.ndim >= 1 and b.shape[-1:] == a.shape[-1:] and a.ndim == 2):
+        if a.ndim == 2 or (hasattr(b, "ndim") and b.ndim >= 1
+                           and b.shape[-1:] == a.shape[-1:] and a.ndim == 2):
             # fixed-width string comparison: reduce across width
             r = _OPS[self.op](a, b)
             if self.op in ("eq",):

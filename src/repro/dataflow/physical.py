@@ -43,11 +43,52 @@ def use_pallas() -> bool:
 # Sorting & segments shared by GROUPBY / DISTINCT / COGROUP
 
 
-def _sort_by_keys(t: Table, keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
+class HashCache:
+    """Per-plan-execution memo of raw key-column hashes.
+
+    GROUPBY / DISTINCT / COGROUP / JOIN all hash the same (table, keys)
+    pairs — often the *same* columns, e.g. a SPLIT fan-out feeding a
+    GROUPBY and a JOIN on one key.  Keyed by the identity of the column
+    arrays (in sorted-name order, which is what ``hash_columns`` mixes
+    over), so a FILTER that only rewrites ``valid`` still shares the
+    hashes of its input.  Validity masking happens at the use site."""
+
+    def __init__(self):
+        # value holds the column objects alongside the hash: the memo
+        # key uses id()s, which are only stable while the arrays stay
+        # referenced (a GC'd temporary's recycled id must never hit)
+        self._memo: Dict[Tuple, Tuple[Tuple, jnp.ndarray]] = {}
+
+    def hashes(self, t: Table, keys, seed: int) -> jnp.ndarray:
+        cols = tuple(t.col(n) for n in sorted(keys))
+        key = (tuple(id(c) for c in cols), seed)
+        ent = self._memo.get(key)
+        if ent is None:
+            ent = (cols, hash_columns(t, keys, seed=seed))
+            self._memo[key] = ent
+        return ent[1]
+
+
+def _key_hashes(t: Table, keys, seed: int,
+                hc: "HashCache | None") -> jnp.ndarray:
+    if hc is None:
+        return hash_columns(t, keys, seed=seed)
+    return hc.hashes(t, keys, seed)
+
+
+def _pad1(a: jnp.ndarray, pad: int, value) -> jnp.ndarray:
+    if pad == 0:
+        return a
+    return jnp.concatenate([a, jnp.full((pad,), value, a.dtype)])
+
+
+def _sort_by_keys(t: Table, keys,
+                  hc: "HashCache | None" = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Return (order, new_seg): stable order by (h1, h2) with invalid rows
     last, and exact segment-start mask in sorted order."""
-    h1 = jnp.where(t.valid, hash_columns(t, keys, seed=0), _U32_MAX)
-    h2 = jnp.where(t.valid, hash_columns(t, keys, seed=101), _U32_MAX)
+    h1 = jnp.where(t.valid, _key_hashes(t, keys, 0, hc), _U32_MAX)
+    h2 = jnp.where(t.valid, _key_hashes(t, keys, 101, hc), _U32_MAX)
     order = jnp.lexsort((h2, h1))
     sv = jnp.take(t.valid, order)
     prev = jnp.roll(order, 1)
@@ -79,10 +120,15 @@ def _segment_aggregate(t: Table, keys, aggs, order, new_seg) -> Table:
             jnp.zeros_like(kc))
 
     def _segsum(v):
-        if use_pallas() and cap % min(256, cap) == 0:
+        if use_pallas():
             from ..kernels.segment_reduce.ops import segment_sum
-            return segment_sum(v[:, None], seg_id, num_segments=cap,
-                               impl="pallas",
+            # pad rows to the tile multiple instead of bailing to the
+            # dense fallback: padded rows carry value 0 and the
+            # out-of-range segment id `cap`, so the kernel drops them
+            pad = (-cap) % min(256, cap)
+            return segment_sum(_pad1(v, pad, 0)[:, None],
+                               _pad1(seg_id, pad, cap),
+                               num_segments=cap, impl="pallas",
                                interpret=jax.default_backend() != "tpu"
                                )[:, 0]
         return jax.ops.segment_sum(v, seg_id, num_segments=cap)
@@ -133,14 +179,14 @@ def op_foreach(t: Table, gens) -> Table:
     return Table(out, t.valid)
 
 
-def op_groupby(t: Table, keys, aggs) -> Table:
-    order, new_seg = _sort_by_keys(t, keys)
+def op_groupby(t: Table, keys, aggs, hc: "HashCache | None" = None) -> Table:
+    order, new_seg = _sort_by_keys(t, keys, hc)
     return _segment_aggregate(t, keys, aggs, order, new_seg)
 
 
-def op_distinct(t: Table) -> Table:
+def op_distinct(t: Table, hc: "HashCache | None" = None) -> Table:
     keys = t.names
-    order, new_seg = _sort_by_keys(t, keys)
+    order, new_seg = _sort_by_keys(t, keys, hc)
     return t.gather(order, new_seg)
 
 
@@ -152,21 +198,27 @@ def op_union(a: Table, b: Table) -> Table:
 
 
 def op_join(left: Table, right: Table, lkeys, rkeys,
-            expansion: int = 1) -> Tuple[Table, jnp.ndarray]:
+            expansion: int = 1,
+            hc: "HashCache | None" = None) -> Tuple[Table, jnp.ndarray]:
     """Inner equi-join, sort+probe based.  Output capacity =
     left.capacity * expansion.  Returns (table, overflow_count)."""
     probe_w = expansion + 4  # slack for h1 ties
     cap_r = right.capacity
 
-    h_r = jnp.where(right.valid, hash_columns(right, rkeys, seed=0), _U32_MAX)
+    h_r = jnp.where(right.valid, _key_hashes(right, rkeys, 0, hc), _U32_MAX)
     r_order = jnp.argsort(h_r, stable=True)
     h_r_sorted = jnp.take(h_r, r_order)
 
-    h_l = hash_columns(left, lkeys, seed=0)
-    if use_pallas() and h_l.shape[0] % min(256, h_l.shape[0]) == 0:
+    h_l = _key_hashes(left, lkeys, 0, hc)
+    if use_pallas():
         from ..kernels.hash_join.ops import probe
-        pos = probe(h_l, h_r_sorted, impl="pallas", tile_n=256,
-                    interpret=jax.default_backend() != "tpu")
+        # pad probe lanes to the tile multiple (extra lanes are sliced
+        # off) so the kernel path covers every capacity
+        n = h_l.shape[0]
+        pad = (-n) % min(256, n)
+        pos = probe(_pad1(h_l, pad, 0), h_r_sorted, impl="pallas",
+                    tile_n=256,
+                    interpret=jax.default_backend() != "tpu")[:n]
     else:
         pos = jnp.searchsorted(h_r_sorted, h_l, side="left")
     cand = jnp.clip(pos[:, None] + jnp.arange(probe_w)[None, :], 0, cap_r - 1)
@@ -210,7 +262,8 @@ def op_join(left: Table, right: Table, lkeys, rkeys,
     return Table(out_cols, matched), overflow
 
 
-def op_cogroup(a: Table, b: Table, keys_l, keys_r, aggs_l, aggs_r) -> Table:
+def op_cogroup(a: Table, b: Table, keys_l, keys_r, aggs_l, aggs_r,
+               hc: "HashCache | None" = None) -> Table:
     """Group both inputs by key; per-key aggregates from each side."""
     # unify key names under the left names, tag sides, reuse groupby path
     a_cols = {f"k{i}": a.col(k) for i, k in enumerate(keys_l)}
@@ -243,7 +296,7 @@ def op_cogroup(a: Table, b: Table, keys_l, keys_r, aggs_l, aggs_r) -> Table:
             side == 1, both.col(f"vb_{out}"),
             0.0 if fn2 in ("sum",) else jnp.nan)
         aggs[f"r_{out}"] = (fn2, f"vb_{out}")
-    grouped = op_groupby(both, keys, aggs)
+    grouped = op_groupby(both, keys, aggs, hc)
     # restore original key names
     renamed = {}
     for i, k in enumerate(keys_l):
@@ -255,7 +308,10 @@ def op_cogroup(a: Table, b: Table, keys_l, keys_r, aggs_l, aggs_r) -> Table:
 
 
 def op_store(t: Table) -> Table:
-    return t.compact()
+    # no in-graph work: compaction/truncation to the live row count
+    # happens host-side on the store's write-behind path (DESIGN.md §3),
+    # keeping sorts/gathers off the timed critical path of every job
+    return t
 
 
 # ---------------------------------------------------------------------------
@@ -264,11 +320,15 @@ def op_store(t: Table) -> Table:
 
 def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table]):
     """Evaluate a physical plan.  Returns (outputs, stats):
-    outputs: store-name -> compacted Table;
+    outputs: store-name -> output Table (uncompacted; the artifact
+    store compacts host-side on its write path);
     stats: op uid -> dict of traced scalars (rows_out, join_overflow)."""
     values: Dict[int, Table] = {}
     outputs: Dict[str, Table] = {}
     stats: Dict[int, Dict[str, jnp.ndarray]] = {}
+    # (h1, h2) key hashes are computed once per (columns, seed) within
+    # this plan execution and shared across GROUPBY/DISTINCT/COGROUP/JOIN
+    hc = HashCache()
 
     for op in plan.topo():
         p = op.params
@@ -284,15 +344,15 @@ def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table]):
             v = op_foreach(ins[0], p["gens"])
         elif op.kind == "JOIN":
             v, ovf = op_join(ins[0], ins[1], p["left_keys"], p["right_keys"],
-                             p.get("expansion", 1))
+                             p.get("expansion", 1), hc)
             extra["join_overflow"] = ovf
         elif op.kind == "GROUPBY":
-            v = op_groupby(ins[0], p["keys"], p["aggs"])
+            v = op_groupby(ins[0], p["keys"], p["aggs"], hc)
         elif op.kind == "COGROUP":
             v = op_cogroup(ins[0], ins[1], p["keys_left"], p["keys_right"],
-                           p["aggs_left"], p["aggs_right"])
+                           p["aggs_left"], p["aggs_right"], hc)
         elif op.kind == "DISTINCT":
-            v = op_distinct(ins[0])
+            v = op_distinct(ins[0], hc)
         elif op.kind == "UNION":
             v = op_union(ins[0], ins[1])
         elif op.kind == "SPLIT":

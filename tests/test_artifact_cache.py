@@ -1,0 +1,240 @@
+"""Device-resident artifact cache + write-behind persistence.
+
+Covers the storage-hierarchy contracts from DESIGN.md §3: LRU eviction at
+the byte bound, ``flush()`` as the durability barrier, crash safety (an
+artifact is fully published or absent, never torn), alias resolution
+through the cache, the injective name encoding, and manifest/data
+capacity agreement.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.dataflow.table import Table
+from repro.store.artifacts import (ArtifactStore, DeviceCache, _decode_name,
+                                   _encode_name)
+
+
+def _table(n=64, nvalid=None, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table.from_numpy(
+        {"a": rng.integers(0, 100, n).astype(np.int32),
+         "b": rng.random(n).astype(np.float32)},
+        nvalid=n if nvalid is None else nvalid)
+
+
+def _tbytes(t):
+    return t.nbytes()
+
+
+# --------------------------------------------------------------- device LRU
+
+
+def test_lru_evicts_at_byte_bound():
+    t = _table(64)
+    nb = _tbytes(t)
+    cache = DeviceCache(max_bytes=3 * nb)
+    for i in range(3):
+        cache.put(f"t{i}", t, nb)
+    assert len(cache) == 3 and cache.total_bytes == 3 * nb
+    cache.get("t0")                      # refresh t0: t1 is now LRU
+    cache.put("t3", t, nb)
+    assert "t1" not in cache, "LRU entry must be evicted at the bound"
+    assert "t0" in cache and "t2" in cache and "t3" in cache
+    assert cache.total_bytes <= cache.max_bytes
+
+
+def test_oversized_artifact_bypasses_cache():
+    t = _table(64)
+    cache = DeviceCache(max_bytes=10)
+    cache.put("big", t, _tbytes(t))
+    assert "big" not in cache and cache.total_bytes == 0
+
+
+def test_get_of_just_produced_artifact_hits_device_cache(tmp_path):
+    store = ArtifactStore(root=str(tmp_path / "a"))
+    t = _table(64)
+    store.put("x", t)
+    h0 = store.cache.hits
+    got = store.get("x")                 # no flush yet: must not need disk
+    assert store.cache.hits == h0 + 1
+    assert got.capacity == 64
+    np.testing.assert_array_equal(np.asarray(got.col("a")),
+                                  np.asarray(t.col("a")))
+    store.close()
+
+
+def test_eviction_falls_back_to_pending_then_disk(tmp_path):
+    # cache far too small for even one artifact: every get must be served
+    # by the pending write queue or by disk — never KeyError
+    store = ArtifactStore(root=str(tmp_path / "a"), cache_bytes=1)
+    t = _table(64)
+    store.put("x", t)
+    got = store.get("x")
+    np.testing.assert_array_equal(np.asarray(got.col("a")),
+                                  np.asarray(t.col("a")))
+    store.flush()
+    got2 = store.get("x")
+    np.testing.assert_array_equal(np.asarray(got2.col("a")),
+                                  np.asarray(t.col("a")))
+    store.close()
+
+
+def test_alias_resolves_through_cache(tmp_path):
+    store = ArtifactStore(root=str(tmp_path / "a"))
+    t = _table(32)
+    store.put("target", t)
+    store.alias("other", "target")
+    assert store.exists("other")
+    assert store.get("other") is store.get("target"), \
+        "alias must hit the same cached device table"
+    store.close()
+
+
+# ------------------------------------------------------------ write-behind
+
+
+def test_flush_is_a_durability_barrier(tmp_path):
+    root = str(tmp_path / "a")
+    store = ArtifactStore(root=root)
+    t = _table(64, nvalid=20)
+    store.put("x", t)
+    store.flush()
+    # fresh store object == simulated restart: only disk state survives
+    store2 = ArtifactStore(root=root)
+    assert store2.exists("x")
+    got = store2.get("x")
+    assert int(np.asarray(got.num_valid())) == 20
+    store.close()
+    store2.close()
+
+
+def test_kill_before_flush_leaves_no_torn_artifact(tmp_path, monkeypatch):
+    # simulated kill: the flusher thread never runs, pending writes die
+    # with the process
+    monkeypatch.setattr(
+        "repro.store.artifacts._WriteBehind._ensure_thread",
+        lambda self: None)
+    root = str(tmp_path / "a")
+    store = ArtifactStore(root=root)
+    store.put("x", _table(64))
+    assert store.exists("x")             # visible pre-crash via the cache
+    # "restart": a new store sees either a complete artifact or nothing
+    store2 = ArtifactStore(root=root)
+    assert not store2.exists("x")
+    assert store2.names() == []
+    # no half-published directories: anything on disk is either a
+    # complete artifact (manifest + data) or an unpublished .tmp- dir
+    for d in os.listdir(root):
+        full = os.path.join(root, d)
+        if not d.startswith(".tmp-"):
+            assert os.path.exists(os.path.join(full, "manifest.json"))
+            assert os.path.exists(os.path.join(full, "data.npz"))
+    store2.close()
+
+
+def test_failed_write_publishes_nothing_and_raises_on_flush(
+        tmp_path, monkeypatch):
+    root = str(tmp_path / "a")
+    store = ArtifactStore(root=root)
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr("repro.store.artifacts.np.savez", boom)
+    store.put("x", _table(64))
+    with pytest.raises(OSError):
+        store.flush()
+    monkeypatch.undo()
+    assert not os.path.exists(os.path.join(store._path("x"),
+                                           "manifest.json"))
+    assert [d for d in os.listdir(root) if not d.startswith(".tmp-")] == []
+    # a lost write must stop advertising the artifact: otherwise later
+    # runs would "reuse" data that will never be on disk
+    assert not store.exists("x")
+    with pytest.raises(KeyError):
+        store.get("x")
+    store.close()
+
+
+def test_repeated_puts_coalesce_to_latest(tmp_path):
+    root = str(tmp_path / "a")
+    store = ArtifactStore(root=root)
+    for seed in range(6):
+        store.put("x", _table(64, seed=seed))
+    store.flush()
+    store2 = ArtifactStore(root=root)
+    np.testing.assert_array_equal(
+        np.asarray(store2.get("x").col("a")),
+        np.asarray(_table(64, seed=5).col("a")))
+    store.close()
+    store2.close()
+
+
+def test_delete_cancels_pending_write(tmp_path):
+    root = str(tmp_path / "a")
+    store = ArtifactStore(root=root)
+    store.put("x", _table(64))
+    store.delete("x")
+    store.flush()
+    assert not store.exists("x")
+    store2 = ArtifactStore(root=root)
+    assert not store2.exists("x")
+    store.close()
+    store2.close()
+
+
+def test_synchronous_mode_still_supported(tmp_path):
+    store = ArtifactStore(root=str(tmp_path / "a"), write_behind=False)
+    store.put("x", _table(64))
+    assert os.path.exists(os.path.join(store._path("x"), "data.npz"))
+    store.flush()                        # no-op, must not hang
+    store.close()
+
+
+# ------------------------------------------------- naming & manifest fixes
+
+
+def test_name_encoding_is_injective():
+    names = ["art/q__v2", "a__b", "a/b", "a_u/b", "plain", "_u", "__",
+             "art/x_y/z__w"]
+    encoded = [_encode_name(n) for n in names]
+    assert len(set(encoded)) == len(names)
+    for n, e in zip(names, encoded):
+        assert _decode_name(e) == n
+        assert "/" not in e
+
+
+def test_double_underscore_name_survives_reopen(tmp_path):
+    root = str(tmp_path / "a")
+    store = ArtifactStore(root=root)
+    t = _table(32)
+    store.put("art/q__v2", t)
+    store.flush()
+    store2 = ArtifactStore(root=root)
+    assert store2.names() == ["art/q__v2"]
+    got = store2.get("art/q__v2")
+    np.testing.assert_array_equal(np.asarray(got.col("a")),
+                                  np.asarray(t.col("a")))
+    store.close()
+    store2.close()
+
+
+def test_manifest_capacity_matches_stored_data(tmp_path):
+    root = str(tmp_path / "a")
+    store = ArtifactStore(root=root)
+    # 256-capacity table with 10 valid rows in a compacted prefix: stored
+    # capacity shrinks to 16, and the manifest must say so
+    store.put("x", _table(256, nvalid=10))
+    store.flush()
+    with open(os.path.join(store._path("x"), "manifest.json")) as f:
+        manifest = json.load(f)
+    z = np.load(os.path.join(store._path("x"), "data.npz"))
+    assert manifest["capacity"] == len(z["__valid__"]) == 16
+    assert manifest["rows"] == 10
+    store2 = ArtifactStore(root=root)
+    assert store2.get("x").capacity == manifest["capacity"]
+    store.close()
+    store2.close()

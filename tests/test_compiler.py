@@ -3,7 +3,10 @@ reduce stage), content-addressed artifact naming is deterministic, and —
 the load-bearing property — executing the compiled workflow equals
 executing the original plan directly."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import plan as P
 from repro.dataflow.expr import Col

@@ -5,7 +5,8 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import plan as P
 from repro.core.matcher import match_bottom_up, pairwise_plan_traversal

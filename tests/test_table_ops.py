@@ -4,7 +4,8 @@ import collections
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import plan as P
 from repro.dataflow.expr import Col
