@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   Figs 13+14 + Table 1  NH / H_C / H_A      (heuristics)
   Fig 16     projection data-reduction sweep (projection_sweep)
   Fig 17     filter selectivity sweep        (filter_sweep)
+  beyond     budgeted-repository policy sweep (policy_bench)
 """
 from __future__ import annotations
 
@@ -20,11 +21,12 @@ sys.path.insert(0, _ROOT)
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 from benchmarks import (core_bench, filter_sweep, heuristics,  # noqa
-                        prefix_reuse_bench, projection_sweep, store_overhead,
-                        subjob_reuse, whole_job_reuse)
+                        policy_bench, prefix_reuse_bench, projection_sweep,
+                        store_overhead, subjob_reuse, whole_job_reuse)
 
 SUITES = {
     "core": core_bench.run,
+    "policy": policy_bench.run,
     "fig9_whole_job": whole_job_reuse.run,
     "fig10_12_subjob": subjob_reuse.run,
     "fig11_overhead": store_overhead.run,
@@ -34,20 +36,23 @@ SUITES = {
     "beyond_prefix_reuse": prefix_reuse_bench.run,
 }
 
+# suites that accept a --label (snapshots into BENCH_core.json)
+LABELLED = {"core", "policy"}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(SUITES) + [None])
     ap.add_argument("--label", default=None,
                     help="run label recorded in BENCH_core.json "
-                         "(core suite only)")
+                         "(core/policy suites)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in SUITES.items():
         if args.only and name != args.only:
             continue
         t0 = time.time()
-        if name == "core":
+        if name in LABELLED:
             fn(label=args.label)
         else:
             fn()

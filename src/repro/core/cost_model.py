@@ -1,0 +1,173 @@
+"""Repository economics: the cost model behind keep/evict decisions
+(paper §5; gain/loss framing after Chakroborti et al., arXiv:2202.06473;
+DESIGN.md §9).
+
+The paper decides *which* job and sub-job outputs to materialize from
+collected plan statistics.  This module is the single place those
+statistics meet a price:
+
+  * **IO price** — load/store bandwidth, calibrated online from the
+    artifact store's measured transfer samples (`calibrate_io`), so the
+    same policy code prices a device-cache hit (~free) and a cold disk
+    read (bytes / bandwidth) correctly.
+  * **Plan statistics** — per-operator rows/bytes/producer-cost keyed by
+    *structural* fingerprint (dataset versions masked), fed by the
+    executor's per-op cost attribution (`JobStats.op_cost_s`).  Keying
+    structurally lets statistics survive dataset-version churn: the
+    artifact of a churned input can never be reused (rule R4), but the
+    knowledge "this operator is expensive and recurs" can.
+  * **Decisions** — `should_materialize` (sub-job admission at
+    enumeration time) and `benefit_per_byte` (the knapsack-style ranking
+    the byte-budgeted repository evicts by).
+
+Benefit model (Eq. analogous to paper Eq. 1/2):
+
+  savings_per_reuse = producer_cost − load_cost(bytes)
+  benefit           = savings_per_reuse × expected_future_uses
+  materialize iff     benefit > store_cost(bytes) + fixed_io
+  evict by ascending  benefit / bytes  (recency-decayed)
+
+`expected_future_uses` is a history-repeats estimator: every *observed
+execution* of an operator was a missed reuse opportunity, so an operator
+seen k times is predicted to recur ~k more times; a repository entry's
+future uses decay with time since last use (half-life) from its hit
+count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass
+class OpStats:
+    """Collected statistics for one structural operator fingerprint."""
+    times_seen: int = 0           # executions observed (missed reuses)
+    rows_out: int = 0
+    bytes_out: int = 0            # estimate until stored once, then exact
+    bytes_exact: bool = False
+    producer_cost_s: float = 0.0  # EWMA cumulative cost to (re)compute
+    last_seen: float = 0.0
+
+
+class CostModel:
+    def __init__(self,
+                 load_bandwidth_bytes_s: float = 2e9,
+                 store_bandwidth_bytes_s: float = 2e9,
+                 fixed_io_s: float = 1e-5,
+                 ewma_alpha: float = 0.5,
+                 reuse_halflife_s: float = 1800.0,
+                 prior_uses: float = 0.5,
+                 max_expected_uses: float = 64.0):
+        self.load_bw = load_bandwidth_bytes_s
+        self.store_bw = store_bandwidth_bytes_s
+        self.fixed_io_s = fixed_io_s
+        self.alpha = ewma_alpha
+        self.halflife_s = reuse_halflife_s
+        self.prior_uses = prior_uses
+        self.max_expected_uses = max_expected_uses
+        self.op_stats: Dict[str, OpStats] = {}
+
+    # ------------------------------------------------------------- IO price
+    def calibrate_io(self, store) -> None:
+        """Pull measured (bytes, seconds) transfer totals from an
+        `ArtifactStore` and update the bandwidth estimates.  Disk-read
+        samples take priority: cache/memory hits are near-free, and a
+        blended average would price cold reads at ~zero.  A pure
+        in-memory store (no disk samples) calibrates from its memory
+        samples — there, loads genuinely are that cheap.  A minimum
+        sample mass guards against one-off timing flukes."""
+        io = getattr(store, "io_stats", None)
+        if io is None:
+            return
+        s = io() if callable(io) else io
+        if s.get("load_bytes", 0) > 1 << 16 and s.get("load_s", 0.0) > 0:
+            self.load_bw = s["load_bytes"] / s["load_s"]
+        elif s.get("memload_bytes", 0) > 1 << 16 \
+                and s.get("memload_s", 0.0) > 0:
+            self.load_bw = s["memload_bytes"] / s["memload_s"]
+        if s.get("store_bytes", 0) > 1 << 16 and s.get("store_s", 0.0) > 0:
+            self.store_bw = s["store_bytes"] / s["store_s"]
+
+    def load_cost_s(self, nbytes: int) -> float:
+        return self.fixed_io_s + nbytes / max(self.load_bw, 1.0)
+
+    def store_cost_s(self, nbytes: int) -> float:
+        return self.fixed_io_s + nbytes / max(self.store_bw, 1.0)
+
+    # ----------------------------------------------------- plan statistics
+    def observe_op(self, struct_fp: str, *, rows_out: int, bytes_out: int,
+                   producer_cost_s: float, now: Optional[float] = None) -> None:
+        """Record one observed execution of an operator (its sub-job was
+        computed, not reused).  `bytes_out` may be an estimate; it is
+        replaced by the exact artifact size via `observe_stored_bytes`."""
+        st = self.op_stats.get(struct_fp)
+        if st is None:
+            st = self.op_stats[struct_fp] = OpStats()
+        st.times_seen += 1
+        st.rows_out = rows_out
+        if not st.bytes_exact:
+            st.bytes_out = bytes_out
+        if st.producer_cost_s == 0.0:
+            st.producer_cost_s = producer_cost_s
+        else:
+            st.producer_cost_s += self.alpha * (producer_cost_s
+                                                - st.producer_cost_s)
+        st.last_seen = now if now is not None else time.time()
+
+    def observe_stored_bytes(self, struct_fp: str, nbytes: int) -> None:
+        st = self.op_stats.get(struct_fp)
+        if st is not None:
+            st.bytes_out = nbytes
+            st.bytes_exact = True
+
+    def stats_for(self, struct_fp: str) -> Optional[OpStats]:
+        return self.op_stats.get(struct_fp)
+
+    # -------------------------------------------------------------- decide
+    def savings_per_reuse_s(self, producer_cost_s: float,
+                            nbytes: int) -> float:
+        return producer_cost_s - self.load_cost_s(nbytes)
+
+    def expected_future_uses(self, past_uses: float, ref_time: float,
+                             now: Optional[float] = None) -> float:
+        now = now if now is not None else time.time()
+        decay = 0.5 ** (max(now - ref_time, 0.0) / self.halflife_s)
+        return min(self.max_expected_uses,
+                   (past_uses + self.prior_uses) * decay)
+
+    def should_materialize(self, struct_fp: str,
+                           now: Optional[float] = None) -> bool:
+        """Sub-job admission: materialize only when the predicted benefit
+        (savings × expected reuses) exceeds the store cost.  Operators
+        never observed before are NOT materialized — the first execution
+        collects their statistics, the second pays the store only if
+        history says it recurs and saves time."""
+        st = self.op_stats.get(struct_fp)
+        if st is None or st.times_seen < 1:
+            return False
+        savings = self.savings_per_reuse_s(st.producer_cost_s, st.bytes_out)
+        if savings <= 0.0:
+            return False
+        uses = self.expected_future_uses(st.times_seen, st.last_seen, now)
+        return savings * uses > self.store_cost_s(st.bytes_out)
+
+    def entry_benefit_s(self, entry, now: Optional[float] = None) -> float:
+        """Predicted total future time saved by keeping a repository
+        entry: savings per reuse times recency-decayed expected uses.
+        Past evidence is actual reuse hits plus the executions observed
+        before materialization (`history_uses`) — both predict future
+        demand, and without the latter a fresh entry for a known-hot
+        operator would rank below every incumbent and thrash."""
+        cost = entry.producer_cost_s or entry.exec_time_s
+        savings = max(self.savings_per_reuse_s(cost, entry.bytes_out), 0.0)
+        ref = entry.last_used or entry.created_at
+        past = entry.use_count + getattr(entry, "history_uses", 0.0)
+        return savings * self.expected_future_uses(past, ref, now)
+
+    def benefit_per_byte(self, entry, now: Optional[float] = None) -> float:
+        """Eviction rank: entries are kept greedily by benefit density,
+        the classic approximation to the 0/1 knapsack a byte-budgeted
+        repository actually solves."""
+        return self.entry_benefit_s(entry, now) / max(entry.bytes_out, 1)

@@ -1,6 +1,6 @@
-"""Sub-job enumeration (paper §4).
+"""Sub-job enumeration (paper §4; cost-driven mode in DESIGN.md §9).
 
-For every physical operator selected by the active heuristic, inject a
+For every physical operator selected by the active policy, inject a
 Split + Store so its output is materialized during job execution and
 becomes a repository candidate:
 
@@ -8,7 +8,13 @@ becomes a repository candidate:
     FOREACH, Pig's projection carrier);
   * Aggressive   H_A — H_C plus the expensive operators: JOIN, GROUPBY,
     COGROUP;
-  * NoHeuristic  NH  — every operator.
+  * NoHeuristic  NH  — every operator;
+  * Cost         —   any operator, but only when the cost model predicts
+    the benefit of keeping it (recompute savings × expected reuses)
+    exceeds the cost of storing it.  Operators are identified by the
+    *structural* (version-blind) fingerprint so the prediction survives
+    dataset churn; never-seen operators are not materialized — their
+    first execution only collects statistics.
 
 Candidate artifacts are named by the fingerprint of the *original-form*
 operator (pre-rewrite), so the same logical value always maps to the same
@@ -18,9 +24,10 @@ repository this time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from ..dataflow.compiler import art_name
+from .cost_model import CostModel
 from .plan import Operator, PhysicalPlan, split, store
 
 CONSERVATIVE = frozenset({"PROJECT", "FILTER", "FOREACH"})
@@ -31,6 +38,7 @@ HEURISTICS = {
     "conservative": CONSERVATIVE,
     "aggressive": AGGRESSIVE,
     "none": ALL_OPS,          # the paper's "No Heuristic" policy
+    "cost": ALL_OPS,          # candidate universe; cost model selects
     "off": frozenset(),       # no sub-job materialization at all
 }
 
@@ -40,13 +48,28 @@ class Candidate:
     artifact: str
     plan: PhysicalPlan        # original-form Load...→op→Store
     exec_op_uid: int          # uid of the op in the executed plan
+    struct_fp: str = ""       # version-blind fingerprint (cost-model key)
 
 
 def enumerate_subjobs(exec_plan: PhysicalPlan, origin: Dict[int, Operator],
-                      orig_plan: PhysicalPlan,
-                      heuristic: str) -> tuple[PhysicalPlan, List[Candidate]]:
+                      orig_plan: PhysicalPlan, heuristic: str,
+                      cost_model: Optional[CostModel] = None
+                      ) -> tuple[PhysicalPlan, List[Candidate]]:
+    """Inject Split+Store sinks for every sub-job the active policy
+    wants materialized and return (augmented plan, candidates).
+
+    ``exec_plan`` is the (possibly rewritten) plan about to execute;
+    ``origin`` maps its operators back to ``orig_plan`` (the original,
+    pre-rewrite form), which names the candidate artifacts.  In
+    ``"cost"`` mode a ``cost_model`` is required: an operator is
+    materialized only if ``cost_model.should_materialize`` approves its
+    structural fingerprint (predicted benefit > store cost)."""
     kinds = HEURISTICS[heuristic]
+    use_cost = heuristic == "cost"
+    if use_cost and cost_model is None:
+        raise ValueError('heuristic "cost" requires a cost_model')
     orig_fps = orig_plan.fingerprints()
+    struct_fps = orig_plan.structural_fingerprints()
 
     existing = {s.params["name"] for s in exec_plan.sinks
                 if s.kind == "STORE"}
@@ -58,6 +81,9 @@ def enumerate_subjobs(exec_plan: PhysicalPlan, origin: Dict[int, Operator],
         orig = origin.get(id(op))
         if orig is None:
             continue
+        if use_cost and not cost_model.should_materialize(
+                struct_fps[id(orig)]):
+            continue
         name = art_name(orig_fps[id(orig)])
         if name in existing:
             continue
@@ -66,7 +92,8 @@ def enumerate_subjobs(exec_plan: PhysicalPlan, origin: Dict[int, Operator],
         candidates.append(Candidate(
             artifact=name,
             plan=orig_plan.subplan_upto(orig, name),
-            exec_op_uid=op.uid))
+            exec_op_uid=op.uid,
+            struct_fp=struct_fps[id(orig)]))
     return PhysicalPlan(sinks), candidates
 
 
@@ -75,6 +102,7 @@ def whole_job_candidates(exec_plan: PhysicalPlan, origin: Dict[int, Operator],
     """Every job output is a repository candidate (paper §4 ¶2) — at zero
     extra cost, since workflow outputs are stored anyway."""
     orig_fps = orig_plan.fingerprints()
+    struct_fps = orig_plan.structural_fingerprints()
     out: List[Candidate] = []
     for s in exec_plan.sinks:
         if s.kind != "STORE":
@@ -89,5 +117,6 @@ def whole_job_candidates(exec_plan: PhysicalPlan, origin: Dict[int, Operator],
         out.append(Candidate(
             artifact=s.params["name"],
             plan=orig_plan.subplan_upto(orig, s.params["name"]),
-            exec_op_uid=target.uid))
+            exec_op_uid=target.uid,
+            struct_fp=struct_fps[id(orig)]))
     return out

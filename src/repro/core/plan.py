@@ -166,16 +166,32 @@ class PhysicalPlan:
         return succ
 
     # -- fingerprints ----------------------------------------------------------
-    def fingerprints(self) -> Dict[int, str]:
+    def _fingerprints(self, version_sensitive: bool) -> Dict[int, str]:
         fp: Dict[int, str] = {}
         for op in self.topo():
             in_fps = [fp[id(i)] for i in op.inputs]
             if op.kind in _COMMUTATIVE_KINDS:
                 in_fps = sorted(in_fps)
+            sig = op.local_sig()
+            if not version_sensitive and op.kind == "LOAD":
+                sig = (op.kind, (op.params["dataset"],))
             h = hashlib.sha256(
-                repr((op.local_sig(), tuple(in_fps))).encode()).hexdigest()
+                repr((sig, tuple(in_fps))).encode()).hexdigest()
             fp[id(op)] = h
         return fp
+
+    def fingerprints(self) -> Dict[int, str]:
+        return self._fingerprints(version_sensitive=True)
+
+    def structural_fingerprints(self) -> Dict[int, str]:
+        """Fingerprints with LOAD dataset *versions* masked out.
+
+        Artifact identity must be version-sensitive (eviction rule R4:
+        a churned input invalidates the artifact), but the cost model's
+        plan *statistics* should not be — "this operator recurs and is
+        expensive" survives a dataset version bump.  Statistics are
+        therefore keyed by this version-blind variant (DESIGN.md §9)."""
+        return self._fingerprints(version_sensitive=False)
 
     def fingerprint_of(self, op: Operator) -> str:
         return self.fingerprints()[id(op)]
@@ -216,6 +232,39 @@ class PhysicalPlan:
 
     def n_ops(self) -> int:
         return len(self.topo())
+
+
+def rebind_load_versions(plan: PhysicalPlan,
+                         versions: Dict[str, int]) -> PhysicalPlan:
+    """Return a copy of ``plan`` whose LOAD operators carry the given
+    dataset versions (untouched subgraphs are shared, like `replace`).
+
+    Workload drivers build queries from version-agnostic templates; this
+    stamps the catalog's *current* versions into the plan so that LOAD
+    fingerprints — and therefore matching — respect rule R4 after
+    dataset churn."""
+    mapping: Dict[int, Operator] = {}
+
+    def rebuild(op: Operator) -> Operator:
+        if id(op) in mapping:
+            return mapping[id(op)]
+        if op.kind == "LOAD":
+            ds = op.params["dataset"]
+            if ds in versions and op.params.get("version", 0) != versions[ds]:
+                new = Operator("LOAD", dict(op.params), [])
+                new.params["version"] = versions[ds]
+            else:
+                new = op
+        else:
+            new_inputs = [rebuild(i) for i in op.inputs]
+            if all(a is b for a, b in zip(new_inputs, op.inputs)):
+                new = op
+            else:
+                new = Operator(op.kind, dict(op.params), new_inputs)
+        mapping[id(op)] = new
+        return new
+
+    return PhysicalPlan([rebuild(s) for s in plan.sinks])
 
 
 def plan_signature(plan: PhysicalPlan) -> str:

@@ -1,4 +1,5 @@
-"""The ReStore repository (paper §2.2, §3 ordering rules, §5 management).
+"""The ReStore repository (paper §2.2, §3 ordering rules, §5 management;
+budget economics in DESIGN.md §9).
 
 One entry per stored job/sub-job output: the physical plan that produced
 it, the artifact name in the store, and execution statistics.  Entries are
@@ -16,13 +17,30 @@ Eviction (paper §5 rules):
   R4  evict entries whose source datasets changed (handled structurally:
       Load fingerprints embed dataset versions, so stale entries can never
       match — ``evict_stale`` garbage-collects them)
+
+Byte budget (DESIGN.md §9): when ``budget_bytes`` is set, ``add`` is no
+longer an unconditional put.  Admission may evict lower-value entries to
+make room (deleting their artifacts from the bound store) and rejects the
+newcomer when the incumbents are worth more.  Two ranking policies:
+
+  * ``"cost"`` — benefit-per-byte density from the `CostModel` (greedy
+    knapsack: keep the entries whose predicted future time savings per
+    stored byte are highest);
+  * ``"lru"``  — recency only (the unconditional-keep baseline: always
+    admit, evict least-recently-used to fit).
+
+Entries whose artifacts are **pinned** (the driver pins a workflow's
+job-boundary artifacts while it runs, since downstream jobs load them)
+are never chosen as budget-eviction victims and always admitted; the
+driver calls ``rebalance`` after unpinning to settle back under budget.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
+from .cost_model import CostModel
 from .matcher import match_bottom_up
 from .plan import PhysicalPlan, plan_signature
 
@@ -35,10 +53,17 @@ class RepositoryEntry:
     bytes_in: int = 0
     bytes_out: int = 0
     rows_out: int = 0
-    exec_time_s: float = 0.0      # ET of the producing (sub-)job
+    exec_time_s: float = 0.0      # ET of the producing job (whole job)
+    producer_cost_s: float = 0.0  # cumulative cost of this entry's sub-job
     created_at: float = 0.0
     last_used: float = 0.0
     use_count: int = 0
+    # executions of this operator observed BEFORE materialization (each
+    # was a missed reuse): seeds the expected-uses estimate so a fresh
+    # entry for a known-hot operator is not ranked below incumbents and
+    # store-then-rejected every event
+    history_uses: float = 0.0
+    saved_s_total: float = 0.0    # realized savings credited on each reuse
     source_versions: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
@@ -52,18 +77,45 @@ class RepositoryEntry:
 class Repository:
     def __init__(self, keep_only_reducing: bool = False,
                  keep_only_time_saving: bool = False,
-                 load_bandwidth_bytes_s: float = 2e9):
+                 load_bandwidth_bytes_s: float = 2e9,
+                 budget_bytes: Optional[int] = None,
+                 policy: str = "cost",
+                 cost_model: Optional[CostModel] = None):
+        if policy not in ("cost", "lru"):
+            raise ValueError(f"unknown eviction policy {policy!r}")
         self.entries: List[RepositoryEntry] = []
         self.by_sig: Dict[str, RepositoryEntry] = {}
         self.keep_only_reducing = keep_only_reducing
         self.keep_only_time_saving = keep_only_time_saving
         self.load_bw = load_bandwidth_bytes_s
+        self.budget_bytes = budget_bytes
+        self.policy = policy
+        self.cost_model = cost_model or CostModel(
+            load_bandwidth_bytes_s=load_bandwidth_bytes_s)
+        self.pinned: Set[str] = set()
+        self.evictions = 0            # budget evictions (not R3/R4)
+        self.rejections = 0           # budget admission rejections
+        self._store = None            # bound by the ReStore driver
         self._ordered_dirty = True
         self._ordered: List[RepositoryEntry] = []
 
+    # ------------------------------------------------------------- binding
+    def bind_store(self, store) -> None:
+        """Attach the artifact store so budget eviction (and R3/R4 when
+        called without an explicit store) can delete evicted artifacts."""
+        self._store = store
+
+    def pin(self, artifacts) -> None:
+        self.pinned.update(artifacts)
+
+    def unpin(self, artifacts) -> None:
+        self.pinned.difference_update(artifacts)
+
     # ------------------------------------------------------------- insert
     def add(self, entry: RepositoryEntry) -> bool:
-        """Apply keep-rules R1/R2, then insert (idempotent by signature)."""
+        """Apply keep-rules R1/R2 and the byte-budget admission policy,
+        then insert (idempotent by signature).  Returns True iff the
+        entry is now in the repository."""
         if entry.signature in self.by_sig:
             return False
         if self.keep_only_reducing and entry.bytes_out >= entry.bytes_in:
@@ -73,10 +125,82 @@ class Repository:
             if entry.exec_time_s <= load_time:
                 return False        # rule R2 (Eq. 1/2 estimate)
         entry.created_at = entry.created_at or time.time()
+        if self.budget_bytes is not None and not self._admit(entry):
+            self.rejections += 1
+            return False
         self.entries.append(entry)
         self.by_sig[entry.signature] = entry
         self._ordered_dirty = True
         return True
+
+    # ------------------------------------------------------------- budget
+    def _score(self, e: RepositoryEntry, now: float) -> float:
+        """Eviction rank (ascending = evicted first)."""
+        if self.policy == "lru":
+            return e.last_used or e.created_at
+        return self.cost_model.benefit_per_byte(e, now)
+
+    def _select_victims(self, need_bytes: int, now: float,
+                        stop_score: Optional[float] = None):
+        """Pick unpinned entries in ascending `_score` order until
+        ``need_bytes`` would be freed (or, with ``stop_score``, until
+        the next victim would rank at/above it).  Selection only — the
+        caller applies `_apply_eviction` once its condition holds.
+        Returns (victims, bytes_freed)."""
+        victims, freed = [], 0
+        for e in sorted((e for e in self.entries
+                         if e.artifact not in self.pinned),
+                        key=lambda e: self._score(e, now)):
+            if freed >= need_bytes:
+                break
+            if stop_score is not None and self._score(e, now) >= stop_score:
+                break               # incumbents from here on are worth more
+            victims.append(e)
+            freed += e.bytes_out
+        return victims, freed
+
+    def _apply_eviction(self, victims) -> None:
+        if not victims:
+            return
+        drop_ids = {id(v) for v in victims}
+        self._replace([e for e in self.entries if id(e) not in drop_ids],
+                      victims, self._store)
+        self.evictions += len(victims)
+
+    def _admit(self, entry: RepositoryEntry) -> bool:
+        """Knapsack-style admission: free enough bytes by evicting
+        entries ranked below the newcomer; reject the newcomer when the
+        incumbents are worth more (cost policy) or nothing evictable is
+        left (both policies).  Pinned entries always enter — their
+        artifacts exist regardless (workflow outputs), registration just
+        makes them matchable — and are reconciled by `rebalance`."""
+        if entry.artifact in self.pinned:
+            return True
+        need = self.total_stored_bytes() + entry.bytes_out - self.budget_bytes
+        if need <= 0:
+            return True
+        if entry.bytes_out > self.budget_bytes:
+            return False
+        now = time.time()
+        stop = self._score(entry, now) if self.policy == "cost" else None
+        victims, freed = self._select_victims(need, now, stop_score=stop)
+        if freed < need:
+            return False            # incumbents worth more: reject newcomer
+        self._apply_eviction(victims)
+        return True
+
+    def rebalance(self) -> int:
+        """Evict lowest-ranked unpinned entries until the repository fits
+        its byte budget again (no-op without a budget).  Called by the
+        driver after unpinning a finished workflow's artifacts."""
+        if self.budget_bytes is None:
+            return 0
+        excess = self.total_stored_bytes() - self.budget_bytes
+        if excess <= 0:
+            return 0
+        victims, _ = self._select_victims(excess, time.time())
+        self._apply_eviction(victims)
+        return len(victims)
 
     # ------------------------------------------------------------- ordering
     def ordered(self) -> List[RepositoryEntry]:
@@ -98,29 +222,40 @@ class Repository:
         return match_bottom_up(a.plan, b.plan) is not None
 
     # ------------------------------------------------------------- use/evict
-    def touch(self, entry: RepositoryEntry):
+    def record_use(self, entry: RepositoryEntry,
+                   saved_s: float = 0.0) -> None:
+        """Record a reuse hit: bumps recency/hit-count (feeding both LRU
+        and the cost model's expected-uses estimate) and credits the
+        realized time savings to the entry."""
         entry.last_used = time.time()
         entry.use_count += 1
+        entry.saved_s_total += saved_s
+
+    # backwards-compatible alias (pre-§9 API)
+    def touch(self, entry: RepositoryEntry):
+        self.record_use(entry)
 
     def evict_unused(self, window_s: float, store=None) -> int:
-        """Rule R3."""
+        """Rule R3: drop entries not used within ``window_s`` seconds
+        (artifacts deleted from ``store``, defaulting to the bound one)."""
         now = time.time()
         keep, drop = [], []
         for e in self.entries:
             ref = e.last_used or e.created_at
             (keep if now - ref <= window_s else drop).append(e)
-        self._replace(keep, drop, store)
+        self._replace(keep, drop, store if store is not None else self._store)
         return len(drop)
 
-    def evict_stale(self, catalog) -> int:
+    def evict_stale(self, catalog, store=None) -> int:
         """Rule R4 garbage collection: an entry whose recorded source
-        versions no longer match the catalog can never match again."""
+        versions no longer match the catalog can never match again.  Its
+        artifact is deleted from ``store`` (default: the bound store)."""
         keep, drop = [], []
         for e in self.entries:
             stale = any(catalog.version(ds) != v
                         for ds, v in e.source_versions.items())
             (drop if stale else keep).append(e)
-        self._replace(keep, drop, None)
+        self._replace(keep, drop, store if store is not None else self._store)
         return len(drop)
 
     def _replace(self, keep, drop, store):
@@ -140,12 +275,15 @@ class Repository:
 
 
 def make_entry(plan: PhysicalPlan, artifact: str, *, bytes_in=0, bytes_out=0,
-               rows_out=0, exec_time_s=0.0,
+               rows_out=0, exec_time_s=0.0, producer_cost_s=0.0,
+               history_uses=0.0,
                source_versions: Optional[Dict[str, int]] = None
                ) -> RepositoryEntry:
     return RepositoryEntry(plan=plan, artifact=artifact,
                            signature=plan_signature(plan),
                            bytes_in=bytes_in, bytes_out=bytes_out,
                            rows_out=rows_out, exec_time_s=exec_time_s,
+                           producer_cost_s=producer_cost_s,
+                           history_uses=history_uses,
                            created_at=time.time(),
                            source_versions=dict(source_versions or {}))

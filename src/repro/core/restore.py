@@ -1,9 +1,18 @@
-"""The ReStore driver (paper Fig. 7, §6.2).
+"""The ReStore driver (paper Fig. 7, §6.2; economics in DESIGN.md §9).
 
 Mirrors the extended JobControlCompiler: jobs are processed in dependency
 order; each job's plan goes through (1) matching + rewriting against the
 repository, (2) sub-job enumeration, then is executed; statistics are
 retrieved and the outputs registered in the repository.
+
+Beyond the paper's driver, every execution feeds the repository's cost
+model: per-op producer costs (attributed from the job's wall time),
+output sizes, and the store's measured IO bandwidth.  Under the
+``"cost"`` heuristic those statistics decide which sub-jobs are
+materialized, and under a repository byte budget they decide which
+entries survive — a candidate the repository rejects has its artifact
+deleted from the store again (admission replaces the old unconditional
+put).
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ class JobReport:
     stats: Optional[JobStats]
     n_ops_before: int = 0
     n_ops_after: int = 0
+    rejected_candidates: List[str] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -54,14 +64,27 @@ class ReStore:
                  heuristic: str = "aggressive",
                  use_algorithm1: bool = False,
                  rewrite_enabled: bool = True,
-                 measure_exec: bool = False):
+                 measure_exec: bool = False,
+                 repeats: int = 5):
         self.catalog = catalog
         self.store = store
         self.repo = repository if repository is not None else Repository()
-        self.engine = Engine(catalog, store, measure_exec=measure_exec)
+        self.repo.bind_store(store)
+        self.engine = Engine(catalog, store, measure_exec=measure_exec,
+                             repeats=repeats)
         self.heuristic = heuristic
         self.use_algorithm1 = use_algorithm1
         self.rewrite_enabled = rewrite_enabled
+        # boundary artifact -> source-dataset versions it was derived
+        # from, so entries of downstream jobs (whose plans load art/...
+        # names) still carry the *transitive* source versions rule R4's
+        # garbage collector needs
+        self._art_versions: Dict[str, Dict[str, int]] = {}
+        # artifacts pinned mid-run beyond the boundary names: when a
+        # reused job ALIASES its output to a repository artifact, that
+        # backing artifact must survive budget eviction until the
+        # workflow is done (downstream jobs load it through the alias)
+        self._run_pins: set = set()
 
     # ------------------------------------------------------------------
     def run_plan(self, plan: PhysicalPlan):
@@ -69,10 +92,20 @@ class ReStore:
 
     def run_workflow(self, wf: Workflow):
         reports: List[JobReport] = []
-        for job in wf.jobs:
-            reports.append(self._process_job(job))
-        results = {user: self.store.get(ds)
-                   for user, ds in wf.final_outputs.items()}
+        # job-boundary artifacts are loaded by downstream jobs of THIS
+        # workflow: pin them so budget eviction cannot delete them
+        # mid-run, then settle back under budget once the run is over
+        boundary = {o for job in wf.jobs for o in job.outputs}
+        self.repo.pin(boundary)
+        try:
+            for job in wf.jobs:
+                reports.append(self._process_job(job))
+            results = {user: self.store.get(ds)
+                       for user, ds in wf.final_outputs.items()}
+        finally:
+            self.repo.unpin(boundary | self._run_pins)
+            self._run_pins = set()
+        self.repo.rebalance()
         # workflow end is a durability point for the write-behind store
         self.store.flush()
         return results, RunReport(reports)
@@ -81,6 +114,20 @@ class ReStore:
     def _process_job(self, job: Job) -> JobReport:
         # a job whose outputs all exist is fully answered by the store
         if all(self.store.exists(o) for o in job.outputs):
+            # this is the hottest reuse path (identical recurring jobs):
+            # credit the backing entries — resolving aliases, since a
+            # previously reused job serves its output THROUGH an alias
+            # to the backing artifact — or budget eviction would rank
+            # exactly the most-reused artifacts as unused
+            outs = {self.store._resolve(o) for o in job.outputs} \
+                | set(job.outputs)
+            cm = self.repo.cost_model
+            for e in self.repo.entries:
+                if e.artifact in outs:
+                    saved = cm.savings_per_reuse_s(
+                        e.producer_cost_s or e.exec_time_s, e.bytes_out)
+                    self.repo.record_use(e, saved_s=max(saved, 0.0))
+            self._pin_for_run(outs)
             return JobReport(job.job_id, False, list(job.outputs), [], None,
                              job.plan.n_ops(), 0)
 
@@ -96,16 +143,24 @@ class ReStore:
 
         if is_trivial(plan):
             # fully reused: alias outputs to the loaded artifacts
+            trivial_versions = {}
+            for e in used:
+                trivial_versions.update(e.source_versions)
             for s in plan.sinks:
                 self.store.alias(s.params["name"],
                                  s.inputs[0].params["dataset"])
+                self._art_versions[s.params["name"]] = dict(trivial_versions)
+                # the alias target backs this job's output for the rest
+                # of the workflow: keep it safe from budget eviction
+                self._pin_for_run({self.store._resolve(s.params["name"])})
             return JobReport(job.job_id, False,
                              [e.artifact for e in used], [], None,
                              n_before, plan.n_ops())
 
         exec_plan, cands = enumerate_subjobs(plan, origin, job.plan,
-                                             self.heuristic)
-        cands = cands + whole_job_candidates(plan, origin, job.plan)
+                                             self.heuristic,
+                                             cost_model=self.repo.cost_model)
+        whole = whole_job_candidates(plan, origin, job.plan)
 
         exec_job = Job(job.job_id, exec_plan,
                        inputs=sorted({o.params["dataset"]
@@ -114,21 +169,90 @@ class ReStore:
                        blocking=job.blocking)
         outputs, stats = self.engine.run_job(exec_job)
 
-        stored = []
-        versions = {ds: self.catalog.version(ds) for ds in exec_job.inputs
-                    if not ds.startswith("art/")}
-        for c in cands:
+        self._observe_execution(job.plan, exec_plan, origin, stats)
+
+        stored, rejected = [], []
+        versions: Dict[str, int] = {}
+        for ds in exec_job.inputs:
+            if ds.startswith("art/"):
+                versions.update(self._versions_of_artifact(ds))
+            else:
+                versions[ds] = self.catalog.version(ds)
+        for o in exec_job.outputs:
+            self._art_versions[o] = dict(versions)
+        for c, injected in [(c, True) for c in cands] + \
+                           [(c, False) for c in whole]:
             if not self.store.exists(c.artifact):
                 continue
+            nbytes = self.store.nbytes(c.artifact)
+            self.repo.cost_model.observe_stored_bytes(c.struct_fp, nbytes)
+            op_hist = self.repo.cost_model.stats_for(c.struct_fp)
             entry = make_entry(
                 c.plan, c.artifact,
                 bytes_in=stats.bytes_in,
-                bytes_out=self.store.nbytes(c.artifact),
+                bytes_out=nbytes,
                 rows_out=stats.op_rows.get(c.exec_op_uid, 0),
                 exec_time_s=stats.wall_s,
+                producer_cost_s=stats.op_cost_s.get(c.exec_op_uid,
+                                                    stats.wall_s),
+                history_uses=op_hist.times_seen if op_hist else 0.0,
                 source_versions=versions)
             if self.repo.add(entry):
                 stored.append(c.artifact)
+            elif injected and entry.signature not in self.repo.by_sig \
+                    and c.artifact not in job.outputs:
+                # an injected sub-job artifact the repository refused to
+                # keep is dead weight: nothing will ever match it, so
+                # reclaim its bytes (whole-job outputs stay — they are
+                # the workflow's actual results)
+                self.store.delete(c.artifact)
+                rejected.append(c.artifact)
 
         return JobReport(job.job_id, True, [e.artifact for e in used],
-                         stored, stats, n_before, exec_plan.n_ops())
+                         stored, stats, n_before, exec_plan.n_ops(),
+                         rejected_candidates=rejected)
+
+    def _pin_for_run(self, names) -> None:
+        """Pin artifacts until the current workflow run finishes (used
+        for alias targets that back reused job outputs)."""
+        self._run_pins.update(names)
+        self.repo.pin(names)
+
+    def _versions_of_artifact(self, name: str) -> Dict[str, int]:
+        """Transitive source versions of a boundary artifact: from this
+        driver's run history, falling back to the repository entry that
+        recorded the artifact (a fresh driver over a warm repo)."""
+        v = self._art_versions.get(name)
+        if v is not None:
+            return v
+        for e in self.repo.entries:
+            if e.artifact == name:
+                return e.source_versions
+        return {}
+
+    # ------------------------------------------------------------------
+    def _observe_execution(self, orig_plan: PhysicalPlan,
+                           exec_plan: PhysicalPlan,
+                           origin: Dict[int, object],
+                           stats: JobStats) -> None:
+        """Feed one job's measured statistics into the cost model: per-op
+        rows / byte estimates / attributed producer cost, keyed by
+        structural fingerprint, plus the store's IO bandwidth samples.
+        Every executed operator counts as a missed reuse opportunity —
+        exactly the signal `should_materialize` needs next time."""
+        cm = self.repo.cost_model
+        struct_fps = orig_plan.structural_fingerprints()
+        row_width = stats.bytes_in / max(stats.rows_in, 1)
+        for op in exec_plan.topo():
+            if op.kind in ("LOAD", "STORE", "SPLIT"):
+                continue
+            orig = origin.get(id(op))
+            if orig is None or id(orig) not in struct_fps:
+                continue
+            rows = stats.op_rows.get(op.uid, 0)
+            cm.observe_op(struct_fps[id(orig)],
+                          rows_out=rows,
+                          bytes_out=int(rows * row_width),
+                          producer_cost_s=stats.op_cost_s.get(
+                              op.uid, stats.wall_s))
+        cm.calibrate_io(self.store)

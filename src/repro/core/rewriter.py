@@ -63,6 +63,17 @@ def _replace_tracking(plan: PhysicalPlan, old: Operator, new: Operator,
 def rewrite_plan(plan: PhysicalPlan, repo: Repository,
                  use_algorithm1: bool = False,
                  max_rewrites: int = 64) -> RewriteResult:
+    """Rewrite ``plan`` against the repository until no entry matches.
+
+    Each round scans ``repo.ordered()`` (the paper's partial order, so
+    the first hit is the best hit); the matched region is replaced by a
+    Load of the entry's artifact and a fresh scan starts, letting
+    several repository plans rewrite one job.  Every hit is recorded via
+    ``repo.record_use`` with the predicted time saved, which feeds both
+    recency-based eviction and the cost model's expected-reuse
+    statistics (DESIGN.md §9).  Returns the rewritten plan, the entries
+    applied (in order), and the rewritten-op -> original-op map the
+    sub-job enumerator needs."""
     origin: Dict[int, Operator] = {id(op): op for op in plan.topo()}
     used: List[RepositoryEntry] = []
 
@@ -88,7 +99,9 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
         new_load = load(entry.artifact)
         plan, origin = _replace_tracking(plan, anchor, new_load, origin)
         used.append(entry)
-        repo.touch(entry)
+        saved = repo.cost_model.savings_per_reuse_s(
+            entry.producer_cost_s or entry.exec_time_s, entry.bytes_out)
+        repo.record_use(entry, saved_s=max(saved, 0.0))
     return RewriteResult(plan, used, origin)
 
 

@@ -113,7 +113,10 @@ def repository_to_json(repo) -> str:
             "signature": e.signature, "bytes_in": e.bytes_in,
             "bytes_out": e.bytes_out, "rows_out": e.rows_out,
             "exec_time_s": e.exec_time_s, "created_at": e.created_at,
+            "producer_cost_s": e.producer_cost_s,
+            "history_uses": e.history_uses,
             "last_used": e.last_used, "use_count": e.use_count,
+            "saved_s_total": e.saved_s_total,
             "source_versions": e.source_versions,
         })
     return json.dumps({"entries": entries}, indent=1)
@@ -129,8 +132,11 @@ def repository_from_json(text: str, repo=None):
             plan=plan, artifact=d["artifact"], signature=d["signature"],
             bytes_in=d["bytes_in"], bytes_out=d["bytes_out"],
             rows_out=d["rows_out"], exec_time_s=d["exec_time_s"],
+            producer_cost_s=d.get("producer_cost_s", 0.0),
+            history_uses=d.get("history_uses", 0.0),
             created_at=d["created_at"], last_used=d["last_used"],
             use_count=d["use_count"],
+            saved_s_total=d.get("saved_s_total", 0.0),
             source_versions=d["source_versions"])
         # integrity: a corrupted plan no longer matches its signature
         if P.plan_signature(plan) == e.signature:

@@ -38,11 +38,53 @@ class JobStats:
     bytes_out: int
     op_rows: Dict[int, int]
     join_overflow: int = 0
+    # op uid -> estimated cumulative seconds to produce that op's output
+    # (its whole input cone) — the producer cost of the sub-job rooted
+    # there, feeding the repository cost model (DESIGN.md §9)
+    op_cost_s: Dict[int, float] = dataclasses.field(default_factory=dict)
 
     @property
     def reduction(self) -> float:
         """input:output byte ratio — ordering rule 2 metric (paper §3)."""
         return self.bytes_in / max(self.bytes_out, 1)
+
+
+# Relative work weights for attributing a job's measured wall time over
+# its operators.  One jitted XLA computation cannot be timed per-op, so
+# the wall clock is split proportional to a rows-processed work model:
+# blocking (sort/shuffle-backed) operators weigh several times a
+# streaming map op.  The absolute values only matter relative to each
+# other; the attributed times always sum to the measured wall time.
+_OP_WEIGHT = {
+    "LOAD": 0.5, "STORE": 0.05, "SPLIT": 0.02,
+    "PROJECT": 0.3, "FILTER": 0.4, "FOREACH": 0.6, "UNION": 0.3,
+    "DISTINCT": 2.5, "GROUPBY": 3.0, "JOIN": 4.0, "COGROUP": 4.0,
+}
+
+
+def attribute_op_costs(plan, op_rows: Dict[int, int],
+                       wall_s: float) -> Dict[int, float]:
+    """Split a job's wall time across its operators (weighted by rows
+    touched), then accumulate over each operator's input cone.  Returns
+    op uid -> cumulative producer cost in seconds; for a single-sink
+    plan the sink's value equals ``wall_s``."""
+    topo = plan.topo()
+    work: Dict[int, float] = {}
+    for op in topo:
+        rin = sum(op_rows.get(i.uid, 0) for i in op.inputs)
+        rout = op_rows.get(op.uid, 0)
+        work[op.uid] = _OP_WEIGHT.get(op.kind, 1.0) * (rin + rout + 64)
+    total = sum(work.values()) or 1.0
+    own = {uid: wall_s * w / total for uid, w in work.items()}
+    # cumulative over the input cone; a shared subtree is counted once
+    cones: Dict[int, frozenset] = {}
+    out: Dict[int, float] = {}
+    for op in topo:
+        cone = frozenset({op.uid}).union(*(cones[id(i)] for i in op.inputs)) \
+            if op.inputs else frozenset({op.uid})
+        cones[id(op)] = cone
+        out[op.uid] = sum(own[u] for u in cone)
+    return out
 
 
 class JitCache:
@@ -179,8 +221,9 @@ class Engine:
             if s is not None:
                 op_rows[op.uid] = int(s["rows_out"])
         ovf = sum(int(s.get("join_overflow", 0)) for s in stats.values())
+        op_cost = attribute_op_costs(job.plan, op_rows, wall)
         return outputs, JobStats(job.job_id, wall, rows_in, bytes_in,
-                                 rows_out, bytes_out, op_rows, ovf)
+                                 rows_out, bytes_out, op_rows, ovf, op_cost)
 
     def run_workflow(self, wf: Workflow) -> tuple[Dict[str, Table],
                                                   List[JobStats]]:

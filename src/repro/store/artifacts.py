@@ -289,6 +289,18 @@ class ArtifactStore:
         self.mem: Dict[str, Table] = {}
         self.meta: Dict[str, dict] = {}
         self.aliases: Dict[str, str] = {}
+        # measured transfer samples (bytes moved, seconds on the caller's
+        # clock) — the repository cost model calibrates its load/store
+        # bandwidth estimates from these (DESIGN.md §9).  put() samples
+        # only the synchronous (on-critical-path) portion: with
+        # write-behind that is exactly what materialization costs a job.
+        # Loads are sampled per tier: disk reads under load_*, device-
+        # cache/memory hits under memload_* — blending them would let a
+        # few microsecond cache hits inflate the bandwidth estimate and
+        # price cold reads at ~zero.
+        self._io = {"load_bytes": 0, "load_s": 0.0,
+                    "memload_bytes": 0, "memload_s": 0.0,
+                    "store_bytes": 0, "store_s": 0.0}
         self.cache = DeviceCache(cache_bytes)
         self._wb = _WriteBehind(self, queue_depth) if write_behind else None
         if root:
@@ -362,7 +374,12 @@ class ArtifactStore:
         return bool(self.root) and os.path.exists(
             os.path.join(self._path(name), "manifest.json"))
 
+    def io_stats(self) -> dict:
+        """Measured transfer totals for cost-model calibration."""
+        return dict(self._io)
+
     def put(self, name: str, table: Table) -> dict:
+        t_start = time.perf_counter()
         name = self._resolve(name)
         # Stored artifacts shrink to the live row count (next power of 2):
         # this is what makes reusing a selective Filter/Project output
@@ -403,14 +420,19 @@ class ArtifactStore:
             self.cache.drop(name)
             self.meta.pop(name, None)
             raise
+        self._io["store_bytes"] += meta["nbytes"]
+        self._io["store_s"] += time.perf_counter() - t_start
         return meta
 
     def get(self, name: str) -> Table:
+        t_start = time.perf_counter()
         name = self._resolve(name)
         hit = self.cache.get(name)
         if hit is not None:
+            self._sample_load(name, t_start, tier="memload")
             return hit
         if name in self.mem:
+            self._sample_load(name, t_start, tier="memload")
             return self.mem[name]
         if not self.root:
             raise KeyError(name)
@@ -428,7 +450,14 @@ class ArtifactStore:
         t = Table({n: jnp.asarray(a) for n, a in cols.items()},
                   jnp.asarray(valid))
         self.cache.put(name, t, t.nbytes())
+        self._sample_load(name, t_start, tier="load")
         return t
+
+    def _sample_load(self, name: str, t_start: float, tier: str):
+        m = self.meta.get(name)
+        if m is not None:
+            self._io[tier + "_bytes"] += m["nbytes"]
+            self._io[tier + "_s"] += time.perf_counter() - t_start
 
     def delete(self, name: str):
         # cancel the pending/in-flight write FIRST: the flusher re-inserts
@@ -436,6 +465,10 @@ class ArtifactStore:
         # the cache entry before the cancel could resurrect the artifact
         if self.root and self._wb is not None:
             self._wb.cancel(name)
+        # drop any alias FROM this name: put() resolves aliases, so a
+        # dangling mapping would silently redirect a later re-store of
+        # the deleted name to the alias target
+        self.aliases.pop(name, None)
         self.mem.pop(name, None)
         self.meta.pop(name, None)
         self.cache.drop(name)

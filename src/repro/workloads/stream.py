@@ -1,0 +1,205 @@
+"""Multi-tenant workflow stream driver (DESIGN.md §9).
+
+Replays a configurable stream of PigMix-derived workflows through a
+single shared `ReStore`, the way the cross-industry workload study of
+Chen et al. (arXiv:1208.4174) describes production clusters: many
+tenants, zipfian query popularity (a few hot templates dominate, with a
+long tail), and periodic dataset-version churn that invalidates
+previously stored results (eviction rule R4).
+
+Every tenant draws from the same template universe but through its own
+popularity permutation, so tenants overlap on hot queries (cross-tenant
+reuse through the shared repository) while each also has private
+favourites.  Templates are version-agnostic; before each run the
+catalog's *current* dataset versions are stamped into the plan
+(`rebind_load_versions`), so churn is visible to matching.
+
+Modes (the policy arms compared by `benchmarks/policy_bench.py`):
+
+  * ``"off"``  — no reuse at all: every event runs against a fresh store
+    with rewriting disabled (the recompute-everything baseline);
+  * ``"keep"`` — store everything (NH enumeration), unbounded repository
+    (used to size the total candidate byte volume);
+  * ``"lru"``  — store everything, byte-budgeted repository with
+    recency-only (least-recently-used) eviction;
+  * ``"cost"`` — cost-model-driven materialization + benefit-per-byte
+    budgeted repository.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import plan as P
+from ..core.plan import rebind_load_versions
+from ..core.repository import Repository
+from ..core.restore import ReStore
+from ..dataflow.expr import Col
+from ..store.artifacts import ArtifactStore, Catalog
+from . import pigmix
+
+DATASETS = ("page_views", "users", "power_users")
+
+
+def _hi_rev() -> P.PhysicalPlan:
+    """High-revenue users: shares its projection prefix with L3."""
+    pv = P.project(P.load("page_views"), ["user", "estimated_revenue"])
+    f = P.filter_(pv, Col("estimated_revenue") > 50.0)
+    g = P.groupby(f, ["user"], {"hi": ("count", "estimated_revenue")})
+    return P.PhysicalPlan([P.store(g, "hi_rev_out")])
+
+
+def _busy_users() -> P.PhysicalPlan:
+    """Heavy-timespent users: shares its projection prefix with L5."""
+    pv = P.project(P.load("page_views"), ["user", "timespent"])
+    f = P.filter_(pv, Col("timespent") > 50)
+    g = P.groupby(f, ["user"], {"t": ("sum", "timespent")})
+    return P.PhysicalPlan([P.store(g, "busy_out")])
+
+
+def default_templates() -> List[Tuple[str, Callable[[], P.PhysicalPlan]]]:
+    return [
+        ("L2", pigmix.L2),
+        ("L3_sum", lambda: pigmix.L3("sum")),
+        ("L3_mean", lambda: pigmix.L3("mean")),
+        ("L3F", pigmix.L3F),
+        ("L4", pigmix.L4),
+        ("L5", pigmix.L5),
+        ("L6", pigmix.L6),
+        ("L7", pigmix.L7),
+        ("L8", pigmix.L8),
+        ("L11", lambda: pigmix.L11("power_users")),
+        ("hi_rev", _hi_rev),
+        ("busy_users", _busy_users),
+    ]
+
+
+@dataclasses.dataclass
+class StreamConfig:
+    n_events: int = 48
+    n_tenants: int = 3
+    zipf_s: float = 1.1           # template popularity skew
+    n_rows: int = 1 << 12
+    seed: int = 0
+    churn_every: int = 0          # bump page_views version every N events
+    cache_bytes: int = 64 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class StreamEvent:
+    idx: int
+    tenant: int
+    template: str
+    wall_s: float
+    n_executed: int
+    n_reused: int
+
+
+@dataclasses.dataclass
+class StreamResult:
+    mode: str
+    budget_bytes: Optional[int]
+    events: List[StreamEvent]
+    cum_wall_s: List[float]       # cumulative runtime after each event
+    total_wall_s: float
+    peak_store_bytes: int
+    repo_entries: int
+    repo_bytes: int
+    evictions: int
+    rejections: int
+
+    @property
+    def n_reused_total(self) -> int:
+        return sum(e.n_reused for e in self.events)
+
+
+def _event_schedule(cfg: StreamConfig, n_templates: int):
+    """Deterministic (tenant, template) sequence: zipfian rank
+    distribution mapped through a per-tenant popularity permutation."""
+    rng = np.random.default_rng(cfg.seed)
+    p = 1.0 / np.arange(1, n_templates + 1) ** cfg.zipf_s
+    p /= p.sum()
+    perms = [np.random.default_rng(cfg.seed + 101 + t)
+             .permutation(n_templates) for t in range(cfg.n_tenants)]
+    out = []
+    for _ in range(cfg.n_events):
+        tenant = int(rng.integers(cfg.n_tenants))
+        rank = int(rng.choice(n_templates, p=p))
+        out.append((tenant, int(perms[tenant][rank])))
+    return out
+
+
+def _make_restore(mode: str, catalog: Catalog, store: ArtifactStore,
+                  budget_bytes: Optional[int]) -> ReStore:
+    if mode == "keep":
+        repo = Repository()
+        heuristic = "none"
+    elif mode == "lru":
+        repo = Repository(budget_bytes=budget_bytes, policy="lru")
+        heuristic = "none"
+    elif mode == "cost":
+        repo = Repository(budget_bytes=budget_bytes, policy="cost")
+        heuristic = "cost"
+    else:
+        raise ValueError(f"unknown stream mode {mode!r}")
+    return ReStore(catalog, store, repo, heuristic=heuristic,
+                   measure_exec=True, repeats=1)
+
+
+def run_stream(mode: str, cfg: StreamConfig,
+               budget_bytes: Optional[int] = None,
+               templates=None) -> StreamResult:
+    """Replay the stream under one policy arm and return its timeline.
+
+    Runtime per event is the engine's timed window (jit warmed off the
+    clock, like every benchmark in this repo), summed over the event's
+    executed jobs — a fully reused job contributes zero."""
+    templates = templates or default_templates()
+    schedule = _event_schedule(cfg, len(templates))
+
+    store = ArtifactStore(cache_bytes=cfg.cache_bytes)
+    catalog = Catalog(store)
+    pigmix.register_all(catalog, n_rows=cfg.n_rows, seed=cfg.seed)
+    shared_rs = None
+    if mode != "off":
+        shared_rs = _make_restore(mode, catalog, store, budget_bytes)
+
+    events: List[StreamEvent] = []
+    cum: List[float] = []
+    total = 0.0
+    peak_bytes = 0
+    for i, (tenant, tidx) in enumerate(schedule):
+        if cfg.churn_every and i > 0 and i % cfg.churn_every == 0:
+            # dataset-version churn: the hot table is re-ingested; every
+            # artifact derived from the old version is stale (rule R4)
+            catalog.register("page_views",
+                             pigmix.gen_page_views(
+                                 cfg.n_rows,
+                                 seed=cfg.seed + 1000 + i))
+            if shared_rs is not None:
+                shared_rs.repo.evict_stale(catalog)
+        name, build = templates[tidx]
+        plan = rebind_load_versions(
+            build(), {ds: catalog.version(ds) for ds in DATASETS})
+        if mode == "off":
+            rs = ReStore(catalog, ArtifactStore(cache_bytes=cfg.cache_bytes),
+                         heuristic="off", rewrite_enabled=False,
+                         measure_exec=True, repeats=1)
+        else:
+            rs = shared_rs
+        _, report = rs.run_plan(plan)
+        wall = report.total_wall_s
+        total += wall
+        cum.append(total)
+        events.append(StreamEvent(i, tenant, name, wall,
+                                  report.n_executed, report.n_reused))
+        peak_bytes = max(peak_bytes, rs.store.total_bytes())
+
+    repo = shared_rs.repo if shared_rs is not None else Repository()
+    return StreamResult(
+        mode=mode, budget_bytes=budget_bytes, events=events,
+        cum_wall_s=cum, total_wall_s=total, peak_store_bytes=peak_bytes,
+        repo_entries=len(repo), repo_bytes=repo.total_stored_bytes(),
+        evictions=repo.evictions, rejections=repo.rejections)

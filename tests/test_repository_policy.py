@@ -1,0 +1,374 @@
+"""Repository economics: eviction rules R3/R4 (window semantics, store
+deletion), byte-budget admission/eviction ordering under both policies,
+the cost model's materialization decisions, and the executor's per-op
+cost attribution (DESIGN.md §9)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import plan as P
+from repro.core.cost_model import CostModel
+from repro.core.repository import Repository, make_entry
+from repro.core.restore import ReStore
+from repro.dataflow.executor import attribute_op_costs
+from repro.dataflow.expr import Col
+from repro.dataflow.table import Table
+from repro.store.artifacts import ArtifactStore, Catalog
+from repro.workloads import pigmix
+
+
+def _table(n=4):
+    return Table.from_numpy({"a": np.arange(n, dtype=np.int32)})
+
+
+def _entry(store, name, *, bytes_out=1000, producer_cost_s=1.0,
+           bytes_in=10_000):
+    """Distinct-signature entry whose artifact really exists in store."""
+    pl = P.PhysicalPlan([P.store(P.project(P.load("d"), [name]), name)])
+    store.put(name, _table())
+    return make_entry(pl, name, bytes_in=bytes_in, bytes_out=bytes_out,
+                      producer_cost_s=producer_cost_s)
+
+
+def _fresh_cm(**kw):
+    kw.setdefault("fixed_io_s", 0.0)
+    kw.setdefault("reuse_halflife_s", 1e9)   # no decay inside a test
+    return CostModel(**kw)
+
+
+# ---------------------------------------------------------------- R3 / R4
+
+def test_evict_unused_window_semantics_and_store_deletion():
+    store = ArtifactStore()
+    repo = Repository()
+    old = _entry(store, "art/old")
+    new = _entry(store, "art/new")
+    repo.add(old)
+    repo.add(new)
+    old.last_used = time.time() - 100.0
+    new.last_used = time.time()
+    assert repo.evict_unused(10.0, store=store) == 1
+    assert [e.artifact for e in repo.entries] == ["art/new"]
+    assert not store.exists("art/old")
+    assert store.exists("art/new")
+
+
+def test_evict_unused_defaults_to_bound_store():
+    store = ArtifactStore()
+    repo = Repository()
+    repo.bind_store(store)
+    e = _entry(store, "art/x")
+    repo.add(e)
+    e.last_used = time.time() - 100.0
+    assert repo.evict_unused(1.0) == 1
+    assert not store.exists("art/x")
+
+
+def test_evict_stale_against_version_bumped_catalog_deletes_artifacts():
+    store = ArtifactStore()
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=1024)
+    rs = ReStore(cat, store, heuristic="aggressive")
+    rs.run_plan(pigmix.L3("sum"))
+    assert len(rs.repo) > 0
+    arts = [e.artifact for e in rs.repo.entries]
+    # re-ingest the source: every derived entry is stale (rule R4)
+    cat.register("page_views", pigmix.gen_page_views(1024, seed=7))
+    dropped = rs.repo.evict_stale(cat)          # bound store by default
+    assert dropped == len(arts)
+    assert len(rs.repo) == 0
+    for a in arts:
+        assert not store.exists(a)
+
+
+# ------------------------------------------------------------ byte budget
+
+def test_under_budget_admission_is_unconditional():
+    store = ArtifactStore()
+    repo = Repository(budget_bytes=10_000, policy="cost",
+                      cost_model=_fresh_cm())
+    repo.bind_store(store)
+    assert repo.add(_entry(store, "art/a", bytes_out=4000,
+                           producer_cost_s=1e-9))
+    assert repo.add(_entry(store, "art/b", bytes_out=4000,
+                           producer_cost_s=1e-9))
+    assert repo.total_stored_bytes() == 8000
+    assert repo.evictions == 0
+
+
+def test_lru_policy_evicts_least_recently_used():
+    store = ArtifactStore()
+    repo = Repository(budget_bytes=2000, policy="lru")
+    repo.bind_store(store)
+    e1 = _entry(store, "art/e1")
+    e2 = _entry(store, "art/e2")
+    repo.add(e1)
+    repo.add(e2)
+    repo.record_use(e1)                 # e2 becomes the LRU victim
+    assert repo.add(_entry(store, "art/e3"))
+    names = {e.artifact for e in repo.entries}
+    assert names == {"art/e1", "art/e3"}
+    assert not store.exists("art/e2")
+    assert repo.evictions == 1
+
+
+def test_cost_policy_evicts_lowest_benefit_per_byte():
+    store = ArtifactStore()
+    repo = Repository(budget_bytes=2000, policy="cost",
+                      cost_model=_fresh_cm())
+    repo.bind_store(store)
+    cheap = _entry(store, "art/cheap", producer_cost_s=1e-4)
+    rich = _entry(store, "art/rich", producer_cost_s=5.0)
+    repo.add(cheap)
+    repo.add(rich)
+    mid = _entry(store, "art/mid", producer_cost_s=1.0)
+    assert repo.add(mid)
+    names = {e.artifact for e in repo.entries}
+    assert names == {"art/rich", "art/mid"}
+    assert not store.exists("art/cheap")
+
+
+def test_cost_policy_rejects_newcomer_worth_less_than_incumbents():
+    store = ArtifactStore()
+    repo = Repository(budget_bytes=2000, policy="cost",
+                      cost_model=_fresh_cm())
+    repo.bind_store(store)
+    repo.add(_entry(store, "art/a", producer_cost_s=5.0))
+    repo.add(_entry(store, "art/b", producer_cost_s=5.0))
+    loser = _entry(store, "art/loser", producer_cost_s=1e-4)
+    assert not repo.add(loser)
+    assert repo.rejections == 1
+    assert {e.artifact for e in repo.entries} == {"art/a", "art/b"}
+    # the caller (ReStore) is responsible for deleting rejected artifacts
+
+
+def test_oversized_entry_rejected_outright():
+    store = ArtifactStore()
+    repo = Repository(budget_bytes=500, policy="cost",
+                      cost_model=_fresh_cm())
+    repo.bind_store(store)
+    assert not repo.add(_entry(store, "art/huge", bytes_out=1000))
+
+
+def test_pinned_entries_never_budget_evicted_and_rebalance_settles():
+    store = ArtifactStore()
+    repo = Repository(budget_bytes=1000, policy="cost",
+                      cost_model=_fresh_cm())
+    repo.bind_store(store)
+    pinned = _entry(store, "art/pin", producer_cost_s=1e-6)
+    repo.pin({"art/pin"})
+    assert repo.add(pinned)             # pinned: admitted unconditionally
+    rich = _entry(store, "art/rich", producer_cost_s=5.0)
+    assert not repo.add(rich)           # only evictable entry is pinned
+    repo.unpin({"art/pin"})
+    repo.add(rich)                      # now the pin is gone: evicts art/pin
+    assert {e.artifact for e in repo.entries} == {"art/rich"}
+    # rebalance on an over-budget repo trims the weakest entries
+    repo.budget_bytes = 0
+    assert repo.rebalance() == 1
+    assert len(repo) == 0
+    assert not store.exists("art/rich")
+
+
+def test_delete_drops_alias_so_restore_is_not_redirected():
+    store = ArtifactStore()
+    store.put("art/target", _table(4))
+    store.alias("art/out", "art/target")
+    assert store.exists("art/out")
+    store.delete("art/out")         # deletes through...: alias dropped
+    # re-storing the name must land under the name itself, not the
+    # stale alias target
+    store.put("art/out", _table(8))
+    assert int(store.get("art/out").num_valid()) == 8
+    assert int(store.get("art/target").num_valid()) == 4
+
+
+# -------------------------------------------------------------- cost model
+
+def test_should_materialize_requires_history_and_positive_savings():
+    cm = _fresh_cm()
+    assert not cm.should_materialize("never-seen")
+    cm.observe_op("hot", rows_out=100, bytes_out=1000, producer_cost_s=0.5)
+    assert cm.should_materialize("hot")
+    # producing is cheaper than reloading -> keep recomputing
+    slow = _fresh_cm(load_bandwidth_bytes_s=1.0)
+    slow.observe_op("big", rows_out=100, bytes_out=100_000,
+                    producer_cost_s=0.5)
+    assert not slow.should_materialize("big")
+
+
+def test_observe_stored_bytes_pins_exact_size():
+    cm = _fresh_cm()
+    cm.observe_op("x", rows_out=10, bytes_out=999, producer_cost_s=0.1)
+    cm.observe_stored_bytes("x", 123)
+    cm.observe_op("x", rows_out=10, bytes_out=5555, producer_cost_s=0.1)
+    assert cm.stats_for("x").bytes_out == 123   # estimate never overwrites
+
+
+def test_calibrate_io_from_store_samples(tmp_path):
+    # sentinel defaults: calibration must overwrite BOTH bandwidths
+    cm = CostModel(load_bandwidth_bytes_s=123.0,
+                   store_bandwidth_bytes_s=456.0)
+    store = ArtifactStore(root=str(tmp_path))
+    t = Table.from_numpy(
+        {"a": np.zeros(1 << 15, dtype=np.int64)})   # > calibration floor
+    store.put("big", t)
+    store.flush()
+    store.cache.drop("big")                         # force a real disk read
+    store.get("big")
+    cm.calibrate_io(store)
+    assert cm.load_bw != 123.0 and cm.load_bw > 0
+    assert cm.store_bw != 456.0 and cm.store_bw > 0
+    io = store.io_stats()
+    assert io["load_bytes"] > 1 << 16 and io["store_bytes"] > 1 << 16
+    store.close()
+
+
+def test_calibrate_io_prefers_disk_over_cache_hits(tmp_path):
+    """A storm of near-free cache hits must not inflate load bandwidth
+    past what the disk tier measured."""
+    store = ArtifactStore(root=str(tmp_path))
+    t = Table.from_numpy({"a": np.zeros(1 << 15, dtype=np.int64)})
+    store.put("big", t)
+    store.flush()
+    store.cache.drop("big")
+    store.get("big")                                # one disk read
+    for _ in range(50):
+        store.get("big")                            # cache hits
+    io = store.io_stats()
+    assert io["memload_bytes"] > io["load_bytes"]   # hits sampled apart
+    cm = CostModel()
+    cm.calibrate_io(store)
+    disk_bw = io["load_bytes"] / io["load_s"]
+    assert cm.load_bw == pytest.approx(disk_bw)
+    store.close()
+
+
+# ------------------------------------------------- executor cost attribution
+
+def test_attribute_op_costs_sums_to_wall_on_single_sink():
+    pv = P.project(P.load("d"), ["a"])
+    f = P.filter_(pv, Col("a") > 0)
+    plan = P.PhysicalPlan([P.store(f, "out")])
+    ops = plan.topo()
+    op_rows = {op.uid: 100 for op in ops}
+    cost = attribute_op_costs(plan, op_rows, wall_s=2.0)
+    sink = plan.sinks[0]
+    assert cost[sink.uid] == pytest.approx(2.0)
+    # cumulative cost grows monotonically downstream
+    assert cost[pv.uid] < cost[f.uid] < cost[sink.uid]
+
+
+# -------------------------------------------- structural fingerprints / R4
+
+def test_structural_fingerprints_mask_versions_and_rebind():
+    def q(version):
+        pv = P.project(P.load("page_views", version=version), ["user"])
+        return P.PhysicalPlan([P.store(pv, "out")])
+
+    v0, v1 = q(0), q(1)
+    assert (v0.fingerprints()[id(v0.sinks[0])]
+            != v1.fingerprints()[id(v1.sinks[0])])
+    assert (v0.structural_fingerprints()[id(v0.sinks[0])]
+            == v1.structural_fingerprints()[id(v1.sinks[0])])
+    rebound = P.rebind_load_versions(v0, {"page_views": 1})
+    assert (rebound.fingerprints()[id(rebound.sinks[0])]
+            == v1.fingerprints()[id(v1.sinks[0])])
+
+
+# --------------------------------------------------- cost heuristic (e2e)
+
+def test_cost_mode_first_sighting_stores_only_job_outputs():
+    store = ArtifactStore()
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=1024)
+    repo = Repository(cost_model=_fresh_cm())
+    rs = ReStore(cat, store, repo, heuristic="cost")
+    _, rep = rs.run_plan(pigmix.L3("sum"))
+    stored = [a for j in rep.jobs for a in j.stored_candidates]
+    assert len(stored) == 2             # the 2 whole-job outputs, nothing else
+
+
+def test_cost_mode_materializes_recurring_subjob_then_reuses_it():
+    store = ArtifactStore()
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=1024)
+    repo = Repository(cost_model=_fresh_cm())
+    rs = ReStore(cat, store, repo, heuristic="cost")
+    rs.run_plan(pigmix.L3("sum"))       # 1st sighting of the projection
+
+    pv = P.project(P.load("page_views"), ["user", "estimated_revenue"])
+    q1 = P.PhysicalPlan([P.store(
+        P.filter_(pv, Col("estimated_revenue") > 50.0), "q1_out")])
+    sfp = q1.structural_fingerprints()[id(pv)]
+    st = repo.cost_model.stats_for(sfp)
+    assert st is not None and st.times_seen >= 1   # stats wiring works
+    st.producer_cost_s = 10.0           # make the benefit decisive
+
+    _, rep1 = rs.run_plan(q1)
+    stored = [a for j in rep1.jobs for a in j.stored_candidates]
+    assert len(stored) >= 2             # job output + materialized projection
+
+    pv2 = P.project(P.load("page_views"), ["user", "estimated_revenue"])
+    q2 = P.PhysicalPlan([P.store(
+        P.filter_(pv2, Col("estimated_revenue") > 80.0), "q2_out")])
+    _, rep2 = rs.run_plan(q2)
+    assert any(j.reused_artifacts for j in rep2.jobs)
+
+
+def test_budgeted_restore_respects_budget_and_reclaims_rejects():
+    store = ArtifactStore()
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=1024)
+    # size the candidate volume, then replay with a 30% budget
+    probe = ReStore(cat, ArtifactStore(), Repository(),
+                    heuristic="aggressive")
+    probe.run_plan(pigmix.L3("sum"))
+    total = probe.repo.total_stored_bytes()
+    assert total > 0
+
+    budget = int(total * 0.3)
+    repo = Repository(budget_bytes=budget, policy="cost",
+                      cost_model=_fresh_cm())
+    rs = ReStore(cat, store, repo, heuristic="aggressive")
+    _, rep = rs.run_plan(pigmix.L3("sum"))
+    assert repo.total_stored_bytes() <= budget
+    assert not repo.pinned              # run-scoped pins are released
+    # a repeat run (served via aliases/store fast path) releases pins too
+    rs.run_plan(pigmix.L3("sum"))
+    assert not repo.pinned
+    # every surviving byte is accounted for: an artifact in the store is
+    # either a repository entry or a workflow job output; rejected
+    # injected candidates were deleted again
+    entry_arts = {e.artifact for e in repo.entries}
+    job_outputs = {a for j in rep.jobs for a in j.reused_artifacts} | \
+                  {a for j in rep.jobs for a in j.stored_candidates}
+    from repro.dataflow.compiler import compile_workflow
+    wf_outputs = {o for j in compile_workflow(pigmix.L3("sum")).jobs
+                  for o in j.outputs}
+    for n in store.names():
+        if not n.startswith("art/"):
+            continue
+        assert n in entry_arts or n in wf_outputs, n
+
+
+# ----------------------------------------------------------- stream driver
+
+def test_stream_driver_smoke_all_modes():
+    from repro.workloads.stream import StreamConfig, run_stream
+    cfg = StreamConfig(n_events=6, n_tenants=2, n_rows=512,
+                       churn_every=3, seed=1)
+    keep = run_stream("keep", cfg)
+    assert len(keep.events) == 6 and keep.total_wall_s > 0
+    assert keep.peak_store_bytes > 0
+    off = run_stream("off", cfg)
+    assert off.n_reused_total == 0
+    budget = max(int(keep.peak_store_bytes * 0.25), 1)
+    for mode in ("lru", "cost"):
+        r = run_stream(mode, cfg, budget_bytes=budget)
+        assert len(r.events) == 6
+        assert r.repo_bytes <= budget
+    # identical schedule across modes (same seed)
+    assert [e.template for e in keep.events] == \
+           [e.template for e in off.events]

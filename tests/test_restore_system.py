@@ -68,7 +68,8 @@ def test_heuristics_store_sets_are_nested():
         stored[h] = {a for j in rep.jobs for a in j.stored_candidates}
     assert stored["conservative"] <= stored["aggressive"] <= stored["none"]
     assert CONSERVATIVE < AGGRESSIVE
-    assert set(HEURISTICS) == {"conservative", "aggressive", "none", "off"}
+    assert set(HEURISTICS) == {"conservative", "aggressive", "none", "off",
+                               "cost"}
 
 
 def test_off_heuristic_stores_only_job_outputs():

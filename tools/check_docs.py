@@ -1,0 +1,66 @@
+"""Docs reference checker: every ``DESIGN.md §N`` cited anywhere under
+``src/**`` must resolve to an actual ``## §N`` section of DESIGN.md, so
+docstring references can't silently rot as the design doc evolves.
+
+Plain "paper §N" citations (the ReStore paper's own sections) and
+"EXPERIMENTS.md §..." notes are out of scope — only references that name
+DESIGN.md are checked.
+
+Usage: python tools/check_docs.py   (exit 0 = all references resolve)
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DESIGN = os.path.join(ROOT, "DESIGN.md")
+SRC = os.path.join(ROOT, "src")
+
+REF_RE = re.compile(r"DESIGN\.md[^§\n]{0,40}§(\d+)")
+SECTION_RE = re.compile(r"^##\s+§(\d+)\b", re.MULTILINE)
+
+
+def design_sections() -> set[str]:
+    with open(DESIGN) as f:
+        return set(SECTION_RE.findall(f.read()))
+
+
+def iter_source_files():
+    for dirpath, dirnames, filenames in os.walk(SRC):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in filenames:
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def main() -> int:
+    sections = design_sections()
+    if not sections:
+        print(f"error: no '## §N' sections found in {DESIGN}")
+        return 1
+    bad = []
+    n_refs = 0
+    for path in iter_source_files():
+        with open(path) as f:
+            text = f.read()
+        for m in REF_RE.finditer(text):
+            n_refs += 1
+            if m.group(1) not in sections:
+                line = text[:m.start()].count("\n") + 1
+                bad.append((os.path.relpath(path, ROOT), line, m.group(1)))
+    if bad:
+        for path, line, sec in bad:
+            print(f"{path}:{line}: reference to DESIGN.md §{sec}, "
+                  f"but DESIGN.md has no '## §{sec}' section")
+        print(f"\n{len(bad)} dangling reference(s); DESIGN.md defines "
+              f"§{{{', '.join(sorted(sections, key=int))}}}")
+        return 1
+    print(f"docs check OK: {n_refs} DESIGN.md § references across src/ "
+          f"all resolve ({len(sections)} sections defined)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
