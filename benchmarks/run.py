@@ -22,11 +22,13 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 from benchmarks import (core_bench, filter_sweep, heuristics,  # noqa
                         policy_bench, prefix_reuse_bench, projection_sweep,
-                        store_overhead, subjob_reuse, whole_job_reuse)
+                        semantic_reuse_bench, store_overhead, subjob_reuse,
+                        whole_job_reuse)
 
 SUITES = {
     "core": core_bench.run,
     "policy": policy_bench.run,
+    "semantic": semantic_reuse_bench.run,
     "fig9_whole_job": whole_job_reuse.run,
     "fig10_12_subjob": subjob_reuse.run,
     "fig11_overhead": store_overhead.run,
@@ -37,7 +39,7 @@ SUITES = {
 }
 
 # suites that accept a --label (snapshots into BENCH_core.json)
-LABELLED = {"core", "policy"}
+LABELLED = {"core", "policy", "semantic"}
 
 
 def main() -> None:

@@ -96,6 +96,18 @@ class CostModel:
     def store_cost_s(self, nbytes: int) -> float:
         return self.fixed_io_s + nbytes / max(self.store_bw, 1.0)
 
+    def compensation_cost_s(self, nbytes: int, n_ops: int = 1) -> float:
+        """Price of re-deriving an exact value from a *covering* artifact
+        (DESIGN.md §10): each compensation operator (residual FILTER,
+        narrowing PROJECT) is one streaming pass over the loaded bytes at
+        compute bandwidth — modelled as the load bandwidth, since both
+        are memory-bound scans — plus the fixed dispatch cost.  Semantic
+        reuse is credited with savings *net* of this, so a cheap-to-
+        recompute sub-job never looks better covered than recomputed."""
+        if n_ops <= 0:
+            return 0.0
+        return n_ops * (self.fixed_io_s + nbytes / max(self.load_bw, 1.0))
+
     # ----------------------------------------------------- plan statistics
     def observe_op(self, struct_fp: str, *, rows_out: int, bytes_out: int,
                    producer_cost_s: float, now: Optional[float] = None) -> None:

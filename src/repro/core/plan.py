@@ -19,7 +19,7 @@ import hashlib
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from ..dataflow.expr import Expr, agg_key
+from ..dataflow.expr import Expr, agg_key, pred_normal_key
 
 # operator kinds whose inputs are order-insensitive
 _COMMUTATIVE_KINDS = {"UNION"}
@@ -50,7 +50,9 @@ class Operator:
         if k == "FOREACH":
             return tuple(sorted((n, e.key()) for n, e in p["gens"].items()))
         if k == "FILTER":
-            return p["pred"].key()
+            # normalized digest: commuted / reassociated conjuncts
+            # fingerprint equal (DESIGN.md §10)
+            return pred_normal_key(p["pred"])
         if k == "JOIN":
             return (tuple(p["left_keys"]), tuple(p["right_keys"]),
                     p.get("expansion", 1))

@@ -63,6 +63,9 @@ class RepositoryEntry:
     # entry for a known-hot operator is not ranked below incumbents and
     # store-then-rejected every event
     history_uses: float = 0.0
+    # of use_count, hits where the entry only *covered* the query and a
+    # compensation chain re-derived the exact value (DESIGN.md §10)
+    semantic_uses: int = 0
     saved_s_total: float = 0.0    # realized savings credited on each reuse
     source_versions: Dict[str, int] = dataclasses.field(default_factory=dict)
 
@@ -95,6 +98,8 @@ class Repository:
         self.pinned: Set[str] = set()
         self.evictions = 0            # budget evictions (not R3/R4)
         self.rejections = 0           # budget admission rejections
+        self.exact_hits = 0           # record_use(kind="exact")
+        self.semantic_hits = 0        # record_use(kind="semantic")
         self._store = None            # bound by the ReStore driver
         self._ordered_dirty = True
         self._ordered: List[RepositoryEntry] = []
@@ -223,13 +228,23 @@ class Repository:
 
     # ------------------------------------------------------------- use/evict
     def record_use(self, entry: RepositoryEntry,
-                   saved_s: float = 0.0) -> None:
+                   saved_s: float = 0.0, kind: str = "exact") -> None:
         """Record a reuse hit: bumps recency/hit-count (feeding both LRU
         and the cost model's expected-uses estimate) and credits the
-        realized time savings to the entry."""
+        realized time savings to the entry.  ``kind="semantic"`` marks a
+        subsumption hit (DESIGN.md §10): callers pass savings net of the
+        compensation compute, and the split counters let the economics
+        of covering-but-inexact artifacts be audited separately."""
+        if kind not in ("exact", "semantic"):
+            raise ValueError(f"unknown reuse kind {kind!r}")
         entry.last_used = time.time()
         entry.use_count += 1
         entry.saved_s_total += saved_s
+        if kind == "semantic":
+            entry.semantic_uses += 1
+            self.semantic_hits += 1
+        else:
+            self.exact_hits += 1
 
     # backwards-compatible alias (pre-§9 API)
     def touch(self, entry: RepositoryEntry):

@@ -38,6 +38,7 @@ class JobReport:
     n_ops_before: int = 0
     n_ops_after: int = 0
     rejected_candidates: List[str] = dataclasses.field(default_factory=list)
+    n_semantic: int = 0               # subsumption hits among the reuses
 
 
 @dataclasses.dataclass
@@ -54,6 +55,10 @@ class RunReport:
         return sum(len(j.reused_artifacts) for j in self.jobs)
 
     @property
+    def n_semantic(self) -> int:
+        return sum(j.n_semantic for j in self.jobs)
+
+    @property
     def total_wall_s(self) -> float:
         return sum(j.stats.wall_s for j in self.jobs if j.stats)
 
@@ -64,6 +69,7 @@ class ReStore:
                  heuristic: str = "aggressive",
                  use_algorithm1: bool = False,
                  rewrite_enabled: bool = True,
+                 semantic: bool = True,
                  measure_exec: bool = False,
                  repeats: int = 5):
         self.catalog = catalog
@@ -75,6 +81,11 @@ class ReStore:
         self.heuristic = heuristic
         self.use_algorithm1 = use_algorithm1
         self.rewrite_enabled = rewrite_enabled
+        # subsumption fallback (DESIGN.md §10): when the exact probes of
+        # both reuse paths miss — the whole-job fast path (store hit on
+        # identical outputs) and the exact rewrite scan — covering
+        # artifacts may still answer sub-plans through compensation
+        self.semantic = semantic
         # boundary artifact -> source-dataset versions it was derived
         # from, so entries of downstream jobs (whose plans load art/...
         # names) still carry the *transitive* source versions rule R4's
@@ -132,10 +143,15 @@ class ReStore:
                              job.plan.n_ops(), 0)
 
         n_before = job.plan.n_ops()
+        n_semantic = 0
+        comp_ids = set()
         if self.rewrite_enabled:
             rw = rewrite_plan(job.plan, self.repo,
-                              use_algorithm1=self.use_algorithm1)
+                              use_algorithm1=self.use_algorithm1,
+                              semantic=self.semantic)
             plan, used, origin = rw.plan, rw.used, rw.origin
+            n_semantic = rw.n_semantic
+            comp_ids = rw.comp_op_ids
         else:
             plan = job.plan
             used = []
@@ -155,7 +171,8 @@ class ReStore:
                 self._pin_for_run({self.store._resolve(s.params["name"])})
             return JobReport(job.job_id, False,
                              [e.artifact for e in used], [], None,
-                             n_before, plan.n_ops())
+                             n_before, plan.n_ops(),
+                             n_semantic=n_semantic)
 
         exec_plan, cands = enumerate_subjobs(plan, origin, job.plan,
                                              self.heuristic,
@@ -169,7 +186,8 @@ class ReStore:
                        blocking=job.blocking)
         outputs, stats = self.engine.run_job(exec_job)
 
-        self._observe_execution(job.plan, exec_plan, origin, stats)
+        self._observe_execution(job.plan, exec_plan, origin, stats,
+                                skip_ids=comp_ids)
 
         stored, rejected = [], []
         versions: Dict[str, int] = {}
@@ -210,7 +228,8 @@ class ReStore:
 
         return JobReport(job.job_id, True, [e.artifact for e in used],
                          stored, stats, n_before, exec_plan.n_ops(),
-                         rejected_candidates=rejected)
+                         rejected_candidates=rejected,
+                         n_semantic=n_semantic)
 
     def _pin_for_run(self, names) -> None:
         """Pin artifacts until the current workflow run finishes (used
@@ -234,17 +253,23 @@ class ReStore:
     def _observe_execution(self, orig_plan: PhysicalPlan,
                            exec_plan: PhysicalPlan,
                            origin: Dict[int, object],
-                           stats: JobStats) -> None:
+                           stats: JobStats,
+                           skip_ids=frozenset()) -> None:
         """Feed one job's measured statistics into the cost model: per-op
         rows / byte estimates / attributed producer cost, keyed by
         structural fingerprint, plus the store's IO bandwidth samples.
         Every executed operator counts as a missed reuse opportunity —
-        exactly the signal `should_materialize` needs next time."""
+        exactly the signal `should_materialize` needs next time.
+        ``skip_ids`` holds the semantic compensation roots: they carry
+        the anchor's origin (so the enumerator can re-materialize the
+        exact value) but their execution is a reuse HIT, not a miss, and
+        their cheap residual-pass cost must not pollute the original
+        operator's producer-cost estimate (DESIGN.md §10)."""
         cm = self.repo.cost_model
         struct_fps = orig_plan.structural_fingerprints()
         row_width = stats.bytes_in / max(stats.rows_in, 1)
         for op in exec_plan.topo():
-            if op.kind in ("LOAD", "STORE", "SPLIT"):
+            if op.kind in ("LOAD", "STORE", "SPLIT") or id(op) in skip_ids:
                 continue
             orig = origin.get(id(op))
             if orig is None or id(orig) not in struct_fps:

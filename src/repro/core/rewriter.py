@@ -1,10 +1,19 @@
-"""Plan rewriting (paper §3).
+"""Plan rewriting (paper §3; semantic compensation DESIGN.md §10).
 
 Given a job's physical plan and the repository, repeatedly:
   scan the repository in its partial order; the first entry whose plan is
   contained in the job plan rewrites it — the matched region is replaced
   by a Load of the entry's artifact — then a fresh scan starts (so several
   repository plans can rewrite one job, exactly as in the paper).
+
+Beyond the paper, when a full exact scan comes up empty the rewriter
+probes the ``SemanticIndex``: a stored artifact that merely *covers* the
+matched region (weaker FILTER / wider PROJECT) is spliced in together
+with a compensation chain — FILTER(residual) and/or PROJECT(narrowing) on
+top of the Load — that re-derives the exact value.  The compensation root
+inherits the anchor's origin, so the enumerator can re-materialize the
+exact value under its canonical name (upgrading the semantic hit to an
+exact one for future runs).
 
 The rewriter tracks, for every operator of the rewritten plan, which
 operator of the *original* plan it computes.  The sub-job enumerator uses
@@ -14,10 +23,11 @@ the repository language canonical across runs (see DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
-from .matcher import FingerprintIndex, match_bottom_up, pairwise_plan_traversal
-from .plan import Operator, PhysicalPlan, load
+from .matcher import (FingerprintIndex, SemanticIndex, match_bottom_up,
+                      pairwise_plan_traversal, peel_repo_output)
+from .plan import Operator, PhysicalPlan, filter_, load, project
 from .repository import Repository, RepositoryEntry
 
 
@@ -26,11 +36,18 @@ class RewriteResult:
     plan: PhysicalPlan
     used: List[RepositoryEntry]              # entries applied, in order
     origin: Dict[int, Operator]              # rewritten op id -> original op
+    n_semantic: int = 0                      # of which, subsumption hits
+    # ids (in `plan`) of compensation-chain roots: these ops re-derive a
+    # reused value, so the driver must not record their execution as the
+    # original operator's cost / missed-reuse statistics
+    comp_op_ids: Set[int] = dataclasses.field(default_factory=set)
 
 
 def _replace_tracking(plan: PhysicalPlan, old: Operator, new: Operator,
-                      origin: Dict[int, Operator]) -> Tuple[PhysicalPlan,
-                                                            Dict[int, Operator]]:
+                      origin: Dict[int, Operator],
+                      tracked: Set[int]) -> Tuple[PhysicalPlan,
+                                                  Dict[int, Operator],
+                                                  Set[int]]:
     mapping: Dict[int, Operator] = {id(old): new}
     new_origin: Dict[int, Operator] = {}
 
@@ -57,28 +74,40 @@ def _replace_tracking(plan: PhysicalPlan, old: Operator, new: Operator,
     # the injected Load computes what `old` computed
     if id(old) in origin:
         new_origin[id(new)] = origin[id(old)]
-    return rewritten, new_origin
+    # carry tracked op ids through the rebuild (ops replaced away drop out)
+    new_tracked = {id(mapping[t]) for t in tracked if t in mapping}
+    return rewritten, new_origin, new_tracked
 
 
 def rewrite_plan(plan: PhysicalPlan, repo: Repository,
                  use_algorithm1: bool = False,
+                 semantic: bool = True,
                  max_rewrites: int = 64) -> RewriteResult:
     """Rewrite ``plan`` against the repository until no entry matches.
 
     Each round scans ``repo.ordered()`` (the paper's partial order, so
     the first hit is the best hit); the matched region is replaced by a
     Load of the entry's artifact and a fresh scan starts, letting
-    several repository plans rewrite one job.  Every hit is recorded via
-    ``repo.record_use`` with the predicted time saved, which feeds both
-    recency-based eviction and the cost model's expected-reuse
-    statistics (DESIGN.md §9).  Returns the rewritten plan, the entries
-    applied (in order), and the rewritten-op -> original-op map the
-    sub-job enumerator needs."""
+    several repository plans rewrite one job.  When an exact scan misses
+    and ``semantic`` is on, the round falls back to subsumption probes
+    (DESIGN.md §10): the anchor is replaced by the Load *plus* its
+    compensation chain, and the realized saving is net of the predicted
+    compensation compute.  Every hit is recorded via ``repo.record_use``
+    with the predicted time saved and its kind, which feeds recency
+    eviction, the cost model's expected-reuse statistics (DESIGN.md §9),
+    and the repository's exact/semantic hit counters.  Returns the
+    rewritten plan, the entries applied (in order), and the
+    rewritten-op -> original-op map the sub-job enumerator needs."""
     origin: Dict[int, Operator] = {id(op): op for op in plan.topo()}
     used: List[RepositoryEntry] = []
+    n_semantic = 0
+    comp_ids: Set[int] = set()
+    # entry plans are immutable: peel each once, not once per round
+    peels: Dict[int, Optional[tuple]] = {}
 
     for _ in range(max_rewrites):
         hit: Optional[Tuple[RepositoryEntry, Operator]] = None
+        index: Optional[FingerprintIndex] = None
         if use_algorithm1:
             # faithful sequential scan with Algorithm 1 per entry
             for entry in repo.ordered():
@@ -89,20 +118,54 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
         else:
             index = FingerprintIndex(plan)
             for entry in repo.ordered():
-                anchor = index.probe(entry.plan)
+                # entry.signature IS the output fingerprint: no per-probe
+                # Merkle pass over the entry plan
+                anchor = index.probe_fp(entry.signature)
                 if anchor is not None:
                     hit = (entry, anchor)
                     break
-        if hit is None:
-            break
-        entry, anchor = hit
-        new_load = load(entry.artifact)
-        plan, origin = _replace_tracking(plan, anchor, new_load, origin)
-        used.append(entry)
-        saved = repo.cost_model.savings_per_reuse_s(
-            entry.producer_cost_s or entry.exec_time_s, entry.bytes_out)
-        repo.record_use(entry, saved_s=max(saved, 0.0))
-    return RewriteResult(plan, used, origin)
+        cm = repo.cost_model
+        if hit is not None:
+            entry, anchor = hit
+            new_load = load(entry.artifact)
+            plan, origin, comp_ids = _replace_tracking(
+                plan, anchor, new_load, origin, comp_ids)
+            used.append(entry)
+            saved = cm.savings_per_reuse_s(
+                entry.producer_cost_s or entry.exec_time_s, entry.bytes_out)
+            repo.record_use(entry, saved_s=max(saved, 0.0))
+            continue
+        if semantic and not use_algorithm1:
+            sem = None
+            sem_index = SemanticIndex(plan, fps=index.fps)
+            for entry in repo.ordered():
+                if id(entry) not in peels:
+                    peels[id(entry)] = peel_repo_output(entry.plan)
+                m = sem_index.probe_peeled(peels[id(entry)])
+                if m is not None:
+                    sem = (entry, m)
+                    break
+            if sem is not None:
+                entry, m = sem
+                comp: Operator = load(entry.artifact)
+                if m.residual is not None:
+                    comp = filter_(comp, m.residual)
+                if m.narrow_cols is not None:
+                    comp = project(comp, m.narrow_cols)
+                plan, origin, comp_ids = _replace_tracking(
+                    plan, m.anchor, comp, origin, comp_ids)
+                comp_ids.add(id(comp))
+                used.append(entry)
+                n_semantic += 1
+                saved = cm.savings_per_reuse_s(
+                    entry.producer_cost_s or entry.exec_time_s,
+                    entry.bytes_out) - cm.compensation_cost_s(
+                        entry.bytes_out, m.n_comp_ops)
+                repo.record_use(entry, saved_s=max(saved, 0.0),
+                                kind="semantic")
+                continue
+        break
+    return RewriteResult(plan, used, origin, n_semantic, comp_ids)
 
 
 def is_trivial(plan: PhysicalPlan) -> bool:

@@ -116,6 +116,7 @@ def repository_to_json(repo) -> str:
             "producer_cost_s": e.producer_cost_s,
             "history_uses": e.history_uses,
             "last_used": e.last_used, "use_count": e.use_count,
+            "semantic_uses": e.semantic_uses,
             "saved_s_total": e.saved_s_total,
             "source_versions": e.source_versions,
         })
@@ -136,6 +137,7 @@ def repository_from_json(text: str, repo=None):
             history_uses=d.get("history_uses", 0.0),
             created_at=d["created_at"], last_used=d["last_used"],
             use_count=d["use_count"],
+            semantic_uses=d.get("semantic_uses", 0),
             saved_s_total=d.get("saved_s_total", 0.0),
             source_versions=d["source_versions"])
         # integrity: a corrupted plan no longer matches its signature

@@ -1,0 +1,248 @@
+"""Differential fuzzing of the reuse pipeline (DESIGN.md §10).
+
+Random logical plans (filters with random comparison predicates,
+projections, group-bys, joins over small generated tables) are executed
+three ways — plain (no stores, no rewriting), through ReStore cold, and
+through ReStore warm after seeding *related* plans (weakened predicates,
+widened projections, so the semantic subsumption path fires) — and every
+way must produce bit-identical sorted outputs.
+
+Bit-identity is achievable because the generated data is integer-valued
+(sums stay far below 2**24, so float32 aggregation is exact regardless
+of padding or artifact compaction).  A fixed-seed subset always runs;
+the hypothesis sweep runs wherever hypothesis is installed (the CI fuzz
+job).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import plan as P
+from repro.core.restore import ReStore
+from repro.dataflow.expr import BinOp, Col, Const, Expr
+from repro.dataflow.table import Table
+from repro.store.artifacts import ArtifactStore, Catalog
+
+N_FACT = 96
+N_DIM = 8
+
+
+def _fact(seed: int) -> Table:
+    rng = np.random.default_rng(seed)
+    return Table.from_numpy({
+        "k": rng.integers(0, N_DIM, N_FACT).astype(np.int32),
+        "v": rng.integers(0, 100, N_FACT).astype(np.int32),
+        # integer-valued float column: float32 sums stay exact
+        "w": rng.integers(0, 50, N_FACT).astype(np.float32),
+    })
+
+
+def _dim() -> Table:
+    ks = np.arange(N_DIM, dtype=np.int32)
+    return Table.from_numpy({"dk": ks, "extra": (ks * 7 % 5).astype(np.int32)})
+
+
+# ---------------------------------------------------------------------------
+# Random plan generation (np.random driven so it runs with or without
+# hypothesis; hypothesis supplies only the seed/depth)
+
+
+_CMPS = ("lt", "le", "gt", "ge", "eq", "ne")
+
+
+def _random_const(rng):
+    """Mostly ints; sometimes rounding-hostile floats (decimal fractions
+    are inexact in float32 — probing the implication checker's
+    conservative float32 handling end to end)."""
+    v = int(rng.integers(0, 100))
+    r = rng.random()
+    if r < 0.15:
+        return v + 0.1
+    if r < 0.25:
+        return v + 1e-9
+    return v
+
+
+def _random_atom(rng, cols) -> Expr:
+    c = Col(cols[int(rng.integers(0, len(cols)))])
+    cmp_op = _CMPS[int(rng.integers(0, len(_CMPS)))]
+    return BinOp(cmp_op, c, Const(_random_const(rng)))
+
+
+def _random_pred(rng, cols) -> Expr:
+    atoms = []
+    for _ in range(int(rng.integers(1, 3))):
+        a = _random_atom(rng, cols)
+        if rng.random() < 0.3:       # disjunctive clause
+            a = a | _random_atom(rng, cols)
+        atoms.append(a)
+    pred = atoms[0]
+    for a in atoms[1:]:
+        pred = pred & a
+    return pred
+
+
+def random_workflow(rng, depth: int) -> P.PhysicalPlan:
+    op = P.load("fact")
+    cols = ["k", "v", "w"]
+    joined = False
+    for _ in range(depth):
+        choice = int(rng.integers(0, 6))
+        if choice == 5:
+            choice = 0               # filters twice as likely: they are
+        if choice == 0:              # the semantic path's bread & butter
+            op = P.filter_(op, _random_pred(rng, cols))
+        elif choice == 1:
+            n_keep = int(rng.integers(1, len(cols) + 1))
+            keep = sorted(rng.choice(cols, size=n_keep, replace=False))
+            op = P.project(op, keep)
+            cols = keep
+        elif choice == 2 and "k" in cols and len(cols) > 1:
+            agg_col = next(c for c in cols if c != "k")
+            op = P.groupby(op, ["k"], {"s": ("sum", agg_col),
+                                       "n": ("count", agg_col),
+                                       "mx": ("max", agg_col)})
+            cols = ["k", "mx", "n", "s"]
+        elif choice == 3 and "k" in cols and not joined:
+            op = P.join(op, P.load("dim"), ["k"], ["dk"])
+            cols = sorted(set(cols) | {"dk", "extra"})
+            joined = True
+        else:
+            op = P.distinct(op)
+    return P.PhysicalPlan([P.store(op, "out")])
+
+
+# ---------------------------------------------------------------------------
+# Related-plan synthesis: weaker filters, wider projections
+
+
+def _weaken_pred(e: Expr, rng) -> Expr:
+    if isinstance(e, BinOp) and e.op == "and":
+        r = rng.random()
+        if r < 0.3:
+            return _weaken_pred(e.lhs, rng)     # drop a conjunct
+        return BinOp("and", _weaken_pred(e.lhs, rng),
+                     _weaken_pred(e.rhs, rng))
+    if isinstance(e, BinOp) and e.op in ("lt", "le", "gt", "ge", "eq") \
+            and isinstance(e.rhs, Const):
+        delta = int(rng.integers(1, 20))
+        v = e.rhs.value
+        if e.op in ("gt", "ge"):
+            return BinOp(e.op, e.lhs, Const(v - delta))
+        if e.op in ("lt", "le"):
+            return BinOp(e.op, e.lhs, Const(v + delta))
+        return BinOp("ge", e.lhs, Const(v))     # x==c weakened to x>=c
+    return e
+
+
+def weaken_plan(plan: P.PhysicalPlan, rng) -> P.PhysicalPlan:
+    """A *covering* variant: every FILTER keeps a weaker predicate, every
+    PROJECT may be dropped (the widest possible column set)."""
+    memo = {}
+
+    def rebuild(op):
+        if id(op) in memo:
+            return memo[id(op)]
+        ins = [rebuild(i) for i in op.inputs]
+        if op.kind == "FILTER":
+            new = P.filter_(ins[0], _weaken_pred(op.params["pred"], rng))
+        elif op.kind == "PROJECT" and rng.random() < 0.5:
+            new = ins[0]
+        else:
+            new = P.Operator(op.kind, dict(op.params), ins)
+        memo[id(op)] = new
+        return new
+
+    sinks = []
+    for s in plan.sinks:
+        new_in = rebuild(s.inputs[0])
+        if new_in.kind == "LOAD":
+            # weakening collapsed the whole chain: storing a raw source
+            # load is not a meaningful seed job, keep the original form
+            new_in = s.inputs[0]
+        sinks.append(P.store(new_in, s.params["name"]))
+    return P.PhysicalPlan(sinks)
+
+
+# ---------------------------------------------------------------------------
+# Differential harness
+
+
+def _fresh(seed: int, **kw) -> ReStore:
+    store = ArtifactStore()
+    cat = Catalog(store)
+    cat.register("fact", _fact(seed))
+    cat.register("dim", _dim())
+    return ReStore(cat, store, **kw)
+
+
+def _canon(table: Table):
+    d = table.to_numpy()                 # valid rows only
+    order = np.lexsort(tuple(d[c] for c in sorted(d, reverse=True)))
+    return {c: d[c][order] for c in sorted(d)}
+
+
+def _assert_identical(ref, got, label: str):
+    a, b = _canon(ref), _canon(got)
+    assert sorted(a) == sorted(b), f"{label}: column sets differ"
+    for c in a:
+        assert a[c].dtype == b[c].dtype, f"{label}:{c}: dtype differs"
+        assert np.array_equal(a[c], b[c]), \
+            f"{label}:{c}: rows differ\n{a[c]}\nvs\n{b[c]}"
+
+
+def check_differential(seed: int, depth: int) -> dict:
+    """One fuzz case.  Returns hit counters (for the smoke assertions)."""
+    rng = np.random.default_rng(seed)
+    plan = random_workflow(rng, depth)
+
+    ref_rs = _fresh(seed, heuristic="off", rewrite_enabled=False,
+                    semantic=False)
+    ref, _ = ref_rs.run_plan(plan)
+
+    # arm 2: ReStore cold, then the identical plan again (store fast path)
+    cold_rs = _fresh(seed, heuristic="aggressive")
+    got, _ = cold_rs.run_plan(plan)
+    _assert_identical(ref["out"], got["out"], "cold")
+    again, rep = cold_rs.run_plan(plan)
+    _assert_identical(ref["out"], again["out"], "warm-exact")
+    assert rep.n_executed == 0, "identical recurring job must fully reuse"
+
+    # arm 3: warm after seeding *related* (covering) plans
+    warm_rs = _fresh(seed, heuristic="aggressive")
+    for _ in range(2):
+        warm_rs.run_plan(weaken_plan(plan, rng))
+    sem_before = warm_rs.repo.semantic_hits
+    got3, rep3 = warm_rs.run_plan(plan)
+    _assert_identical(ref["out"], got3["out"], "warm-semantic")
+    return {"semantic_hits": warm_rs.repo.semantic_hits - sem_before,
+            "reused": rep3.n_reused}
+
+
+# always-on subset: exercises the harness in tier-1 without hypothesis
+@pytest.mark.parametrize("seed,depth", [(0, 2), (1, 2), (2, 2), (4, 3),
+                                        (6, 3), (5, 4)])
+def test_differential_fixed_seeds(seed, depth):
+    check_differential(seed, depth)
+
+
+def test_semantic_path_exercised():
+    """The designated seeds must drive the semantic (compensation) path —
+    otherwise the differential arms silently degrade to exact-only
+    coverage."""
+    hits = 0
+    for seed, depth in [(0, 2), (2, 2), (3, 2)]:
+        hits += check_differential(seed, depth)["semantic_hits"]
+    assert hits > 0, "no semantic hit across the designated seeds"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None, derandomize=True)
+    @given(seed=st.integers(0, 10**6), depth=st.integers(1, 4))
+    def test_differential_fuzz(seed, depth):
+        check_differential(seed, depth)

@@ -1,0 +1,198 @@
+"""Predicate normalization & implication (DESIGN.md §10): table-driven
+interval cases, conjunct containment, normalized digests, residuals —
+and the explicit NON-implications the semantic matcher must refuse."""
+import numpy as np
+import pytest
+
+from repro.core import plan as P
+from repro.dataflow.expr import (Col, Const, implies, pred_columns,
+                                 pred_normal_key, residual_pred, to_cnf)
+from repro.dataflow.table import Table
+
+x, y = Col("x"), Col("y")
+
+IMPLICATIONS = [
+    # interval reasoning on one column
+    (x > 20, x > 10),
+    (x > 10, x > 10),
+    (x >= 10, x >= 10),
+    (x > 10, x >= 10),
+    (x >= 11, x > 10),
+    (x == 5, x >= 5),
+    (x == 5, x <= 5),
+    (x == 5, x > 4),
+    (x == 5, x != 4),
+    (x < 3, x < 10),
+    (x < 10, x <= 10),
+    (x <= 9, x < 10),
+    (x > 10, x != 10),
+    (x >= 11, x != 10),
+    (x < 10, x != 10),
+    # constant-on-the-left form is normalized into the same atom
+    (Const(20) < x, x > 10),
+    (x > 20, Const(10) < x),
+    # conjunct subsets / commuted conjuncts
+    ((x > 20) & (y < 3), x > 10),
+    ((x > 20) & (y < 3), y < 3),
+    ((x > 5) & (y < 3), (y < 3) & (x > 5)),
+    ((x > 20) & (y < 3), (x > 10) & (y < 5)),
+    # disjunction weakening
+    (x > 20, (x > 10) | (y < 3)),
+    ((x > 20) | (y < 1), (x > 10) | (y < 3)),
+]
+
+NON_IMPLICATIONS = [
+    (x > 10, x > 20),                 # weaker never implies stronger
+    (x >= 10, x > 10),                # boundary point
+    (x != 10, x > 10),
+    (x >= 5, x == 5),
+    (x < 10, x < 3),
+    (x > 10, y > 10),                 # disjoint columns
+    ((x > 10) | (y < 3), x > 10),     # disjunction is weaker than atom
+    (x > 10, (x > 10) & (y < 3)),     # missing conjunct
+    ((x > 10) & (y < 5), (x > 20) & (y < 3)),
+]
+
+
+@pytest.mark.parametrize("p,q", IMPLICATIONS)
+def test_implies(p, q):
+    assert implies(p, q)
+
+
+@pytest.mark.parametrize("p,q", NON_IMPLICATIONS)
+def test_not_implies(p, q):
+    assert not implies(p, q)
+
+
+def test_implication_agrees_with_evaluation():
+    """Every table-driven pair checked against brute-force evaluation
+    over a value grid: implies=True rows must satisfy q wherever p."""
+    vals = np.arange(-2, 25, dtype=np.int32)
+    grid = Table.from_numpy({
+        "x": np.repeat(vals, len(vals)),
+        "y": np.tile(vals, len(vals)),
+    })
+    for p, q in IMPLICATIONS:
+        pv = np.asarray(p.eval(grid)).astype(bool)
+        qv = np.asarray(q.eval(grid)).astype(bool)
+        assert not (pv & ~qv).any(), (p.key(), q.key())
+    for p, q in NON_IMPLICATIONS:
+        pv = np.asarray(p.eval(grid)).astype(bool)
+        qv = np.asarray(q.eval(grid)).astype(bool)
+        assert (pv & ~qv).any(), \
+            f"counter-example missing on grid: {p.key()} vs {q.key()}"
+
+
+# ---------------------------------------------------------------------------
+# Normalized digests
+
+
+def test_commuted_conjuncts_hash_equal():
+    a = (x > 5) & (y < 3)
+    b = (y < 3) & (x > 5)
+    assert pred_normal_key(a) == pred_normal_key(b)
+    fa = P.PhysicalPlan([P.store(P.filter_(P.load("t"), a), "o")])
+    fb = P.PhysicalPlan([P.store(P.filter_(P.load("t"), b), "o")])
+    assert P.plan_signature(fa) == P.plan_signature(fb)
+
+
+def test_reassociated_conjuncts_hash_equal():
+    a = ((x > 5) & (y < 3)) & (x != 0)
+    b = (x > 5) & ((y < 3) & (x != 0))
+    assert pred_normal_key(a) == pred_normal_key(b)
+
+
+def test_flipped_comparison_hashes_equal():
+    assert pred_normal_key(Const(5) < x) == pred_normal_key(x > 5)
+
+
+def test_distinct_predicates_hash_differently():
+    assert pred_normal_key(x > 5) != pred_normal_key(x > 6)
+    assert pred_normal_key(x > 5) != pred_normal_key(x >= 5)
+    assert pred_normal_key(x > 5) != pred_normal_key(y > 5)
+    assert pred_normal_key((x > 5) & (y < 3)) != \
+        pred_normal_key((x > 5) | (y < 3))
+
+
+# ---------------------------------------------------------------------------
+# Residuals (the compensation predicate)
+
+
+def _sat(pred, t):
+    return np.asarray(pred.eval(t)).astype(bool)
+
+
+def test_residual_reconstructs_strong_predicate():
+    rng = np.random.default_rng(0)
+    t = Table.from_numpy({
+        "x": rng.integers(0, 40, 256).astype(np.int32),
+        "y": rng.integers(0, 10, 256).astype(np.int32),
+    })
+    cases = [
+        ((x > 20) & (y < 3), x > 10),
+        (x > 20, x > 10),
+        ((x > 20) & (y < 3), (x > 10) & (y < 3)),
+        (x == 5, x >= 5),
+    ]
+    for p, q in cases:
+        r = residual_pred(p, q)
+        assert r is not None
+        assert np.array_equal(_sat(q, t) & _sat(r, t), _sat(p, t))
+
+
+def test_residual_none_for_equivalent_predicates():
+    assert residual_pred(x > 10, Const(10) < x) is None
+    assert residual_pred((x > 5) & (y < 3), (y < 3) & (x > 5)) is None
+
+
+def test_pred_columns_and_cnf_shape():
+    p = (x > 20) & ((y < 3) | (x != 0))
+    assert pred_columns(p) == {"x", "y"}
+    clauses = to_cnf(p)
+    assert len(clauses) == 2
+    assert {len(c) for c in clauses} == {1, 2}
+
+
+# ---------------------------------------------------------------------------
+# Robustness: float32 rounding and CNF size bounds
+
+
+def test_float32_collapsed_constants_refuse_implication():
+    """Predicates evaluate against float32 columns: two reals that round
+    to the same float32 make 'strictly stronger' unsound, so the checker
+    must refuse (regression for the rounding soundness hole)."""
+    f32_tenth = float(np.float32(0.1))          # 0.10000000149011612
+    assert f32_tenth > 0.1                      # distinct as Python reals
+    assert not implies(x >= f32_tenth, x > 0.1)
+    assert not implies(x == 16777216.0, x != 16777217.0)  # f32-equal
+    # float32-exact constants still imply
+    assert implies(x > 20.5, x > 10.25)
+    assert implies(x >= 11.0, x > 10.5)
+
+
+def test_oversized_predicate_falls_back_without_blowup():
+    """OR-over-AND distribution is exponential; past MAX_CNF_CLAUSES the
+    digest falls back to the raw key and implication refuses — in linear
+    time, not 2^n (regression for the fingerprinting blowup)."""
+    import time
+
+    from repro.dataflow.expr import MAX_CNF_CLAUSES, PredicateTooComplex
+
+    big = None
+    for i in range(20):
+        term = (Col(f"a{i}") > 1) & (Col(f"b{i}") > 2)   # 2^20 clauses
+        big = term if big is None else (big | term)
+    t0 = time.time()
+    key = pred_normal_key(big)
+    assert not implies(big, big & (x > 0))
+    assert residual_pred(big, big) is big      # sound full re-filter
+    plan = P.PhysicalPlan([P.store(P.filter_(P.load("t"), big), "o")])
+    plan.fingerprints()
+    assert time.time() - t0 < 1.0, "must not distribute exponentially"
+    assert key[0] == "rawpred"
+    with pytest.raises(PredicateTooComplex):
+        to_cnf(big)
+    # small predicates keep the normal form
+    small = (x > 5) & (y < 3)
+    assert pred_normal_key(small)[0] == "cnf"
+    assert len(to_cnf(small)) <= MAX_CNF_CLAUSES
