@@ -1,0 +1,204 @@
+"""Distributed execution benchmark (DESIGN.md §11), appended to
+``BENCH_core.json`` under ``dist_runs``.
+
+Workload: the shuffle-heavy PigMix shape — join(page_views, users) then
+group-by user — on an 8-way forced-host device mesh.  Arms:
+
+  t_single        single device, no reuse (plain)
+  t_mesh_plain    8-way mesh, no reuse: both exchanges run
+  t_reuse_blind   8-way mesh, WARM, partition-blind: the join artifact
+                  is reused but stored monolithic, so the group-by must
+                  still exchange every row
+  t_reuse_copart  8-way mesh, WARM, partition-aware: the reused join
+                  artifact is co-partitioned on the grouping key — the
+                  group-by runs shuffle-free per shard
+
+The tracked claim (ISSUE 4 acceptance): t_reuse_blind / t_reuse_copart
+>= 2 at the default (committed) size — partition-aware reuse skips the
+exchange, not just the compute.
+
+The sweep runs in a SUBPROCESS that sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before importing
+jax, exactly like tests/test_distributed.py; the parent process (and
+anything else in the same interpreter) keeps its 1-device view.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+OUT = os.path.join(_ROOT, "BENCH_core.json")
+N_SHARDS = 8
+HISTORY_PER_LABEL = 5        # the check_bench regression gate needs
+                             # same-label history, so entries append
+
+
+# ---------------------------------------------------------------------------
+# Child: runs inside the 8-device subprocess
+
+
+def _child(n_rows: int, trials: int, out_path: str) -> None:
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    import jax
+
+    from repro.core import plan as P
+    from repro.core.restore import ReStore
+    from repro.store.artifacts import ArtifactStore, Catalog
+    from repro.workloads import pigmix
+
+    assert len(jax.devices()) >= N_SHARDS, jax.devices()
+    mesh = jax.make_mesh((N_SHARDS,), ("data",))
+
+    def probe(aggs):
+        pv = P.project(P.load("page_views"), ["user", "estimated_revenue"])
+        u = P.project(P.load("users"), ["name"])
+        j = P.join(pv, u, ["user"], ["name"])
+        g = P.groupby(j, ["user"], aggs)
+        return P.PhysicalPlan([P.store(g, "dist_out")])
+
+    A_SEED = {"total": ("sum", "estimated_revenue")}
+    A_PROBE = {"total": ("sum", "estimated_revenue"),
+               "n": ("count", "estimated_revenue"),
+               "mx": ("max", "estimated_revenue")}
+
+    def fresh(**kw):
+        store = ArtifactStore(root=tempfile.mkdtemp(prefix="dist_bench_"))
+        store.put("page_views", pigmix.gen_page_views(n_rows))
+        store.put("users", pigmix.gen_users())
+        return ReStore(Catalog(store), store, measure_exec=True,
+                       repeats=3, **kw)
+
+    def close(rs):
+        import shutil
+        rs.store.close()
+        shutil.rmtree(rs.store.root, ignore_errors=True)
+
+    def timed(rs, plan):
+        _, rep = rs.run_plan(plan)
+        return rep.total_wall_s, rep
+
+    med = lambda xs: sorted(xs)[len(xs) // 2]     # noqa: E731
+    t_single, t_mesh, t_blind, t_copart = [], [], [], []
+    skipped = 0
+    for _ in range(trials):
+        rs = fresh(heuristic="off", rewrite_enabled=False, semantic=False)
+        t_single.append(timed(rs, probe(A_PROBE))[0])
+        close(rs)
+
+        rs = fresh(heuristic="off", rewrite_enabled=False, semantic=False,
+                   mesh=mesh)
+        t_mesh.append(timed(rs, probe(A_PROBE))[0])
+        close(rs)
+
+        for aware, bucket in ((False, t_blind), (True, t_copart)):
+            rs = fresh(heuristic="aggressive", mesh=mesh,
+                       partition_aware=aware)
+            rs.run_plan(probe(A_SEED))            # warm: join artifact
+            t, rep = timed(rs, probe(A_PROBE))
+            bucket.append(t)
+            if aware:
+                skipped += sum(j.stats.shuffles_skipped
+                               for j in rep.jobs if j.stats)
+            close(rs)
+
+    rec = {
+        "n_rows": n_rows, "n_shards": N_SHARDS, "trials": trials,
+        "arms": {"t_single_s": round(med(t_single), 6),
+                 "t_mesh_plain_s": round(med(t_mesh), 6),
+                 "t_reuse_blind_s": round(med(t_blind), 6),
+                 "t_reuse_copart_s": round(med(t_copart), 6)},
+        "shuffles_skipped": skipped,
+        "speedup_copart_vs_blind": round(
+            med(t_blind) / max(med(t_copart), 1e-9), 4),
+        "speedup_copart_vs_plain": round(
+            med(t_mesh) / max(med(t_copart), 1e-9), 4),
+        "mesh_vs_single": round(
+            med(t_single) / max(med(t_mesh), 1e-9), 4),
+    }
+    assert skipped > 0, "partition-aware arm never skipped an exchange"
+    with open(out_path, "w") as f:
+        json.dump(rec, f)
+
+
+# ---------------------------------------------------------------------------
+# Parent
+
+
+def run(label: str | None = None, n_rows: int = 1 << 16,
+        out_path: str = OUT, trials: int = 3):
+    from benchmarks.common import emit
+
+    # CI sizes the sweep down via env (the docs job exercises the bench
+    # on every push; the committed BENCH_core.json entry uses defaults)
+    n_rows = int(os.environ.get("DIST_BENCH_NROWS", n_rows))
+    trials = int(os.environ.get("DIST_BENCH_TRIALS", trials))
+
+    child_out = tempfile.mktemp(suffix=".json")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_SHARDS}"
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child", child_out,
+         "--n-rows", str(n_rows), "--trials", str(trials)],
+        env=env, capture_output=True, text=True, timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"distributed bench child failed:\n"
+                           f"{proc.stderr[-3000:]}")
+    with open(child_out) as f:
+        rec = json.load(f)
+    os.unlink(child_out)
+    rec["label"] = label or "run"
+
+    a = rec["arms"]
+    emit("dist/single_device", a["t_single_s"], "plain")
+    emit("dist/mesh8_plain", a["t_mesh_plain_s"],
+         f"vs_single={rec['mesh_vs_single']:.2f}")
+    emit("dist/mesh8_reuse_blind", a["t_reuse_blind_s"],
+         "warm;monolithic artifact")
+    emit("dist/mesh8_reuse_copart", a["t_reuse_copart_s"],
+         f"warm;speedup_vs_blind={rec['speedup_copart_vs_blind']:.2f};"
+         f"skipped={rec['shuffles_skipped']}")
+
+    doc = {"runs": []}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            doc = json.load(f)
+    runs = doc.setdefault("dist_runs", [])
+    runs.append(rec)
+    # keep bounded same-label history (newest last) for the regression gate
+    kept, per_label = [], {}
+    for r in reversed(runs):
+        per_label[r["label"]] = per_label.get(r["label"], 0) + 1
+        if per_label[r["label"]] <= HISTORY_PER_LABEL:
+            kept.append(r)
+    doc["dist_runs"] = list(reversed(kept))
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    emit("dist/summary", 0.0,
+         f"copart_vs_blind={rec['speedup_copart_vs_blind']:.2f};"
+         f"out={out_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", default=None)
+    ap.add_argument("--n-rows", type=int, default=1 << 16)
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--label", default=None)
+    args = ap.parse_args()
+    if args.child:
+        _child(args.n_rows, args.trials, args.child)
+    else:
+        run(label=args.label, n_rows=args.n_rows, trials=args.trials)
+
+
+if __name__ == "__main__":
+    main()

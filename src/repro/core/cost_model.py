@@ -55,6 +55,7 @@ class CostModel:
     def __init__(self,
                  load_bandwidth_bytes_s: float = 2e9,
                  store_bandwidth_bytes_s: float = 2e9,
+                 shuffle_bandwidth_bytes_s: float = 5e8,
                  fixed_io_s: float = 1e-5,
                  ewma_alpha: float = 0.5,
                  reuse_halflife_s: float = 1800.0,
@@ -62,6 +63,7 @@ class CostModel:
                  max_expected_uses: float = 64.0):
         self.load_bw = load_bandwidth_bytes_s
         self.store_bw = store_bandwidth_bytes_s
+        self.shuffle_bw = shuffle_bandwidth_bytes_s
         self.fixed_io_s = fixed_io_s
         self.alpha = ewma_alpha
         self.halflife_s = reuse_halflife_s
@@ -95,6 +97,16 @@ class CostModel:
 
     def store_cost_s(self, nbytes: int) -> float:
         return self.fixed_io_s + nbytes / max(self.store_bw, 1.0)
+
+    def shuffle_cost_s(self, nbytes: int) -> float:
+        """Price of one full exchange of ``nbytes`` across the mesh —
+        the map-side bucketing plus the all_to_all (DESIGN.md §11).
+        Modelled as a bandwidth term like load/store (the exchange
+        moves every byte once over a slower path); a reused artifact
+        that is co-partitioned on its consumer's keys is credited this
+        on top of the recompute savings, because the consumer's
+        exchange is skipped outright."""
+        return self.fixed_io_s + nbytes / max(self.shuffle_bw, 1.0)
 
     def compensation_cost_s(self, nbytes: int, n_ops: int = 1) -> float:
         """Price of re-deriving an exact value from a *covering* artifact

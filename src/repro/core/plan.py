@@ -19,7 +19,7 @@ import hashlib
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from ..dataflow.expr import Expr, agg_key, pred_normal_key
+from ..dataflow.expr import Col, Expr, agg_key, pred_normal_key
 
 # operator kinds whose inputs are order-insensitive
 _COMMUTATIVE_KINDS = {"UNION"}
@@ -267,6 +267,221 @@ def rebind_load_versions(plan: PhysicalPlan,
         return new
 
     return PhysicalPlan([rebuild(s) for s in plan.sinks])
+
+
+# ---------------------------------------------------------------------------
+# Partitioning: the physical property behind shuffle-free reuse
+# (DESIGN.md §11).  A value is *hash-partitioned* when row r lives on
+# shard ``partition_hash(keys)(r) % n_parts`` — the property the mesh
+# exchange establishes and FILTER/PROJECT/FOREACH preserve (M3R's
+# partition stability).  It is a PHYSICAL property: it never enters
+# operator fingerprints, so a partitioned and a monolithic artifact of
+# the same value are interchangeable for matching, but a consumer that
+# finds the property compatible skips its exchange entirely.
+
+
+@dataclasses.dataclass(frozen=True)
+class Partitioning:
+    keys: Tuple[str, ...]          # ordered: the hash is positional
+    n_parts: int
+    scheme: str = "hash_mod"
+
+    def covers(self, keys, n_parts: int) -> bool:
+        """True when data partitioned this way is already co-located for
+        a grouping exchange on ``keys`` across ``n_parts`` shards: rows
+        equal on ``keys`` are equal on any subset, so they share a
+        shard.  (JOIN sides need `aligns`, not `covers`: subset hashing
+        would break positional agreement between the two sides.)"""
+        return (self.scheme == "hash_mod" and self.n_parts == n_parts
+                and set(self.keys) <= set(keys))
+
+    def aligns(self, keys, n_parts: int) -> bool:
+        """Exact positional match — required for JOIN/COGROUP sides."""
+        return (self.scheme == "hash_mod" and self.n_parts == n_parts
+                and tuple(self.keys) == tuple(keys))
+
+    def to_dict(self) -> Dict:
+        return {"keys": list(self.keys), "n_parts": self.n_parts,
+                "scheme": self.scheme}
+
+    @staticmethod
+    def from_dict(d) -> "Optional[Partitioning]":
+        if d is None:
+            return None
+        if isinstance(d, Partitioning):
+            return d
+        return Partitioning(tuple(d["keys"]), int(d["n_parts"]),
+                            d.get("scheme", "hash_mod"))
+
+
+@dataclasses.dataclass
+class PlanProps:
+    """Static physical properties of a plan under mesh execution:
+    per-op output partitioning, per-blocking-op exchange-skip flags
+    (one bool per table input), and per-op output column names."""
+    part: Dict[int, Optional[Partitioning]]
+    skip: Dict[int, Tuple[bool, ...]]
+    schema: Dict[int, Tuple[str, ...]]
+
+    def n_exchanges(self) -> int:
+        return sum(len(v) for v in self.skip.values())
+
+    def n_skipped(self) -> int:
+        return sum(1 for v in self.skip.values() for s in v if s)
+
+
+def _join_out_names(left_names, right_names):
+    out = list(left_names)
+    for n in right_names:
+        out.append(n if n not in out else n + "_r")
+    return tuple(sorted(out))
+
+
+def plan_physical_props(plan: PhysicalPlan,
+                        dataset_parts: Dict[str, Optional[Partitioning]],
+                        dataset_schemas: Dict[str, Tuple[str, ...]],
+                        n_parts: Optional[int]) -> PlanProps:
+    """Propagate the partition property through a plan (DESIGN.md §11).
+
+    ``dataset_parts``/``dataset_schemas`` describe the LOAD-able inputs
+    (artifact manifests + catalog tables); ``n_parts`` is the mesh's
+    shuffle-axis size (None = single device, everything unpartitioned).
+    Rules: FILTER/SPLIT/STORE preserve; PROJECT preserves iff the keys
+    survive; FOREACH preserves iff every key column is an identity
+    generator; blocking operators inherit a covering input property
+    (their exchange is skipped) or establish a fresh one on their keys;
+    UNION destroys the property (concatenation breaks block layout)."""
+    part: Dict[int, Optional[Partitioning]] = {}
+    skip: Dict[int, Tuple[bool, ...]] = {}
+    schema: Dict[int, Tuple[str, ...]] = {}
+
+    for op in plan.topo():
+        p = op.params
+        in_parts = [part[id(i)] for i in op.inputs]
+        in_schemas = [schema[id(i)] for i in op.inputs]
+        out_part: Optional[Partitioning] = None
+        out_schema: Tuple[str, ...] = in_schemas[0] if in_schemas else ()
+
+        if op.kind == "LOAD":
+            # ONLY the store-backed property (dataset_parts) is trusted:
+            # a rewriter-spliced LOAD also carries the repository entry's
+            # claim in params["partitioning"], but that claim can go
+            # stale (e.g. the artifact re-written monolithic by a
+            # partition-blind run) and a wrongly-granted skip silently
+            # corrupts aggregates
+            out_part = Partitioning.from_dict(
+                dataset_parts.get(p["dataset"]))
+            if n_parts is None or (out_part is not None
+                                   and out_part.n_parts != n_parts):
+                out_part = None     # mismatched P: no locality to exploit
+            out_schema = tuple(sorted(dataset_schemas.get(p["dataset"], ())))
+        elif op.kind in ("FILTER", "SPLIT", "STORE"):
+            out_part = in_parts[0]
+        elif op.kind == "PROJECT":
+            out_schema = tuple(sorted(p["cols"]))
+            ip = in_parts[0]
+            out_part = ip if ip and set(ip.keys) <= set(p["cols"]) else None
+        elif op.kind == "FOREACH":
+            out_schema = tuple(sorted(p["gens"]))
+            ip = in_parts[0]
+            if ip and all(isinstance(p["gens"].get(k), Col)
+                          and p["gens"][k].name == k for k in ip.keys):
+                out_part = ip
+        elif op.kind == "UNION":
+            out_part = None
+        elif op.kind == "GROUPBY":
+            keys = tuple(p["keys"])
+            out_schema = tuple(sorted(set(keys) | set(p["aggs"])))
+            if n_parts is not None:
+                ip = in_parts[0]
+                if ip is not None and ip.covers(keys, n_parts):
+                    skip[id(op)] = (True,)
+                    out_part = ip          # partition stability
+                else:
+                    skip[id(op)] = (False,)
+                    out_part = Partitioning(keys, n_parts)
+        elif op.kind == "DISTINCT":
+            # the exchange keys are ALL columns; any partitioning on a
+            # subset of them co-locates equal rows
+            if n_parts is not None:
+                ip = in_parts[0]
+                if ip is not None and ip.covers(out_schema, n_parts):
+                    skip[id(op)] = (True,)
+                    out_part = ip
+                else:
+                    skip[id(op)] = (False,)
+                    out_part = Partitioning(out_schema, n_parts)
+        elif op.kind == "JOIN":
+            lkeys, rkeys = tuple(p["left_keys"]), tuple(p["right_keys"])
+            out_schema = _join_out_names(in_schemas[0], in_schemas[1])
+            if n_parts is not None:
+                sl = in_parts[0] is not None \
+                    and in_parts[0].aligns(lkeys, n_parts)
+                sr = in_parts[1] is not None \
+                    and in_parts[1].aligns(rkeys, n_parts)
+                skip[id(op)] = (sl, sr)
+                out_part = Partitioning(lkeys, n_parts)
+        elif op.kind == "COGROUP":
+            kl, kr = tuple(p["keys_left"]), tuple(p["keys_right"])
+            out_schema = tuple(sorted(
+                set(kl) | {f"l_{n}" for n in p["aggs_left"]}
+                | {f"r_{n}" for n in p["aggs_right"]}))
+            if n_parts is not None:
+                sl = in_parts[0] is not None \
+                    and in_parts[0].aligns(kl, n_parts)
+                sr = in_parts[1] is not None \
+                    and in_parts[1].aligns(kr, n_parts)
+                both = sl and sr      # the unioned exchange is one unit
+                skip[id(op)] = (both, both)
+                out_part = Partitioning(kl, n_parts)
+
+        part[id(op)] = out_part
+        schema[id(op)] = out_schema
+    return PlanProps(part, skip, schema)
+
+
+# operators an input's partition property survives on the way to its
+# first blocking consumer.  PROJECT needs no column check HERE: the
+# demand keys come from the blocking consumer itself, and keys a
+# consumer exchanges on necessarily survived every projection between
+# the Load and that consumer (they exist in its input).
+_PART_PRESERVING = {"FILTER", "SPLIT", "STORE", "PROJECT"}
+
+
+def load_partition_demands(plan: PhysicalPlan) -> Dict[str, Tuple[str, ...]]:
+    """dataset name -> the key tuple its first blocking consumer
+    exchanges on, walking through partition-preserving operators.  The
+    engine uses this to re-partition a mismatched-P artifact on read
+    (DESIGN.md §11) so the consumer's exchange can still be skipped."""
+    succ = plan.successors()
+    out: Dict[str, Tuple[str, ...]] = {}
+    for ld in plan.loads():
+        frontier = [ld]
+        seen = set()
+        demand = None
+        while frontier and demand is None:
+            op = frontier.pop()
+            for s in succ.get(id(op), []):
+                if id(s) in seen:
+                    continue
+                seen.add(id(s))
+                if s.kind == "GROUPBY":
+                    demand = tuple(s.params["keys"])
+                elif s.kind == "JOIN":
+                    demand = tuple(s.params["left_keys"]) \
+                        if s.inputs[0] is op else \
+                        tuple(s.params["right_keys"])
+                elif s.kind == "COGROUP":
+                    demand = tuple(s.params["keys_left"]) \
+                        if s.inputs[0] is op else \
+                        tuple(s.params["keys_right"])
+                elif s.kind in _PART_PRESERVING:
+                    frontier.append(s)
+                if demand:
+                    break
+        if demand:
+            out[ld.params["dataset"]] = demand
+    return out
 
 
 def plan_signature(plan: PhysicalPlan) -> str:

@@ -68,6 +68,12 @@ class RepositoryEntry:
     semantic_uses: int = 0
     saved_s_total: float = 0.0    # realized savings credited on each reuse
     source_versions: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # physical partition property of the stored artifact (DESIGN.md §11):
+    # {"keys": [...], "n_parts": P, "scheme": "hash_mod"} or None.  Not
+    # part of the signature — a partitioned and a monolithic artifact of
+    # the same value match identically — but a rewrite that splices a
+    # co-partitioned artifact also skips the consumer's exchange.
+    partitioning: Optional[Dict] = None
 
     @property
     def reduction(self) -> float:
@@ -292,7 +298,8 @@ class Repository:
 def make_entry(plan: PhysicalPlan, artifact: str, *, bytes_in=0, bytes_out=0,
                rows_out=0, exec_time_s=0.0, producer_cost_s=0.0,
                history_uses=0.0,
-               source_versions: Optional[Dict[str, int]] = None
+               source_versions: Optional[Dict[str, int]] = None,
+               partitioning: Optional[Dict] = None
                ) -> RepositoryEntry:
     return RepositoryEntry(plan=plan, artifact=artifact,
                            signature=plan_signature(plan),
@@ -301,4 +308,6 @@ def make_entry(plan: PhysicalPlan, artifact: str, *, bytes_in=0, bytes_out=0,
                            producer_cost_s=producer_cost_s,
                            history_uses=history_uses,
                            created_at=time.time(),
-                           source_versions=dict(source_versions or {}))
+                           source_versions=dict(source_versions or {}),
+                           partitioning=dict(partitioning)
+                           if partitioning else None)

@@ -25,9 +25,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Set, Tuple
 
-from .matcher import (FingerprintIndex, SemanticIndex, match_bottom_up,
+from .matcher import (FingerprintIndex, SemanticIndex,
                       pairwise_plan_traversal, peel_repo_output)
-from .plan import Operator, PhysicalPlan, filter_, load, project
+from .plan import (Operator, Partitioning, PhysicalPlan, filter_, load,
+                   project)
 from .repository import Repository, RepositoryEntry
 
 
@@ -79,10 +80,52 @@ def _replace_tracking(plan: PhysicalPlan, old: Operator, new: Operator,
     return rewritten, new_origin, new_tracked
 
 
+def _avoided_exchanges(plan: PhysicalPlan, anchor: Operator,
+                       part: Optional[Partitioning],
+                       n_shards: Optional[int]) -> int:
+    """How many downstream exchanges a co-partitioned artifact spliced
+    at ``anchor`` makes shuffle-free (DESIGN.md §11): walk the anchor's
+    consumers through partition-preserving operators and count blocking
+    consumers whose keys the artifact's property covers/aligns."""
+    if part is None or n_shards is None or part.n_parts != n_shards:
+        return 0
+    succ = plan.successors()
+    n = 0
+    frontier = [anchor]
+    seen = set()
+    while frontier:
+        op = frontier.pop()
+        for s in succ.get(id(op), []):
+            if id(s) in seen:
+                continue
+            seen.add(id(s))
+            k = s.kind
+            if k in ("FILTER", "SPLIT", "STORE"):
+                frontier.append(s)
+            elif k == "PROJECT" \
+                    and set(part.keys) <= set(s.params["cols"]):
+                frontier.append(s)
+            elif k == "GROUPBY" \
+                    and part.covers(s.params["keys"], n_shards):
+                n += 1
+            elif k == "JOIN":
+                keys = s.params["left_keys"] if s.inputs[0] is op \
+                    else s.params["right_keys"]
+                n += part.aligns(keys, n_shards)
+            elif k == "COGROUP":
+                keys = s.params["keys_left"] if s.inputs[0] is op \
+                    else s.params["keys_right"]
+                n += part.aligns(keys, n_shards)
+            elif k == "DISTINCT":
+                n += 1     # any subset partitioning co-locates equal rows
+    return n
+
+
 def rewrite_plan(plan: PhysicalPlan, repo: Repository,
                  use_algorithm1: bool = False,
                  semantic: bool = True,
-                 max_rewrites: int = 64) -> RewriteResult:
+                 max_rewrites: int = 64,
+                 n_shards: Optional[int] = None) -> RewriteResult:
     """Rewrite ``plan`` against the repository until no entry matches.
 
     Each round scans ``repo.ordered()`` (the paper's partial order, so
@@ -128,11 +171,20 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
         if hit is not None:
             entry, anchor = hit
             new_load = load(entry.artifact)
+            saved = cm.savings_per_reuse_s(
+                entry.producer_cost_s or entry.exec_time_s, entry.bytes_out)
+            if entry.partitioning is not None:
+                # the partition property rides along on the spliced Load
+                # (physical property: not part of the fingerprint), and
+                # every downstream exchange it makes shuffle-free is
+                # extra realized savings (DESIGN.md §11)
+                new_load.params["partitioning"] = dict(entry.partitioning)
+                saved += _avoided_exchanges(
+                    plan, anchor, Partitioning.from_dict(entry.partitioning),
+                    n_shards) * cm.shuffle_cost_s(entry.bytes_out)
             plan, origin, comp_ids = _replace_tracking(
                 plan, anchor, new_load, origin, comp_ids)
             used.append(entry)
-            saved = cm.savings_per_reuse_s(
-                entry.producer_cost_s or entry.exec_time_s, entry.bytes_out)
             repo.record_use(entry, saved_s=max(saved, 0.0))
             continue
         if semantic and not use_algorithm1:
@@ -148,6 +200,21 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
             if sem is not None:
                 entry, m = sem
                 comp: Operator = load(entry.artifact)
+                saved = cm.savings_per_reuse_s(
+                    entry.producer_cost_s or entry.exec_time_s,
+                    entry.bytes_out) - cm.compensation_cost_s(
+                        entry.bytes_out, m.n_comp_ops)
+                if entry.partitioning is not None:
+                    # compensation FILTERs preserve the property (the
+                    # executor's propagation re-checks PROJECT
+                    # narrowing), so a co-partitioned covering artifact
+                    # earns the same avoided-exchange credit as an
+                    # exact hit
+                    comp.params["partitioning"] = dict(entry.partitioning)
+                    saved += _avoided_exchanges(
+                        plan, m.anchor,
+                        Partitioning.from_dict(entry.partitioning),
+                        n_shards) * cm.shuffle_cost_s(entry.bytes_out)
                 if m.residual is not None:
                     comp = filter_(comp, m.residual)
                 if m.narrow_cols is not None:
@@ -157,10 +224,6 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
                 comp_ids.add(id(comp))
                 used.append(entry)
                 n_semantic += 1
-                saved = cm.savings_per_reuse_s(
-                    entry.producer_cost_s or entry.exec_time_s,
-                    entry.bytes_out) - cm.compensation_cost_s(
-                        entry.bytes_out, m.n_comp_ops)
                 repo.record_use(entry, saved_s=max(saved, 0.0),
                                 kind="semantic")
                 continue

@@ -119,6 +119,7 @@ def repository_to_json(repo) -> str:
             "semantic_uses": e.semantic_uses,
             "saved_s_total": e.saved_s_total,
             "source_versions": e.source_versions,
+            "partitioning": e.partitioning,
         })
     return json.dumps({"entries": entries}, indent=1)
 
@@ -139,7 +140,8 @@ def repository_from_json(text: str, repo=None):
             use_count=d["use_count"],
             semantic_uses=d.get("semantic_uses", 0),
             saved_s_total=d.get("saved_s_total", 0.0),
-            source_versions=d["source_versions"])
+            source_versions=d["source_versions"],
+            partitioning=d.get("partitioning"))
         # integrity: a corrupted plan no longer matches its signature
         if P.plan_signature(plan) == e.signature:
             repo.add(e)

@@ -22,6 +22,8 @@ from typing import Callable, Dict, List, Tuple
 
 import jax
 
+from ..core.plan import (Partitioning, load_partition_demands,
+                         plan_physical_props)
 from ..store.artifacts import ArtifactStore, Catalog
 from .compiler import Job, Workflow
 from .physical import execute_plan, use_pallas
@@ -42,6 +44,13 @@ class JobStats:
     # (its whole input cone) — the producer cost of the sub-job rooted
     # there, feeding the repository cost model (DESIGN.md §9)
     op_cost_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # mesh execution (DESIGN.md §11): rows the exchange's bounded
+    # buckets dropped, exchange counts, and the static partition
+    # property of each op's output (op uid -> Partitioning.to_dict())
+    shuffle_overflow: int = 0
+    shuffles: int = 0
+    shuffles_skipped: int = 0
+    op_partitioning: Dict[int, dict] = dataclasses.field(default_factory=dict)
 
     @property
     def reduction(self) -> float:
@@ -135,7 +144,8 @@ class Engine:
 
     def __init__(self, catalog: Catalog, store: ArtifactStore,
                  use_kernels: bool = False, measure_exec: bool = False,
-                 repeats: int = 5):
+                 repeats: int = 5, mesh=None, shuffle_axis: str = "data",
+                 skew_factor: float = 4.0, partition_aware: bool = True):
         self.catalog = catalog
         self.store = store
         self.use_kernels = use_kernels
@@ -145,7 +155,23 @@ class Engine:
         # suppresses disk jitter)
         self.measure_exec = measure_exec
         self.repeats = repeats
+        # mesh execution (DESIGN.md §11): blocking operators run through
+        # the shard_map exchange across the mesh's ``shuffle_axis``.
+        # partition_aware=False is the ablation arm: artifacts are
+        # stored monolithic and stored partition properties are ignored
+        # (every exchange always runs) — the baseline the distributed
+        # benchmark beats.
+        self.mesh = mesh
+        self.shuffle_axis = shuffle_axis
+        self.skew_factor = skew_factor
+        self.partition_aware = partition_aware
         self._jit_cache = GLOBAL_JIT_CACHE
+
+    @property
+    def n_shards(self):
+        if self.mesh is None:
+            return None
+        return int(self.mesh.shape[self.shuffle_axis])
 
     # ------------------------------------------------------------------
     def _dataset(self, name: str) -> Table:
@@ -153,7 +179,63 @@ class Engine:
             return self.store.get(name)
         return self.catalog.get(name)
 
-    def _jitted(self, plan):
+    def _mesh_context(self, plan, input_names):
+        """Physical context of a mesh run: per-dataset partition
+        properties and schemas, plus re-partitioned overrides for
+        mismatched-P artifacts a blocking consumer demands (DESIGN.md
+        §11).  Returns (props, overrides, parts_key) — parts_key goes
+        into the jit-cache key, because the co-partition skip decisions
+        are baked into the traced computation."""
+        n_shards = self.n_shards
+        demands = load_partition_demands(plan) if self.partition_aware \
+            else {}
+        dataset_parts, schemas, overrides = {}, {}, {}
+        for n in input_names:
+            sp = self.store.partitioning(n) if self.partition_aware \
+                else None
+            want = demands.get(n)
+            if sp is not None and want and sp["n_parts"] != n_shards:
+                # re-partition on read: one host pass now instead of a
+                # device exchange on every consumption
+                overrides[n], sp = self.store.get_partitioned(
+                    n, want, n_shards)
+            dataset_parts[n] = sp
+            schemas[n] = self._schema(n, overrides)
+        props = None
+        if self.partition_aware:
+            props = plan_physical_props(
+                plan,
+                {k: Partitioning.from_dict(v)
+                 for k, v in dataset_parts.items() if v is not None},
+                schemas, n_shards)
+        # key only what changes the trace: the partition FUNCTION
+        # (keys/n_parts/scheme) — per-shard row counts vary run to run
+        # without changing the computation, and keying them would stop
+        # the process-wide jit cache from ever hitting on mesh plans
+        parts_key = (
+            self.shuffle_axis, n_shards, self.skew_factor,
+            self.partition_aware,
+            tuple(d.id for d in self.mesh.devices.flat),
+            tuple(sorted(
+                (n, (tuple(dataset_parts[n]["keys"]),
+                     dataset_parts[n]["n_parts"],
+                     dataset_parts[n].get("scheme", "hash_mod"))
+                 if dataset_parts[n] is not None else None)
+                for n in input_names)))
+        return props, overrides, parts_key
+
+    def _schema(self, name: str, overrides) -> tuple:
+        """Column names of a dataset without forcing a cold load (the
+        store reads just the npz directory for on-disk artifacts)."""
+        t = overrides.get(name)
+        if t is not None:
+            return tuple(t.names)
+        try:
+            return self.store.column_names(name)
+        except KeyError:
+            return tuple(self.catalog.get(name).names)
+
+    def _jitted(self, plan, props=None, parts_key=None):
         """Returns (fn, uid_by_fp, fps): the cached jitted computation,
         the CACHED plan's op-uid per fingerprint, and the current plan's
         fingerprints.  A cache hit serves a closure over the *first*
@@ -163,13 +245,22 @@ class Engine:
         fps = plan.fingerprints()
         sig = "|".join(sorted(fps[id(s)] for s in plan.sinks))
         # the pallas switch changes the traced computation, so it is part
-        # of the cache key (everything else that matters is in the
-        # fingerprints; input shapes are handled by jax.jit retracing)
-        key = (sig, use_pallas())
+        # of the cache key, and so is the mesh + dataset-partitioning
+        # context (a co-partition skip is baked into the trace: the same
+        # plan over a differently-partitioned artifact is a different
+        # computation).  Everything else that matters is in the
+        # fingerprints; input shapes are handled by jax.jit retracing.
+        key = (sig, use_pallas(), parts_key)
+        # the closure outlives this Engine in the PROCESS-WIDE cache:
+        # capture plain locals, never `self` (an Engine reference would
+        # pin its catalog + store + device cache for process lifetime)
+        mesh, axis, skew = self.mesh, self.shuffle_axis, self.skew_factor
 
         def build():
             def fn(datasets):
-                return execute_plan(plan, datasets)
+                return execute_plan(plan, datasets, mesh=mesh,
+                                    shuffle_axis=axis, skew_factor=skew,
+                                    props=props)
             uid_by_fp = {fps[id(op)]: op.uid for op in plan.topo()}
             return jax.jit(fn), uid_by_fp
 
@@ -182,25 +273,42 @@ class Engine:
         write-behind store only the device-side handoff is on the clock;
         serialization happens on the flusher thread)."""
         input_names = sorted({o.params["dataset"] for o in job.plan.loads()})
-        fn, uid_by_fp, fps = self._jitted(job.plan)
+        props, overrides, parts_key = (None, {}, None)
+        if self.mesh is not None:
+            props, overrides, parts_key = self._mesh_context(
+                job.plan, input_names)
+        fn, uid_by_fp, fps = self._jitted(job.plan, props, parts_key)
+        # partition property of each output artifact (STORE sinks
+        # inherit their input's property), recorded at put() so the
+        # artifact is written sharded and later consumers can skip
+        # their exchange (DESIGN.md §11)
+        out_parts = {}
+        if props is not None:
+            for s in job.plan.sinks:
+                if s.kind == "STORE" and props.part.get(id(s)) is not None:
+                    out_parts[s.params["name"]] = \
+                        props.part[id(s)].to_dict()
+
+        def load_inputs():
+            return {n: overrides[n] if n in overrides else self._dataset(n)
+                    for n in input_names}
 
         if self.measure_exec:   # warm jit + OS page cache off the clock
-            warm_in = {n: self._dataset(n) for n in input_names}
-            warm, _ = fn(warm_in)
+            warm, _ = fn(load_inputs())
             jax.block_until_ready(warm)
-            del warm, warm_in
+            del warm
 
         walls = []
         reps = self.repeats if self.measure_exec else 1
         for _ in range(reps):
             t0 = time.perf_counter()
-            inputs = {n: self._dataset(n) for n in input_names}  # T_load
+            inputs = load_inputs()                               # T_load
             outputs, stats = fn(inputs)
             # one synchronization point per job (not per output): wait for
             # the whole output pytree at once
             outputs = jax.block_until_ready(outputs)
             for name, t in outputs.items():                      # T_store
-                self.store.put(name, t)
+                self.store.put(name, t, partitioning=out_parts.get(name))
             walls.append(time.perf_counter() - t0)
             if self.measure_exec:
                 # drain the write-behind queue between reps so background
@@ -221,9 +329,20 @@ class Engine:
             if s is not None:
                 op_rows[op.uid] = int(s["rows_out"])
         ovf = sum(int(s.get("join_overflow", 0)) for s in stats.values())
+        sh_ovf = sum(int(s.get("shuffle_overflow", 0))
+                     for s in stats.values())
         op_cost = attribute_op_costs(job.plan, op_rows, wall)
-        return outputs, JobStats(job.job_id, wall, rows_in, bytes_in,
-                                 rows_out, bytes_out, op_rows, ovf, op_cost)
+        js = JobStats(job.job_id, wall, rows_in, bytes_in,
+                      rows_out, bytes_out, op_rows, ovf, op_cost,
+                      shuffle_overflow=sh_ovf)
+        if props is not None:
+            js.shuffles = props.n_exchanges()
+            js.shuffles_skipped = props.n_skipped()
+            js.op_partitioning = {
+                op.uid: props.part[id(op)].to_dict()
+                for op in job.plan.topo()
+                if props.part.get(id(op)) is not None}
+        return outputs, js
 
     def run_workflow(self, wf: Workflow) -> tuple[Dict[str, Table],
                                                   List[JobStats]]:

@@ -262,42 +262,36 @@ def op_join(left: Table, right: Table, lkeys, rkeys,
     return Table(out_cols, matched), overflow
 
 
-def op_cogroup(a: Table, b: Table, keys_l, keys_r, aggs_l, aggs_r,
-               hc: "HashCache | None" = None) -> Table:
-    """Group both inputs by key; per-key aggregates from each side."""
-    # unify key names under the left names, tag sides, reuse groupby path
+def _cogroup_prepare(a: Table, b: Table, keys_l, keys_r, aggs_l, aggs_r):
+    """Map-side alignment of both COGROUP inputs onto one shared schema
+    (``k0..kn`` unified keys, ``va_*``/``vb_*`` value carriers): after
+    this, COGROUP is UNION + GROUPBY.  The other side's carrier rows are
+    the aggregate's neutral element (0 for sums, NaN-masked otherwise).
+    Shared with the distributed path, which exchanges the two prepared
+    tables separately and unions them per shard (DESIGN.md §11)."""
     a_cols = {f"k{i}": a.col(k) for i, k in enumerate(keys_l)}
     b_cols = {f"k{i}": b.col(k) for i, k in enumerate(keys_r)}
-    # carry aggregated columns
+    aggs = {}
     for out, (fn, c) in aggs_l.items():
+        fn2 = "sum" if fn == "count" else fn
         a_cols[f"va_{out}"] = (a.col(c).astype(jnp.float32)
                                if fn != "count" else jnp.ones(a.capacity))
-        b_cols[f"va_{out}"] = jnp.zeros(b.capacity, jnp.float32)
+        b_cols[f"va_{out}"] = jnp.full(
+            (b.capacity,), 0.0 if fn2 == "sum" else jnp.nan, jnp.float32)
+        aggs[f"l_{out}"] = (fn2, f"va_{out}")
     for out, (fn, c) in aggs_r.items():
+        fn2 = "sum" if fn == "count" else fn
         b_cols[f"vb_{out}"] = (b.col(c).astype(jnp.float32)
                                if fn != "count" else jnp.ones(b.capacity))
-        a_cols[f"vb_{out}"] = jnp.zeros(a.capacity, jnp.float32)
-    a_cols["side"] = jnp.zeros(a.capacity, jnp.int32)
-    b_cols["side"] = jnp.ones(b.capacity, jnp.int32)
-    both = op_union(Table(a_cols, a.valid), Table(b_cols, b.valid))
-
-    keys = [f"k{i}" for i in range(len(keys_l))]
-    side = both.col("side")
-    aggs = {}
-    for out, (fn, _c) in aggs_l.items():
-        fn2 = "sum" if fn == "count" else fn
-        both.columns[f"va_{out}"] = jnp.where(
-            side == 0, both.col(f"va_{out}"),
-            0.0 if fn2 in ("sum",) else jnp.nan)
-        aggs[f"l_{out}"] = (fn2, f"va_{out}")
-    for out, (fn, _c) in aggs_r.items():
-        fn2 = "sum" if fn == "count" else fn
-        both.columns[f"vb_{out}"] = jnp.where(
-            side == 1, both.col(f"vb_{out}"),
-            0.0 if fn2 in ("sum",) else jnp.nan)
+        a_cols[f"vb_{out}"] = jnp.full(
+            (a.capacity,), 0.0 if fn2 == "sum" else jnp.nan, jnp.float32)
         aggs[f"r_{out}"] = (fn2, f"vb_{out}")
-    grouped = op_groupby(both, keys, aggs, hc)
-    # restore original key names
+    keys = [f"k{i}" for i in range(len(keys_l))]
+    return Table(a_cols, a.valid), Table(b_cols, b.valid), keys, aggs
+
+
+def _cogroup_rename(grouped: Table, keys_l) -> Table:
+    """Restore the left input's key names on the grouped result."""
     renamed = {}
     for i, k in enumerate(keys_l):
         renamed[k] = grouped.col(f"k{i}")
@@ -305,6 +299,15 @@ def op_cogroup(a: Table, b: Table, keys_l, keys_r, aggs_l, aggs_r,
         if not n.startswith("k"):
             renamed[n] = grouped.col(n)
     return Table(renamed, grouped.valid)
+
+
+def op_cogroup(a: Table, b: Table, keys_l, keys_r, aggs_l, aggs_r,
+               hc: "HashCache | None" = None) -> Table:
+    """Group both inputs by key; per-key aggregates from each side."""
+    ta, tb, keys, aggs = _cogroup_prepare(a, b, keys_l, keys_r,
+                                          aggs_l, aggs_r)
+    grouped = op_groupby(op_union(ta, tb), keys, aggs, hc)
+    return _cogroup_rename(grouped, keys_l)
 
 
 def op_store(t: Table) -> Table:
@@ -318,17 +321,44 @@ def op_store(t: Table) -> Table:
 # Plan evaluation
 
 
-def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table]):
+def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table],
+                 mesh=None, shuffle_axis: str = "data",
+                 skew_factor: float = 4.0, props=None):
     """Evaluate a physical plan.  Returns (outputs, stats):
     outputs: store-name -> output Table (uncompacted; the artifact
     store compacts host-side on its write path);
-    stats: op uid -> dict of traced scalars (rows_out, join_overflow)."""
+    stats: op uid -> dict of traced scalars (rows_out, join_overflow,
+    shuffle_overflow).
+
+    With a ``mesh``, the blocking operators run through the shard_map
+    map->shuffle->reduce path of ``dataflow/shuffle.py`` across the
+    ``shuffle_axis`` devices; ``props`` (a ``core.plan.PlanProps``, same
+    plan object) marks which exchanges are skipped because the input is
+    already co-partitioned (DESIGN.md §11)."""
     values: Dict[int, Table] = {}
     outputs: Dict[str, Table] = {}
     stats: Dict[int, Dict[str, jnp.ndarray]] = {}
     # (h1, h2) key hashes are computed once per (columns, seed) within
     # this plan execution and shared across GROUPBY/DISTINCT/COGROUP/JOIN
     hc = HashCache()
+    if mesh is not None:
+        from .shuffle import (distributed_cogroup, distributed_distinct,
+                              distributed_groupby, distributed_join)
+        n_shards = int(mesh.shape[shuffle_axis])
+    skips = props.skip if props is not None else {}
+
+    def _skip(op, i: int, table: Table) -> bool:
+        flags = skips.get(id(op), ())
+        if not (i < len(flags) and flags[i]):
+            return False
+        if table.capacity % n_shards != 0:
+            # a partitioned value is always laid out in n_shards equal
+            # blocks; silently falling back to an exchange here would
+            # leave downstream partitioning claims wrong — fail loud
+            raise ValueError(
+                f"co-partitioned input of {op.kind}#{op.uid} has capacity "
+                f"{table.capacity} not divisible by {n_shards} shards")
+        return True
 
     for op in plan.topo():
         p = op.params
@@ -343,16 +373,49 @@ def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table]):
         elif op.kind == "FOREACH":
             v = op_foreach(ins[0], p["gens"])
         elif op.kind == "JOIN":
-            v, ovf = op_join(ins[0], ins[1], p["left_keys"], p["right_keys"],
-                             p.get("expansion", 1), hc)
+            if mesh is not None:
+                v, sh_ovf, ovf = distributed_join(
+                    ins[0], ins[1], p["left_keys"], p["right_keys"], mesh,
+                    axis=shuffle_axis, expansion=p.get("expansion", 1),
+                    skew_factor=skew_factor,
+                    co_left=_skip(op, 0, ins[0]),
+                    co_right=_skip(op, 1, ins[1]))
+                extra["shuffle_overflow"] = sh_ovf
+            else:
+                v, ovf = op_join(ins[0], ins[1], p["left_keys"],
+                                 p["right_keys"], p.get("expansion", 1), hc)
             extra["join_overflow"] = ovf
         elif op.kind == "GROUPBY":
-            v = op_groupby(ins[0], p["keys"], p["aggs"], hc)
+            if mesh is not None:
+                v, ovf = distributed_groupby(
+                    ins[0], p["keys"], p["aggs"], mesh, axis=shuffle_axis,
+                    skew_factor=skew_factor,
+                    co_partitioned=_skip(op, 0, ins[0]))
+                extra["shuffle_overflow"] = ovf
+            else:
+                v = op_groupby(ins[0], p["keys"], p["aggs"], hc)
         elif op.kind == "COGROUP":
-            v = op_cogroup(ins[0], ins[1], p["keys_left"], p["keys_right"],
-                           p["aggs_left"], p["aggs_right"], hc)
+            if mesh is not None:
+                co = _skip(op, 0, ins[0]) and _skip(op, 1, ins[1])
+                v, ovf = distributed_cogroup(
+                    ins[0], ins[1], p["keys_left"], p["keys_right"],
+                    p["aggs_left"], p["aggs_right"], mesh,
+                    axis=shuffle_axis, skew_factor=skew_factor,
+                    co_partitioned=co)
+                extra["shuffle_overflow"] = ovf
+            else:
+                v = op_cogroup(ins[0], ins[1], p["keys_left"],
+                               p["keys_right"], p["aggs_left"],
+                               p["aggs_right"], hc)
         elif op.kind == "DISTINCT":
-            v = op_distinct(ins[0], hc)
+            if mesh is not None:
+                v, ovf = distributed_distinct(
+                    ins[0], mesh, axis=shuffle_axis,
+                    skew_factor=skew_factor,
+                    co_partitioned=_skip(op, 0, ins[0]))
+                extra["shuffle_overflow"] = ovf
+            else:
+                v = op_distinct(ins[0], hc)
         elif op.kind == "UNION":
             v = op_union(ins[0], ins[1])
         elif op.kind == "SPLIT":

@@ -1,88 +1,276 @@
 """Distributed shuffle for the relational engine: the MapReduce
-map->shuffle->reduce stage as a shard_map program.
+map->shuffle->reduce stage as a shard_map program (DESIGN.md §11).
 
 Hadoop's sort-shuffle writes spill files; the TPU-native exchange is:
 
-  map side   : hash rows -> destination shard (radix_partition kernel's
-               binning), bucket rows per destination with a bounded
-               per-destination capacity (skew overflows are counted, as
-               in the join's probe-window contract);
+  map side   : hash rows -> destination shard (the radix_partition
+               kernel's binning), bucket rows per destination with a
+               bounded per-destination capacity (skew overflows are
+               counted, as in the join's probe-window contract);
   shuffle    : one jax.lax.all_to_all along the "data" axis per column
                (the T_sort term of Eq. 2 becomes ICI traffic);
   reduce side: rows for the same key are now co-located — the ordinary
                sort-based segment aggregation runs per shard.
 
-This is the engine's scale-out path: the dry-run lowers a GROUPBY job on
-the production 16x16 mesh, and the parity test checks an 8-device run
-against the single-device operator.
+Every blocking operator (GROUPBY / DISTINCT / JOIN / COGROUP) has a
+distributed form here, and every one has a **shuffle-free** variant:
+when the input is already hash-partitioned on compatible keys across
+the same shard count (a co-partitioned repository artifact, or the
+output of an upstream exchange — M3R's partition stability), the
+map+all_to_all phases are skipped entirely and only the local reduce
+runs.  That skip is what partition-aware reuse buys: a reused artifact
+answers not just the compute but the exchange.
+
+Losslessness: the per-destination bucket is ``min(cap_loc, max(8,
+cap_loc * skew_factor / n_shards))`` rows, so ``skew_factor >=
+n_shards`` makes the exchange lossless (every source shard can route
+all of its rows to a single destination); smaller factors trade memory
+for a counted overflow, exactly like the join probe window.
 """
 from __future__ import annotations
-
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .physical import op_groupby
-from .table import Table, hash_columns
+from ..core.plan import _join_out_names
+from ..launch.mesh import shard_map
+from .physical import (_cogroup_prepare, _cogroup_rename, op_distinct,
+                       op_groupby, op_join, use_pallas)
+from .table import Table, partition_hash
+
+
+def pad_to_multiple(table: Table, mult: int) -> Table:
+    """Append invalid rows so ``capacity % mult == 0`` (shard_map needs
+    the row dimension divisible by the mesh axis)."""
+    pad = (-table.capacity) % mult
+    if pad == 0:
+        return table
+    cols = {n: jnp.concatenate(
+        [c, jnp.zeros((pad,) + c.shape[1:], c.dtype)])
+        for n, c in table.columns.items()}
+    valid = jnp.concatenate([table.valid, jnp.zeros((pad,), bool)])
+    return Table(cols, valid)
+
+
+def _bucket_size(cap_loc: int, n_shards: int, skew_factor: float) -> int:
+    return min(cap_loc, max(8, int(cap_loc * skew_factor / n_shards)))
+
+
+def _dest_ids(local: Table, keys, n_shards: int) -> jnp.ndarray:
+    """Per-row destination shard (invalid rows parked at ``n_shards``),
+    via the radix_partition kernel when the shard count is its
+    power-of-two binning."""
+    h = partition_hash(local, keys)
+    cap = local.capacity
+    tile = cap if cap % 256 else 256
+    if n_shards & (n_shards - 1) == 0:
+        from ..kernels.radix_partition.ops import partition
+        pid, _hist = partition(
+            h, local.valid, n_parts=n_shards, tile_n=tile,
+            impl="pallas" if use_pallas() else "ref",
+            interpret=jax.default_backend() != "tpu")
+        return pid
+    pid = (h % jnp.uint32(n_shards)).astype(jnp.int32)
+    return jnp.where(local.valid, pid, n_shards)
+
+
+def _exchange(local: Table, dest: jnp.ndarray, n_shards: int,
+              bucket: int, axis: str):
+    """Bucket rows by destination shard and all_to_all them.  Runs
+    inside a shard_map body.  Returns (received Table with capacity
+    ``n_shards * bucket``, global overflow count)."""
+    order = jnp.argsort(dest)
+    sdest = jnp.take(dest, order)
+    seg_start = jnp.searchsorted(sdest, sdest, side="left")
+    rank = jnp.arange(sdest.shape[0]) - seg_start
+    keep = (sdest < n_shards) & (rank < bucket)
+    slot = jnp.where(keep, sdest * bucket + rank, n_shards * bucket)
+    overflow = jnp.sum(((sdest < n_shards) & ~keep).astype(jnp.int32))
+    overflow = jax.lax.psum(overflow, axis)
+
+    out_cols = {}
+    for n in local.names:
+        c = jnp.take(local.col(n), order, axis=0)
+        buf = jnp.zeros((n_shards * bucket,) + c.shape[1:], c.dtype)
+        buf = buf.at[slot].set(c, mode="drop")
+        buf = buf.reshape((n_shards, bucket) + c.shape[1:])
+        out_cols[n] = jax.lax.all_to_all(
+            buf, axis, split_axis=0, concat_axis=0, tiled=False
+        ).reshape((n_shards * bucket,) + c.shape[1:])
+    vbuf = jnp.zeros((n_shards * bucket,), bool).at[slot].set(
+        jnp.take(local.valid, order), mode="drop")
+    vrecv = jax.lax.all_to_all(
+        vbuf.reshape(n_shards, bucket), axis,
+        split_axis=0, concat_axis=0, tiled=False).reshape(-1)
+    return Table(out_cols, vrecv), overflow
+
+
+def _table_specs(table: Table, axis: str):
+    return tuple(P(axis) for _ in table.names) + (P(axis),)
+
+
+def _table_args(table: Table):
+    return tuple(table.col(n) for n in table.names) + (table.valid,)
+
+
+def _as_local(names, flat):
+    return Table(dict(zip(names, flat[:-1])), flat[-1])
 
 
 def distributed_groupby(table: Table, keys, aggs, mesh,
-                        axis: str = "data", skew_factor: float = 4.0
-                        ) -> Tuple[Table, jnp.ndarray]:
+                        axis: str = "data", skew_factor: float = 4.0,
+                        co_partitioned: bool = False):
     """GROUPBY over a row-sharded Table.  Returns (result table sharded
     over ``axis`` — each shard holds the groups of its hash range —
-    and the global overflow count)."""
+    and the global overflow count).  With ``co_partitioned`` the input
+    is already hash-partitioned on (a subset of) ``keys`` across the
+    shards and the exchange is skipped (DESIGN.md §11)."""
     n_shards = mesh.shape[axis]
+    if not co_partitioned:
+        table = pad_to_multiple(table, n_shards)
     names = table.names
     cap_loc = table.capacity // n_shards
-    bucket = max(8, int(cap_loc * skew_factor / n_shards))
+    bucket = _bucket_size(cap_loc, n_shards, skew_factor)
 
-    def body(*cols_and_valid):
-        cols = dict(zip(names, cols_and_valid[:-1]))
-        valid = cols_and_valid[-1]
-        local = Table(cols, valid)
+    def body(*flat):
+        local = _as_local(names, flat)
+        if co_partitioned:
+            recv, overflow = local, jnp.zeros((), jnp.int32)
+        else:
+            dest = _dest_ids(local, keys, n_shards)
+            recv, overflow = _exchange(local, dest, n_shards, bucket, axis)
+        grouped = op_groupby(recv, keys, aggs)
+        return _table_args(grouped) + (overflow,)
 
-        dest = (hash_columns(local, keys, seed=7)
-                % jnp.uint32(n_shards)).astype(jnp.int32)
-        dest = jnp.where(valid, dest, n_shards)       # park invalid
-        order = jnp.argsort(dest)
-        sdest = jnp.take(dest, order)
-        seg_start = jnp.searchsorted(sdest, sdest, side="left")
-        rank = jnp.arange(sdest.shape[0]) - seg_start
-        keep = (sdest < n_shards) & (rank < bucket)
-        slot = jnp.where(keep, sdest * bucket + rank, n_shards * bucket)
-        overflow = jnp.sum(((sdest < n_shards) & ~keep).astype(jnp.int32))
-        overflow = jax.lax.psum(overflow, axis)
-
-        out_cols = {}
-        for n in names:
-            c = jnp.take(local.col(n), order, axis=0)
-            buf = jnp.zeros((n_shards * bucket,) + c.shape[1:], c.dtype)
-            buf = buf.at[slot].set(c, mode="drop")
-            buf = buf.reshape((n_shards, bucket) + c.shape[1:])
-            out_cols[n] = jax.lax.all_to_all(
-                buf, axis, split_axis=0, concat_axis=0, tiled=False
-            ).reshape((n_shards * bucket,) + c.shape[1:])
-        vbuf = jnp.zeros((n_shards * bucket,), bool).at[slot].set(
-            jnp.take(valid, order), mode="drop")
-        vrecv = jax.lax.all_to_all(
-            vbuf.reshape(n_shards, bucket), axis,
-            split_axis=0, concat_axis=0, tiled=False).reshape(-1)
-
-        grouped = op_groupby(Table(out_cols, vrecv), keys, aggs)
-        flat = tuple(grouped.col(n) for n in grouped.names) \
-            + (grouped.valid, overflow)
-        return flat
-
-    in_specs = tuple(P(axis) for _ in names) + (P(axis),)
-    # probe output structure once to build out_specs
     out_names = sorted(set(list(keys) + list(aggs)))
     out_specs = tuple(P(axis) for _ in out_names) + (P(axis), P())
+    flat = shard_map(body, mesh, _table_specs(table, axis), out_specs)(
+        *_table_args(table))
+    return Table(dict(zip(out_names, flat[:-2])), flat[-2]), flat[-1]
 
-    flat = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)(
-        *(table.col(n) for n in names), table.valid)
-    cols = dict(zip(out_names, flat[:-2]))
-    return Table(cols, flat[-2]), flat[-1]
+
+def distributed_distinct(table: Table, mesh, axis: str = "data",
+                         skew_factor: float = 4.0,
+                         co_partitioned: bool = False):
+    """DISTINCT over a row-sharded Table: exchange on all columns (equal
+    rows co-locate), then the ordinary local distinct per shard."""
+    n_shards = mesh.shape[axis]
+    if not co_partitioned:
+        table = pad_to_multiple(table, n_shards)
+    names = table.names
+    cap_loc = table.capacity // n_shards
+    bucket = _bucket_size(cap_loc, n_shards, skew_factor)
+
+    def body(*flat):
+        local = _as_local(names, flat)
+        if co_partitioned:
+            recv, overflow = local, jnp.zeros((), jnp.int32)
+        else:
+            dest = _dest_ids(local, names, n_shards)
+            recv, overflow = _exchange(local, dest, n_shards, bucket, axis)
+        uniq = op_distinct(recv)
+        return _table_args(uniq) + (overflow,)
+
+    out_specs = tuple(P(axis) for _ in names) + (P(axis), P())
+    flat = shard_map(body, mesh, _table_specs(table, axis), out_specs)(
+        *_table_args(table))
+    return Table(dict(zip(names, flat[:-2])), flat[-2]), flat[-1]
+
+
+def distributed_join(left: Table, right: Table, lkeys, rkeys, mesh,
+                     axis: str = "data", expansion: int = 1,
+                     skew_factor: float = 4.0,
+                     co_left: bool = False, co_right: bool = False):
+    """Inner equi-join: both sides are hash-exchanged on their keys with
+    POSITIONALLY aligned partition hashes (matching key values land on
+    the same shard), then the local sort+probe join runs per shard.
+    Either side skips its exchange when already aligned-partitioned.
+    Returns (table, exchange overflow, probe-window overflow) — the two
+    loss modes are audited separately (JobStats.shuffle_overflow vs
+    join_overflow)."""
+    n_shards = mesh.shape[axis]
+    if not co_left:
+        left = pad_to_multiple(left, n_shards)
+    if not co_right:
+        right = pad_to_multiple(right, n_shards)
+    lnames, rnames = left.names, right.names
+    lbucket = _bucket_size(left.capacity // n_shards, n_shards, skew_factor)
+    rbucket = _bucket_size(right.capacity // n_shards, n_shards, skew_factor)
+
+    def body(*flat):
+        nl = len(lnames) + 1
+        llocal = _as_local(lnames, flat[:nl])
+        rlocal = _as_local(rnames, flat[nl:])
+        if co_left:
+            lrecv, lovf = llocal, jnp.zeros((), jnp.int32)
+        else:
+            lrecv, lovf = _exchange(llocal, _dest_ids(llocal, lkeys, n_shards),
+                                    n_shards, lbucket, axis)
+        if co_right:
+            rrecv, rovf = rlocal, jnp.zeros((), jnp.int32)
+        else:
+            rrecv, rovf = _exchange(rlocal, _dest_ids(rlocal, rkeys, n_shards),
+                                    n_shards, rbucket, axis)
+        joined, jovf = op_join(lrecv, rrecv, lkeys, rkeys, expansion)
+        return _table_args(joined) + (lovf + rovf,
+                                      jax.lax.psum(jovf, axis))
+
+    # the SEQUENTIAL rename rule shared with op_join/plan props: a
+    # right-side name colliding with an already-renamed "_r" column
+    # chains to "_r_r" — a set comprehension would collapse it and
+    # desynchronize out_specs from the body's returned columns
+    out_names = list(_join_out_names(lnames, rnames))
+    in_specs = _table_specs(left, axis) + _table_specs(right, axis)
+    out_specs = tuple(P(axis) for _ in out_names) + (P(axis), P(), P())
+    flat = shard_map(body, mesh, in_specs, out_specs)(
+        *(_table_args(left) + _table_args(right)))
+    return (Table(dict(zip(out_names, flat[:-3])), flat[-3]),
+            flat[-2], flat[-1])
+
+
+def distributed_cogroup(a: Table, b: Table, keys_l, keys_r,
+                        aggs_l, aggs_r, mesh, axis: str = "data",
+                        skew_factor: float = 4.0,
+                        co_partitioned: bool = False):
+    """COGROUP: both inputs are aligned onto the shared (k0..kn, va_*,
+    vb_*) schema on the map side, exchanged on the unified keys, then
+    unioned + grouped locally per shard.  The union happens INSIDE the
+    shard body: concatenating the global tables first would interleave
+    the two inputs' partition blocks and break co-location."""
+    n_shards = mesh.shape[axis]
+    ta, tb, keys, aggs = _cogroup_prepare(a, b, keys_l, keys_r,
+                                          aggs_l, aggs_r)
+    if not co_partitioned:
+        ta = pad_to_multiple(ta, n_shards)
+        tb = pad_to_multiple(tb, n_shards)
+    anames, bnames = ta.names, tb.names
+    abucket = _bucket_size(ta.capacity // n_shards, n_shards, skew_factor)
+    bbucket = _bucket_size(tb.capacity // n_shards, n_shards, skew_factor)
+
+    def body(*flat):
+        na = len(anames) + 1
+        aloc = _as_local(anames, flat[:na])
+        bloc = _as_local(bnames, flat[na:])
+        if co_partitioned:
+            arecv, brecv = aloc, bloc
+            overflow = jnp.zeros((), jnp.int32)
+        else:
+            arecv, aovf = _exchange(aloc, _dest_ids(aloc, keys, n_shards),
+                                    n_shards, abucket, axis)
+            brecv, bovf = _exchange(bloc, _dest_ids(bloc, keys, n_shards),
+                                    n_shards, bbucket, axis)
+            overflow = aovf + bovf
+        cols = {n: jnp.concatenate([arecv.col(n), brecv.col(n)])
+                for n in arecv.names}
+        both = Table(cols, jnp.concatenate([arecv.valid, brecv.valid]))
+        grouped = op_groupby(both, keys, aggs)
+        return _table_args(grouped) + (overflow,)
+
+    out_names = sorted(set(list(keys) + list(aggs)))
+    in_specs = _table_specs(ta, axis) + _table_specs(tb, axis)
+    out_specs = tuple(P(axis) for _ in out_names) + (P(axis), P())
+    flat = shard_map(body, mesh, in_specs, out_specs)(
+        *(_table_args(ta) + _table_args(tb)))
+    grouped = Table(dict(zip(out_names, flat[:-2])), flat[-2])
+    return _cogroup_rename(grouped, keys_l), flat[-1]

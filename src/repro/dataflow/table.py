@@ -14,6 +14,7 @@ Tables are pytrees so they flow through jit/shard_map unchanged.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Dict, Tuple
 
 import jax
@@ -218,6 +219,40 @@ def hash_columns(table: Table, names, seed: int = 0) -> jnp.ndarray:
     for i, n in enumerate(sorted(names)):
         h = _mix32(h * jnp.uint32(31) + hash_column(table.col(n), seed + i), seed)
     return h
+
+
+# Canonical seed of the *partition* hash: every component that assigns
+# rows to shards — the shard_map exchange, the artifact store's sharded
+# writer, and re-partition-on-read — must agree bit-for-bit on
+# hash(keys) % P, or "co-partitioned" artifacts would silently hold rows
+# on the wrong shard (DESIGN.md §11).
+PARTITION_SEED = 7
+
+
+def partition_hash(table: Table, keys) -> jnp.ndarray:
+    """uint32 partition hash mixing the key columns in the GIVEN order.
+
+    Unlike ``hash_columns`` (which sorts names so GROUPBY fingerprints
+    are order-insensitive), partition hashing is positional: the two
+    sides of a JOIN carry differently-named key columns, and their
+    partition functions only agree if column i on the left is hashed
+    exactly like column i on the right."""
+    h = jnp.zeros(table.capacity, dtype=jnp.uint32)
+    for i, n in enumerate(keys):
+        h = _mix32(h * jnp.uint32(31)
+                   + hash_column(table.col(n), PARTITION_SEED + i),
+                   PARTITION_SEED)
+    return h
+
+
+@partial(jax.jit, static_argnames=("keys", "n_parts"))
+def partition_ids_device(table: Table, keys: Tuple[str, ...],
+                         n_parts: int) -> jnp.ndarray:
+    """Jitted ``partition_hash(keys) % n_parts`` — the artifact store
+    computes this on every partitioned put (the one on-clock device pass
+    of a sharded store), so the ~dozen hash-mix ops must launch as one
+    fused computation, not eager per-op dispatches."""
+    return partition_hash(table, keys) % jnp.uint32(n_parts)
 
 
 def cols_equal(table_a: Table, idx_a, table_b: Table, idx_b, names) -> jnp.ndarray:

@@ -1,13 +1,37 @@
-"""Production mesh construction.
+"""Production mesh construction + shard_map version compatibility.
 
-A FUNCTION (not a module-level constant) so importing this module never
-touches JAX device state — the dry-run sets
+Mesh builders are FUNCTIONS (not module-level constants) so importing
+this module never touches JAX device state — the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any JAX
 import, and tests/benches must keep seeing 1 device.
 """
 from __future__ import annotations
 
 import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """Version-portable ``shard_map``.
+
+    Newer JAX exposes ``jax.shard_map`` with the replication check named
+    ``check_vma``; on older releases (our pinned CI floor) the function
+    lives in ``jax.experimental.shard_map`` and the same knob is
+    ``check_rep``.  Every shard_map in this repo goes through here so an
+    API rename surfaces in exactly one place."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check)
+
+
+def make_data_mesh(n_shards: int, axis: str = "data"):
+    """1-D data mesh over the first ``n_shards`` devices — the MapReduce
+    scale-out axis of the relational engine (DESIGN.md §11)."""
+    n = len(jax.devices())
+    assert n_shards <= n, (n_shards, n)
+    return jax.make_mesh((n_shards,), (axis,))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

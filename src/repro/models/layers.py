@@ -246,13 +246,13 @@ def _decode_attn_seq_sharded(q, k_new, v_new, cache, cache_index, mesh):
         out = o / jnp.maximum(l, 1e-30)[..., None]
         return out.astype(q.dtype), ck2, cv2
 
+    from ..launch.mesh import shard_map
     rep4 = P(dp_spec, None, None, None)
     cache_spec = P(dp_spec, None, "model", None)
-    out, ck2, cv2 = jax.shard_map(
+    out, ck2, cv2 = shard_map(
         body, mesh=mesh,
         in_specs=(rep4, rep4, rep4, cache_spec, cache_spec, P()),
         out_specs=(rep4, cache_spec, cache_spec),
-        check_vma=False,
     )(q, k_new, v_new, ck, cv, cache_index)
     return out, (ck2, cv2)
 
@@ -633,12 +633,12 @@ def _moe_forward_shard_map(cfg: ModelConfig, p: Params, x, mesh):
         out = jax.lax.psum(out, "model")
         return out.reshape(bl, sl, d), aux
 
-    out, aux = jax.shard_map(
+    from ..launch.mesh import shard_map
+    out, aux = shard_map(
         body, mesh=mesh,
         in_specs=(P(dp_spec, None, None), P(), P("model", None, None),
                   P("model", None, None), P("model", None, None)),
         out_specs=(P(dp_spec, None, None), P()),
-        check_vma=False,
     )(x, p["router"], p["wg"], p["wu"], p["wd"])
 
     if m.n_shared:   # shared expert: plain TP outside the shard_map

@@ -37,7 +37,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from ..dataflow.table import Table
+from ..dataflow.table import Table, partition_ids_device
 
 # Default byte bound for the device-resident cache tier.
 DEFAULT_CACHE_BYTES = int(os.environ.get("RESTORE_CACHE_BYTES",
@@ -71,6 +71,62 @@ def _decode_name(enc: str) -> str:
             out.append(enc[i])
             i += 1
     return "".join(out)
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def _partition_ids(table: Table, keys, n_parts: int) -> np.ndarray:
+    """Host-side partition ids: the same ``partition_hash(keys) % P``
+    the shard_map exchange computes (DESIGN.md §11) — store and executor
+    must agree bit-for-bit on row placement."""
+    return np.asarray(partition_ids_device(
+        table, tuple(keys), int(n_parts))).astype(np.int64)
+
+
+def _partition_layout(table: Table, keys, n_parts: int,
+                      mask: Optional[np.ndarray] = None):
+    """(pid, per-partition valid row counts, shard capacity) for storing
+    ``table`` as ``n_parts`` equal-capacity partition shards.  Pass the
+    host validity ``mask`` when the caller already transferred it —
+    put() is on the timed store path and must not re-sync it."""
+    pid = _partition_ids(table, keys, n_parts)
+    if mask is None:
+        mask = np.asarray(table.valid).astype(bool)
+    counts = np.bincount(pid[mask], minlength=n_parts)
+    shard_cap = max(8, _pow2ceil(counts.max() if counts.size else 1))
+    return pid, counts, shard_cap
+
+
+def _slice_partitions(host_cols: Dict[str, np.ndarray], mask: np.ndarray,
+                      pid: np.ndarray, n_parts: int, shard_cap: int):
+    """Slice host columns into per-partition blocks, each truncated and
+    zero-padded to ``shard_cap`` rows.  The ONE implementation of the
+    block layout — the sharded writer and re-partition-on-read must
+    stay bit-identical.  One stable argsort of the partition ids, then
+    per-partition view slicing: O(n log n), not O(n * n_parts) mask
+    rescans (a 256-shard production mesh would scan the table 256x).
+    Returns ({col: [block per partition]}, [valid rows per partition]).
+    """
+    rows = np.flatnonzero(mask)
+    pr = pid[rows]
+    order = np.argsort(pr, kind="stable")     # within-partition row order
+    rows_s, pr_s = rows[order], pr[order]
+    starts = np.searchsorted(pr_s, np.arange(n_parts))
+    rank = np.arange(len(rows_s)) - starts[pr_s.astype(np.intp)]
+    keep = rank < shard_cap                   # truncate overfull shards
+    pos = (pr_s * shard_cap + rank)[keep]
+    rows_k = rows_s[keep]
+    counts = [int(c) for c in
+              np.minimum(np.bincount(pr_s, minlength=n_parts), shard_cap)]
+    blocks: Dict[str, list] = {}
+    for n, a in host_cols.items():
+        out = np.zeros((n_parts * shard_cap,) + a.shape[1:], a.dtype)
+        out[pos] = a[rows_k]
+        blocks[n] = [out[p * shard_cap:(p + 1) * shard_cap]
+                     for p in range(n_parts)]
+    return blocks, counts
 
 
 class DeviceCache:
@@ -134,6 +190,13 @@ class DeviceCache:
             if ent is not None:
                 self.total_bytes -= ent[1]
 
+    def drop_prefix(self, prefix: str):
+        """Drop every entry whose key starts with ``prefix`` (derived
+        re-partitioned views of a deleted artifact)."""
+        with self._lock:
+            for k in [k for k in self._entries if k.startswith(prefix)]:
+                self.total_bytes -= self._entries.pop(k)[1]
+
     def __contains__(self, name: str) -> bool:
         with self._lock:
             return name in self._entries
@@ -152,7 +215,8 @@ class _WriteBehind:
         self._store = store
         self._max_depth = max_depth
         self._cv = threading.Condition()
-        self._jobs: Dict[str, Tuple[Table, dict]] = {}   # newest data wins
+        # name -> (table, meta, pid) — newest data wins
+        self._jobs: Dict[str, Tuple] = {}
         self._order: "collections.deque[str]" = collections.deque()
         self._queued = set()
         self._writing: Optional[str] = None
@@ -178,7 +242,7 @@ class _WriteBehind:
         except BaseException:
             pass
 
-    def submit(self, name: str, table: Table, meta: dict):
+    def submit(self, name: str, table: Table, meta: dict, pid=None):
         with self._cv:
             if self._error is not None:
                 err, self._error = self._error, None
@@ -188,7 +252,7 @@ class _WriteBehind:
             while (len(self._order) >= self._max_depth
                    and name not in self._queued):
                 self._cv.wait()
-            self._jobs[name] = (table, meta)
+            self._jobs[name] = (table, meta, pid)
             if name not in self._queued:
                 self._queued.add(name)
                 self._order.append(name)
@@ -255,7 +319,8 @@ class _WriteBehind:
             err = None
             compacted = None
             try:
-                compacted = self._store._write_to_disk(name, job[0], job[1])
+                compacted = self._store._write_to_disk(name, job[0], job[1],
+                                                       pid=job[2])
             except BaseException as e:   # surfaced on next flush()/put()
                 err = e
             with self._cv:
@@ -302,6 +367,9 @@ class ArtifactStore:
                     "memload_bytes": 0, "memload_s": 0.0,
                     "store_bytes": 0, "store_s": 0.0}
         self.cache = DeviceCache(cache_bytes)
+        # effective partitioning of cached re-partitioned views
+        # (keyed by the derived "<name>#repart..." cache names)
+        self._repart_meta: Dict[str, dict] = {}
         self._wb = _WriteBehind(self, queue_depth) if write_behind else None
         if root:
             os.makedirs(root, exist_ok=True)
@@ -341,12 +409,23 @@ class ArtifactStore:
         with open(os.path.join(self._path(name), "manifest.json")) as f:
             return json.load(f)
 
-    def _write_to_disk(self, name: str, table: Table, meta: dict) -> Table:
+    def _write_to_disk(self, name: str, table: Table, meta: dict,
+                       pid=None) -> Table:
         """Compact host-side, serialize, atomically publish one artifact.
         Runs on the flusher thread (write-behind) or inline
         (write_behind=False); either way a crash mid-write leaves only an
         unpublished tmp dir, never a torn artifact.  Returns the
-        compacted table (numpy-backed) for the device-cache swap."""
+        compacted table (numpy-backed) for the device-cache swap.
+
+        Partitioned artifacts (``meta["partitioning"]``) are written as
+        one ``shard_%05d.npz`` file per partition — each shard compacted
+        to the common ``shard_capacity`` — instead of one ``data.npz``;
+        the returned table concatenates the shards in partition order,
+        i.e. exactly the block layout the mesh loader shards by
+        (DESIGN.md §11)."""
+        part = meta.get("partitioning")
+        if part is not None:
+            return self._write_sharded(name, table, meta, pid)
         packed = table.host_compact(meta["capacity"], meta["rows"])
         valid = packed.pop("__valid__")
         final = self._path(name)
@@ -366,6 +445,37 @@ class ArtifactStore:
         return Table({n: jnp.asarray(a) for n, a in packed.items()},
                      jnp.asarray(valid))
 
+    def _write_sharded(self, name: str, table: Table, meta: dict,
+                       pid=None) -> Table:
+        part = meta["partitioning"]
+        n_parts, shard_cap = part["n_parts"], part["shard_capacity"]
+        if pid is None:     # write_behind=False path recomputes inline
+            pid = _partition_ids(table, part["keys"], n_parts)
+        mask = np.asarray(table.valid).astype(bool)
+        host = {n: np.asarray(c) for n, c in table.columns.items()}
+        blocks, counts = _slice_partitions(host, mask, pid, n_parts,
+                                           shard_cap)
+        vblocks = [np.arange(shard_cap) < c for c in counts]
+        final = self._path(name)
+        tmp = tempfile.mkdtemp(dir=self.root, prefix=".tmp-")
+        try:
+            for p in range(n_parts):
+                np.savez(os.path.join(tmp, f"shard_{p:05d}.npz"),
+                         __valid__=vblocks[p],
+                         **{n: blocks[n][p] for n in host})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)        # atomic publish
+        except Exception:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        import jax.numpy as jnp
+        return Table({n: jnp.asarray(np.concatenate(bs))
+                      for n, bs in blocks.items()},
+                     jnp.asarray(np.concatenate(vblocks)))
+
     # ------------------------------------------------------------------ api
     def exists(self, name: str) -> bool:
         name = self._resolve(name)
@@ -378,7 +488,17 @@ class ArtifactStore:
         """Measured transfer totals for cost-model calibration."""
         return dict(self._io)
 
-    def put(self, name: str, table: Table) -> dict:
+    def put(self, name: str, table: Table,
+            partitioning: Optional[dict] = None) -> dict:
+        """Store ``table`` under ``name``.
+
+        ``partitioning`` (``{"keys": [...], "n_parts": P, "scheme":
+        "hash_mod"}`` or a ``core.plan.Partitioning``) records the
+        partition property of the value: the artifact is then written as
+        P per-partition shard files (row r in shard ``hash(keys)(r) %
+        P``), each compacted to a common power-of-2 shard capacity, and
+        the property lands in the manifest so a consumer co-partitioned
+        on the same keys can load it shuffle-free (DESIGN.md §11)."""
         t_start = time.perf_counter()
         name = self._resolve(name)
         # Stored artifacts shrink to the live row count (next power of 2):
@@ -387,19 +507,52 @@ class ArtifactStore:
         # file is only as big as its rows.  The compaction itself happens
         # host-side on the flusher thread; the only on-clock work here is
         # one read of the (already synchronized) validity mask — a
-        # zero-copy view on CPU, one small transfer on TPU.
-        nvalid = int(np.asarray(table.valid).sum())
-        storecap = min(table.capacity,
-                       max(8, 1 << (max(nvalid, 1) - 1).bit_length()))
+        # zero-copy view on CPU, one small transfer on TPU — plus, for
+        # partitioned artifacts, one pass of the partition hash.
+        valid_mask = np.asarray(table.valid).astype(bool)
+        nvalid = int(valid_mask.sum())
+        pid = None
+        if partitioning is not None:
+            if hasattr(partitioning, "to_dict"):
+                partitioning = partitioning.to_dict()
+            part = {"keys": [str(k) for k in partitioning["keys"]],
+                    "n_parts": int(partitioning["n_parts"]),
+                    "scheme": partitioning.get("scheme", "hash_mod")}
+            pid, counts, shard_cap = _partition_layout(
+                table, part["keys"], part["n_parts"], mask=valid_mask)
+            # the live table is served from the device cache as-is, so
+            # the claimed property must already hold physically: valid
+            # row r lives in block r // (capacity/P).  A violated claim
+            # would let a consumer skip an exchange it actually needs.
+            P_ = part["n_parts"]
+            mask = valid_mask
+            blk = table.capacity // P_ if table.capacity % P_ == 0 else 0
+            if blk == 0 or not np.array_equal(
+                    pid[mask], np.arange(table.capacity)[mask] // blk):
+                raise ValueError(
+                    f"put({name!r}): table layout does not match claimed "
+                    f"partitioning {part['keys']} x {P_}")
+            part["shard_capacity"] = int(shard_cap)
+            part["shard_rows"] = [int(c) for c in counts]
+            storecap = shard_cap * part["n_parts"]
+        else:
+            part = None
+            storecap = min(table.capacity,
+                           max(8, 1 << (max(nvalid, 1) - 1).bit_length()))
         # manifest capacity/nbytes describe the *stored* (compacted)
-        # artifact, so they always agree with data.npz on reload; both
-        # are pure arithmetic over the schema — no data is touched
+        # artifact, so they always agree with the data files on reload;
+        # both are pure arithmetic over the schema — no data is touched
         nbytes = storecap
         for c in table.columns.values():
             width = int(c.shape[1]) if c.ndim == 2 else 1
             nbytes += c.dtype.itemsize * storecap * width
         meta = dict(name=name, capacity=storecap, rows=nvalid,
                     nbytes=int(nbytes), created=time.time())
+        if part is not None:
+            meta["partitioning"] = part
+        # a re-put replaces the artifact's data, so any cached
+        # re-partitioned views derived from the OLD data are stale now
+        self._drop_derived(name)
         # cache the live (uncompacted) device table: the flusher swaps in
         # the compacted version once it is published.  meta is recorded
         # BEFORE submit so the flusher's failed-write de-advertising
@@ -409,9 +562,10 @@ class ArtifactStore:
         try:
             if self.root:
                 if self._wb is not None:
-                    self._wb.submit(name, table, meta)
+                    self._wb.submit(name, table, meta, pid)
                 else:
-                    compacted = self._write_to_disk(name, table, meta)
+                    compacted = self._write_to_disk(name, table, meta,
+                                                    pid=pid)
                     self.cache.put(name, compacted, meta["nbytes"])
             else:
                 self.mem[name] = table
@@ -440,18 +594,119 @@ class ArtifactStore:
             pend = self._wb.pending(name)
             if pend is not None:         # evicted from cache, not yet on disk
                 return pend
-        path = os.path.join(self._path(name), "data.npz")
-        if not os.path.exists(path):
-            raise KeyError(name)
-        z = np.load(path)
-        valid = z["__valid__"]
-        cols = {n: z[n] for n in z.files if n != "__valid__"}
+        m = self.meta.get(name)
+        if m is None and os.path.exists(
+                os.path.join(self._path(name), "manifest.json")):
+            m = self.meta[name] = self._read_manifest(name)
+        part = (m or {}).get("partitioning")
         import jax.numpy as jnp
-        t = Table({n: jnp.asarray(a) for n, a in cols.items()},
-                  jnp.asarray(valid))
+        if part is not None:
+            # sharded load: concatenating the shards in partition order
+            # IS the mesh-ready block layout (shard i -> device i)
+            cols: Dict[str, list] = {}
+            valids = []
+            for p in range(part["n_parts"]):
+                sp = os.path.join(self._path(name), f"shard_{p:05d}.npz")
+                if not os.path.exists(sp):
+                    raise KeyError(name)
+                z = np.load(sp)
+                valids.append(z["__valid__"])
+                for n in z.files:
+                    if n != "__valid__":
+                        cols.setdefault(n, []).append(z[n])
+            t = Table({n: jnp.asarray(np.concatenate(bs))
+                       for n, bs in cols.items()},
+                      jnp.asarray(np.concatenate(valids)))
+        else:
+            path = os.path.join(self._path(name), "data.npz")
+            if not os.path.exists(path):
+                raise KeyError(name)
+            z = np.load(path)
+            valid = z["__valid__"]
+            t = Table({n: jnp.asarray(z[n])
+                       for n in z.files if n != "__valid__"},
+                      jnp.asarray(valid))
         self.cache.put(name, t, t.nbytes())
         self._sample_load(name, t_start, tier="load")
         return t
+
+    def _drop_derived(self, name: str) -> None:
+        """Invalidate cached ``<name>#repart...`` views (put/delete of
+        the base artifact makes them stale)."""
+        self.cache.drop_prefix(name + "#repart")
+        for k in [k for k in self._repart_meta
+                  if k.startswith(name + "#repart")]:
+            del self._repart_meta[k]
+
+    def column_names(self, name: str) -> Tuple[str, ...]:
+        """Column names of a stored artifact WITHOUT materializing it:
+        cache/memory tables answer directly; on disk only the npz
+        directory is read (lazy NpzFile — no data decompressed).  The
+        mesh executor needs schemas for its static partition
+        propagation, and a full load here would move T_load off the
+        timed window (DESIGN.md §11)."""
+        name = self._resolve(name)
+        t = self.cache.get(name)
+        if t is None:
+            t = self.mem.get(name)
+        if t is None and self._wb is not None:
+            t = self._wb.pending(name)
+        if t is not None:
+            return tuple(t.names)
+        if not self.root:
+            raise KeyError(name)
+        part = self.partitioning(name)
+        fn = "shard_00000.npz" if part is not None else "data.npz"
+        path = os.path.join(self._path(name), fn)
+        if not os.path.exists(path):
+            raise KeyError(name)
+        with np.load(path) as z:
+            return tuple(sorted(n for n in z.files if n != "__valid__"))
+
+    # ------------------------------------------------------- partitioning
+    def partitioning(self, name: str) -> Optional[dict]:
+        """The stored partition property of an artifact (None when the
+        artifact is monolithic or unknown)."""
+        m = self.meta.get(self._resolve(name))
+        return (m or {}).get("partitioning")
+
+    def get_partitioned(self, name: str, keys, n_parts: int
+                        ) -> Tuple[Table, dict]:
+        """Load an artifact arranged for an exchange on ``keys`` across
+        ``n_parts`` shards.  If the stored partitioning already covers
+        the request it is returned as-is (the shuffle-free path); on a
+        partition-count mismatch the table is re-partitioned host-side
+        on read — one pass of the partition hash plus a gather, instead
+        of a device exchange every time the artifact is consumed
+        (DESIGN.md §11).  Returns (table, effective partitioning)."""
+        name = self._resolve(name)
+        keys = [str(k) for k in keys]
+        stored = self.partitioning(name)
+        if stored is not None and stored["n_parts"] == n_parts \
+                and set(stored["keys"]) <= set(keys):
+            return self.get(name), stored
+        ck = f"{name}#repart{n_parts}:{','.join(keys)}"
+        hit = self.cache.get(ck)
+        if hit is not None:
+            return hit, self._repart_meta[ck]
+        t = self.get(name)
+        pid, _counts, shard_cap = _partition_layout(t, keys, n_parts)
+        mask = np.asarray(t.valid).astype(bool)
+        host = {n: np.asarray(c) for n, c in t.columns.items()}
+        blocks, counts = _slice_partitions(host, mask, pid, n_parts,
+                                           shard_cap)
+        import jax.numpy as jnp
+        cols = {n: jnp.asarray(np.concatenate(bs))
+                for n, bs in blocks.items()}
+        valid = jnp.asarray(np.concatenate(
+            [np.arange(shard_cap) < c for c in counts]))
+        t2 = Table(cols, valid)
+        part = {"keys": keys, "n_parts": int(n_parts), "scheme": "hash_mod",
+                "shard_capacity": int(shard_cap),
+                "shard_rows": [int(c) for c in counts]}
+        self._repart_meta[ck] = part
+        self.cache.put(ck, t2, t2.nbytes())
+        return t2, part
 
     def _sample_load(self, name: str, t_start: float, tier: str):
         m = self.meta.get(name)
@@ -472,6 +727,8 @@ class ArtifactStore:
         self.mem.pop(name, None)
         self.meta.pop(name, None)
         self.cache.drop(name)
+        # derived re-partitioned views of the artifact are stale too
+        self._drop_derived(name)
         if self.root:
             p = self._path(name)
             if os.path.exists(p):

@@ -55,6 +55,8 @@ def make_compressed_sync(mesh, dp_axes=("data",)):
     outputs are replicated means."""
     from jax.sharding import PartitionSpec as P
 
+    from ..launch.mesh import shard_map
+
     axis = dp_axes[0] if len(dp_axes) == 1 else dp_axes
 
     def sync(grads, errors):
@@ -72,9 +74,8 @@ def make_compressed_sync(mesh, dp_axes=("data",)):
 
         in_g = jax.tree_util.tree_map(lambda _: P(axis), grads)
         rep = jax.tree_util.tree_map(lambda _: P(), errors)
-        return jax.shard_map(body, mesh=mesh,
-                             in_specs=(in_g, rep),
-                             out_specs=(rep, rep),
-                             check_vma=False)(grads, errors)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(in_g, rep),
+                         out_specs=(rep, rep))(grads, errors)
 
     return sync

@@ -246,3 +246,59 @@ if HAVE_HYPOTHESIS:
     @given(seed=st.integers(0, 10**6), depth=st.integers(1, 4))
     def test_differential_fuzz(seed, depth):
         check_differential(seed, depth)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-executed differential arm (DESIGN.md §11): random plans run on an
+# 8-device mesh — cold, warm (whole-job fast path) and warm after
+# covering seeds — must stay BIT-identical to the single-device plain
+# run.  Spawns a subprocess (XLA_FLAGS must be set before jax imports;
+# the main pytest process keeps seeing 1 device).
+
+_MESH_FUZZ = """
+import numpy as np, jax
+import test_fuzz_reuse as F
+
+mesh = jax.make_mesh((8,), ("data",))
+for seed, depth in [(0, 2), (2, 2), (5, 3)]:
+    rng = np.random.default_rng(seed)
+    plan = F.random_workflow(rng, depth)
+
+    ref_rs = F._fresh(seed, heuristic="off", rewrite_enabled=False,
+                      semantic=False)
+    ref, _ = ref_rs.run_plan(plan)
+
+    # skew_factor = n_shards makes the exchange lossless (bucket ==
+    # local capacity), so tiny skewed tables cannot drop rows
+    rs = F._fresh(seed, heuristic="aggressive", mesh=mesh,
+                  skew_factor=8.0)
+    got, _ = rs.run_plan(plan)
+    F._assert_identical(ref["out"], got["out"], f"mesh-cold[{seed}]")
+    again, rep = rs.run_plan(plan)
+    F._assert_identical(ref["out"], again["out"], f"mesh-warm[{seed}]")
+    assert rep.n_executed == 0, "identical recurring job must fully reuse"
+
+    warm_rs = F._fresh(seed, heuristic="aggressive", mesh=mesh,
+                       skew_factor=8.0)
+    for _ in range(2):
+        warm_rs.run_plan(F.weaken_plan(plan, rng))
+    got3, _ = warm_rs.run_plan(plan)
+    F._assert_identical(ref["out"], got3["out"], f"mesh-warm-sem[{seed}]")
+    print("seed", seed, "OK")
+print("OK")
+"""
+
+
+def test_mesh_differential_fixed_seeds():
+    import os
+    import subprocess
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), os.path.join(repo, "tests")])
+    out = subprocess.run([sys.executable, "-c", _MESH_FUZZ], env=env,
+                         capture_output=True, text=True, timeout=500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert out.stdout.strip().endswith("OK")

@@ -1,0 +1,179 @@
+"""Sharded artifact storage (DESIGN.md §11): per-partition shard files,
+the manifest partition property, bit-identical round-trips vs the
+monolithic layout, and re-partition-on-read when the shard count of a
+stored artifact does not match the consumer's mesh."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.plan import Partitioning
+from repro.dataflow.table import Table, partition_hash
+from repro.store.artifacts import ArtifactStore
+
+
+def make_table(n=200, nkeys=13, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table.from_numpy({
+        "k": rng.integers(0, nkeys, n).astype(np.int32),
+        "k2": rng.integers(0, 5, n).astype(np.int32),
+        "v": rng.integers(0, 100, n).astype(np.float32),
+    })
+
+
+def canon(tb: Table):
+    d = tb.to_numpy()
+    order = np.lexsort(tuple(d[c] for c in sorted(d, reverse=True)))
+    return {c: d[c][order] for c in sorted(d)}
+
+
+def assert_rows_equal(a: Table, b: Table):
+    ca, cb = canon(a), canon(b)
+    assert sorted(ca) == sorted(cb)
+    for c in ca:
+        assert ca[c].dtype == cb[c].dtype, c
+        assert np.array_equal(ca[c], cb[c]), c
+
+
+def assert_block_layout(t: Table, part: dict):
+    """Every valid row of block i must hash to partition i."""
+    cap = t.capacity
+    n_parts = part["n_parts"]
+    assert cap % n_parts == 0
+    blk = cap // n_parts
+    pid = np.asarray(partition_hash(t, part["keys"])) \
+        % np.uint32(n_parts)
+    mask = np.asarray(t.valid)
+    assert np.array_equal(pid[mask],
+                          (np.arange(cap) // blk)[mask])
+
+
+def block_partitioned(store: ArtifactStore, name: str, keys, n_parts: int):
+    """Store ``name``'s table re-laid-out in partition blocks, then put
+    it back with the partition property (the layout a mesh producer
+    creates naturally)."""
+    t, part = store.get_partitioned(name, keys, n_parts)
+    return t, part
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_roundtrip_bit_identical_to_monolithic():
+    t = make_table()
+    root = tempfile.mkdtemp(prefix="part_store_")
+    s = ArtifactStore(root=root)
+    s.put("mono", t)
+    tp, _ = block_partitioned(s, "mono", ["k"], 4)
+    s.put("part", tp, partitioning={"keys": ["k"], "n_parts": 4})
+    s.flush()
+    s.close()
+
+    s2 = ArtifactStore(root=root)      # fresh open: reads from disk
+    part = s2.partitioning("part")
+    assert part is not None
+    assert part["keys"] == ["k"] and part["n_parts"] == 4
+    assert part["shard_capacity"] * 4 == s2.get("part").capacity
+    assert sum(part["shard_rows"]) == 200
+    assert s2.partitioning("mono") is None
+    assert_rows_equal(s2.get("mono"), s2.get("part"))
+    assert_block_layout(s2.get("part"), part)
+    s2.close()
+
+
+def test_mismatched_p_repartitions_on_read():
+    t = make_table(seed=3)
+    s = ArtifactStore(root=tempfile.mkdtemp(prefix="part_store_"))
+    s.put("a", t)
+    tp, _ = block_partitioned(s, "a", ["k"], 4)
+    s.put("art", tp, partitioning={"keys": ["k"], "n_parts": 4})
+    s.flush()
+
+    got, part = s.get_partitioned("art", ["k"], 8)   # P mismatch: 4 -> 8
+    assert part["n_parts"] == 8
+    assert_rows_equal(t, got)
+    assert_block_layout(got, part)
+    # second read serves the cached re-partitioned view
+    got2, part2 = s.get_partitioned("art", ["k"], 8)
+    assert got2 is got and part2 == part
+    s.close()
+
+
+def test_compatible_partitioning_loads_shuffle_free():
+    t = make_table(seed=4)
+    s = ArtifactStore(root=tempfile.mkdtemp(prefix="part_store_"))
+    s.put("a", t)
+    tp, _ = block_partitioned(s, "a", ["k"], 8)
+    s.put("art", tp, partitioning={"keys": ["k"], "n_parts": 8})
+    # subset keys cover a wider grouping: no re-partition needed
+    got, part = s.get_partitioned("art", ["k", "k2"], 8)
+    assert part["keys"] == ["k"]                  # stored property served
+    assert got.capacity == s.get("art").capacity
+    s.close()
+
+
+def test_put_rejects_layout_violating_partition_claim():
+    t = make_table(seed=5)
+    s = ArtifactStore(root=tempfile.mkdtemp(prefix="part_store_"))
+    with pytest.raises(ValueError):
+        s.put("bad", t, partitioning={"keys": ["k"], "n_parts": 4})
+    assert not s.exists("bad")
+    s.close()
+
+
+def test_delete_drops_shards_and_derived_views():
+    t = make_table(seed=6)
+    s = ArtifactStore(root=tempfile.mkdtemp(prefix="part_store_"))
+    s.put("a", t)
+    tp, _ = block_partitioned(s, "a", ["k"], 4)
+    s.put("art", tp, partitioning={"keys": ["k"], "n_parts": 4})
+    s.flush()
+    s.get_partitioned("art", ["k"], 8)            # derived view cached
+    s.delete("art")
+    assert not s.exists("art")
+    with pytest.raises(KeyError):
+        s.get("art")
+    # the derived re-partitioned view must not survive the delete
+    assert not any(k.startswith("art#") for k in s._repart_meta)
+    assert "art#repart8:k" not in s.cache
+    s.close()
+
+
+def test_reput_invalidates_derived_repartition_views():
+    """A re-put of an artifact must drop cached ``#repart`` views —
+    serving the OLD data's re-partitioned view to a mismatched-P
+    consumer would silently aggregate stale rows."""
+    s = ArtifactStore(root=tempfile.mkdtemp(prefix="part_store_"))
+    t1 = make_table(seed=8)
+    s.put("a", t1)
+    v1, _ = s.get_partitioned("a", ["k"], 8)
+    t2 = make_table(seed=9)              # different content, same name
+    s.put("a", t2)
+    v2, part = s.get_partitioned("a", ["k"], 8)
+    assert v2 is not v1
+    assert_rows_equal(t2, v2)
+    assert_block_layout(v2, part)
+    s.close()
+
+
+def test_memory_backend_partitioned_roundtrip():
+    t = make_table(seed=7)
+    s = ArtifactStore()                           # no root: mem backend
+    s.put("a", t)
+    tp, _ = block_partitioned(s, "a", ["k"], 4)
+    s.put("art", tp, partitioning={"keys": ["k"], "n_parts": 4})
+    assert s.partitioning("art")["n_parts"] == 4
+    assert_rows_equal(t, s.get("art"))
+    s.close()
+
+
+def test_partitioning_dataclass_covers_and_aligns():
+    p = Partitioning(("a",), 8)
+    assert p.covers(("a", "b"), 8)
+    assert not p.covers(("b",), 8)
+    assert not p.covers(("a", "b"), 4)
+    assert p.aligns(("a",), 8)
+    assert not p.aligns(("a", "b"), 8)
+    q = Partitioning(("a", "b"), 8)
+    assert not q.covers(("a",), 8)                # superset does not cover
+    assert Partitioning.from_dict(p.to_dict()) == p

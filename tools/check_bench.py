@@ -1,0 +1,121 @@
+"""BENCH_core.json gate: schema validation + speedup-regression check.
+
+Two jobs:
+
+  1. **Schema** — every run list (``runs`` / ``policy_runs`` /
+     ``semantic_runs`` / ``dist_runs``) must carry the fields its
+     benchmark writes, so a refactor that silently changes the snapshot
+     format fails CI instead of rotting the history.
+  2. **Regression gate** — within each list, consecutive entries with
+     the SAME label are compared on their headline reuse-speedup
+     metric; a drop of more than ``MAX_REGRESSION`` (20%) fails.
+     Labels isolate scales: the small CI run (label "ci") is never
+     compared against a committed full-size entry.
+
+Additionally the committed full-size ``dist_runs`` entries must meet
+the ISSUE 4 acceptance floor: co-partitioned reuse at least
+``MIN_COPART_SPEEDUP``x faster than partition-blind reuse (entries
+below ``FLOOR_MIN_ROWS`` rows — CI smoke sizes — are exempt).
+
+Usage: python tools/check_bench.py [path]   (exit 0 = all checks pass)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_PATH = os.path.join(ROOT, "BENCH_core.json")
+
+MAX_REGRESSION = float(os.environ.get("CHECK_BENCH_MAX_REGRESSION", 0.20))
+MIN_COPART_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_COPART", 2.0))
+FLOOR_MIN_ROWS = 1 << 16         # full-size entries only
+
+# run-list name -> (required fields, headline metric fn or None)
+
+
+def _semantic_headline(rec):
+    at50 = [r for r in rec["sweep"] if r.get("overlap") == 0.50]
+    return at50[0]["speedup_vs_plain"] if at50 else None
+
+
+SCHEMAS = {
+    "runs": (("label", "n_rows", "queries", "avg_store_overhead",
+              "avg_reuse_speedup"),
+             lambda r: r["avg_reuse_speedup"]),
+    "policy_runs": (("label", "n_events", "n_rows", "budgets"), None),
+    "semantic_runs": (("label", "n_rows", "sweep"), _semantic_headline),
+    "dist_runs": (("label", "n_rows", "n_shards", "arms",
+                   "speedup_copart_vs_blind", "shuffles_skipped"),
+                  lambda r: r["speedup_copart_vs_blind"]),
+}
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        print(f"error: {path} top level must be an object")
+        return 1
+
+    errors = []
+    n_checked = 0
+    for list_name, (fields, headline) in SCHEMAS.items():
+        entries = doc.get(list_name, [])
+        if not isinstance(entries, list):
+            errors.append(f"{list_name}: must be a list")
+            continue
+        n_before = len(errors)
+        for i, rec in enumerate(entries):
+            missing = [f for f in fields if f not in rec]
+            if missing:
+                errors.append(f"{list_name}[{i}] "
+                              f"(label={rec.get('label')!r}): "
+                              f"missing fields {missing}")
+        if len(errors) > n_before:
+            continue        # THIS list is malformed; others still gate
+
+        # regression gate: consecutive same-label entries
+        if headline is not None:
+            by_label = {}
+            for rec in entries:
+                by_label.setdefault(rec["label"], []).append(rec)
+            for label, seq in by_label.items():
+                for prev, cur in zip(seq, seq[1:]):
+                    p, c = headline(prev), headline(cur)
+                    if p is None or c is None or p <= 0:
+                        continue
+                    n_checked += 1
+                    if c < (1.0 - MAX_REGRESSION) * p:
+                        errors.append(
+                            f"{list_name} label={label!r}: reuse speedup "
+                            f"regressed {p:.2f} -> {c:.2f} "
+                            f"(> {MAX_REGRESSION:.0%} drop)")
+
+        # acceptance floor for full-size distributed entries
+        if list_name == "dist_runs":
+            for rec in entries:
+                if rec["n_rows"] >= FLOOR_MIN_ROWS:
+                    n_checked += 1
+                    s = rec["speedup_copart_vs_blind"]
+                    if s < MIN_COPART_SPEEDUP:
+                        errors.append(
+                            f"dist_runs label={rec['label']!r}: "
+                            f"co-partitioned reuse speedup {s:.2f} below "
+                            f"the {MIN_COPART_SPEEDUP:.1f}x floor "
+                            f"({rec['n_rows']} rows)")
+
+    if errors:
+        for e in errors:
+            print(f"check_bench: {e}")
+        return 1
+    n_entries = sum(len(doc.get(k, [])) for k in SCHEMAS)
+    print(f"bench check OK: {n_entries} entries across "
+          f"{sum(1 for k in SCHEMAS if doc.get(k))} run lists, "
+          f"{n_checked} gate comparisons")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH))
