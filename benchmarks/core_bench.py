@@ -65,8 +65,12 @@ def run(label: str | None = None, n_rows: int = 1 << 15,
     if os.path.exists(out_path):
         with open(out_path) as f:
             doc = json.load(f)
-    doc["runs"] = [r for r in doc["runs"] if r["label"] != rec["label"]]
-    doc["runs"].append(rec)
+    # keep the last 2 prior same-label entries so the nightly workflow
+    # (prior snapshot restored from the actions cache) has a real
+    # predecessor for check_bench's consecutive same-label gate
+    same = [r for r in doc["runs"] if r["label"] == rec["label"]][-2:]
+    doc["runs"] = [r for r in doc["runs"]
+                   if r["label"] != rec["label"]] + same + [rec]
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")

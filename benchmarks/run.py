@@ -20,16 +20,18 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _ROOT)
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
-from benchmarks import (core_bench, distributed_bench, filter_sweep,  # noqa
-                        heuristics, policy_bench, prefix_reuse_bench,
-                        projection_sweep, semantic_reuse_bench,
-                        store_overhead, subjob_reuse, whole_job_reuse)
+from benchmarks import (core_bench, delta_bench, distributed_bench,  # noqa
+                        filter_sweep, heuristics, policy_bench,
+                        prefix_reuse_bench, projection_sweep,
+                        semantic_reuse_bench, store_overhead, subjob_reuse,
+                        whole_job_reuse)
 
 SUITES = {
     "core": core_bench.run,
     "policy": policy_bench.run,
     "semantic": semantic_reuse_bench.run,
     "dist": distributed_bench.run,
+    "delta": delta_bench.run,
     "fig9_whole_job": whole_job_reuse.run,
     "fig10_12_subjob": subjob_reuse.run,
     "fig11_overhead": store_overhead.run,
@@ -40,7 +42,7 @@ SUITES = {
 }
 
 # suites that accept a --label (snapshots into BENCH_core.json)
-LABELLED = {"core", "policy", "semantic", "dist"}
+LABELLED = {"core", "policy", "semantic", "dist", "delta"}
 
 
 def main() -> None:

@@ -135,10 +135,12 @@ def run(label: str | None = None, n_rows: int = 1 << 15,
     if os.path.exists(out_path):
         with open(out_path) as f:
             doc = json.load(f)
-    doc.setdefault("semantic_runs", [])
-    doc["semantic_runs"] = [r for r in doc["semantic_runs"]
-                            if r["label"] != rec["label"]]
-    doc["semantic_runs"].append(rec)
+    runs = doc.setdefault("semantic_runs", [])
+    # keep the last 2 prior same-label entries (real predecessors for
+    # the nightly consecutive same-label regression gate)
+    same = [r for r in runs if r["label"] == rec["label"]][-2:]
+    doc["semantic_runs"] = [r for r in runs
+                            if r["label"] != rec["label"]] + same + [rec]
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")

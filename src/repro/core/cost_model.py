@@ -177,6 +177,42 @@ class CostModel:
         uses = self.expected_future_uses(st.times_seen, st.last_seen, now)
         return savings * uses > self.store_cost_s(st.bytes_out)
 
+    def refresh_cost_s(self, entry, delta_fraction: float) -> float:
+        """Predicted cost of delta-refreshing a stale entry (DESIGN.md
+        §12): the delta job re-runs the producer over the delta fraction
+        of its input, plus one load and one store of the artifact for
+        the merge."""
+        cost = entry.producer_cost_s or entry.exec_time_s
+        return (max(delta_fraction, 0.0) * cost
+                + self.load_cost_s(entry.bytes_out)
+                + self.store_cost_s(entry.bytes_out))
+
+    def refresh_decision(self, entry, delta_fraction: float,
+                         now: Optional[float] = None,
+                         eager_uses: float = 1.0) -> str:
+        """Arbitrate refresh-vs-delete-vs-lazy for an append-stale entry
+        (DESIGN.md §12):
+
+          * ``"delete"`` — refreshing is not worth it: the delta is so
+            large that the refresh costs as much as recomputing on
+            demand would, or the entry's predicted future reuse value
+            (savings × recency-decayed expected uses) is below the
+            refresh cost;
+          * ``"refresh"`` — hot entry (expected uses ≥ ``eager_uses``):
+            pay the delta job now so the next probe is an exact hit;
+          * ``"lazy"`` — worth keeping but not hot: defer the delta job
+            until a probe actually demands the refreshed value."""
+        rcost = self.refresh_cost_s(entry, delta_fraction)
+        recompute = entry.producer_cost_s or entry.exec_time_s
+        if rcost >= recompute:
+            return "delete"
+        if self.entry_benefit_s(entry, now) <= rcost:
+            return "delete"
+        past = entry.use_count + getattr(entry, "history_uses", 0.0)
+        uses = self.expected_future_uses(
+            past, entry.last_used or entry.created_at, now)
+        return "refresh" if uses >= eager_uses else "lazy"
+
     def entry_benefit_s(self, entry, now: Optional[float] = None) -> float:
         """Predicted total future time saved by keeping a repository
         entry: savings per reuse times recency-decayed expected uses.

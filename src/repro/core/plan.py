@@ -25,6 +25,11 @@ from ..dataflow.expr import Col, Expr, agg_key, pred_normal_key
 _COMMUTATIVE_KINDS = {"UNION"}
 # operators that force a shuffle boundary (map -> reduce)
 BLOCKING_KINDS = {"JOIN", "GROUPBY", "COGROUP", "DISTINCT"}
+# operators that distribute over input append — F(R ∪ ΔR) = F(R) ∪ F(ΔR)
+# record-wise — so a plan built only from these refreshes a stale
+# artifact by appending the delta plan's rows (DESIGN.md §12)
+APPEND_DISTRIBUTIVE_KINDS = frozenset(
+    {"LOAD", "FILTER", "PROJECT", "FOREACH", "UNION", "SPLIT"})
 
 
 _op_counter = itertools.count()

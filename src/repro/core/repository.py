@@ -16,7 +16,9 @@ Eviction (paper §5 rules):
   R3  evict entries unused within a time window
   R4  evict entries whose source datasets changed (handled structurally:
       Load fingerprints embed dataset versions, so stale entries can never
-      match — ``evict_stale`` garbage-collects them)
+      match — ``evict_stale`` garbage-collects them; ``maintain`` instead
+      delta-refreshes append-stale entries and reserves R4 for entries
+      with no derivable delta plan, DESIGN.md §12)
 
 Byte budget (DESIGN.md §9): when ``budget_bytes`` is set, ``add`` is no
 longer an unconditional put.  Admission may evict lower-value entries to
@@ -106,6 +108,11 @@ class Repository:
         self.rejections = 0           # budget admission rejections
         self.exact_hits = 0           # record_use(kind="exact")
         self.semantic_hits = 0        # record_use(kind="semantic")
+        self.refreshes = 0            # delta-refreshed entries (§12)
+        # stale-but-refreshable entries deferred by the cost model:
+        # old entry signature -> RefreshSpec, executed on the next probe
+        # whose plan would match the refreshed signature (DESIGN.md §12)
+        self.pending_refresh: Dict[str, object] = {}
         self._store = None            # bound by the ReStore driver
         self._ordered_dirty = True
         self._ordered: List[RepositoryEntry] = []
@@ -283,9 +290,114 @@ class Repository:
         self.entries = keep
         self.by_sig = {e.signature: e for e in keep}
         self._ordered_dirty = True
+        for e in drop:               # evicted entries owe no lazy refresh
+            self.pending_refresh.pop(e.signature, None)
         if store is not None:
             for e in drop:
                 store.delete(e.artifact)
+
+    # ------------------------------------------------- incremental refresh
+    def maintain(self, catalog, engine, store=None,
+                 mode: str = "auto") -> Dict[str, int]:
+        """Incremental maintenance sweep (DESIGN.md §12): where
+        ``evict_stale`` (rule R4) deletes every entry whose source
+        versions moved, this refreshes append-stale entries from the
+        dataset delta instead.  Per stale entry: `derive_refresh`
+        produces a delta plan + merge operator (None ⇒ not incrementally
+        maintainable ⇒ R4 delete as before); the cost model then
+        arbitrates refresh-now / lazy (refresh on next probe) / delete
+        (``mode="auto"``; ``"refresh"``/``"lazy"``/``"delete"`` force
+        the decision — "delete" reproduces the pre-§12 behavior).
+        Returns counters {refreshed, lazy, deleted}."""
+        from .delta import derive_refresh
+        store = store if store is not None else self._store
+        report = {"refreshed": 0, "lazy": 0, "deleted": 0}
+        drop = []
+        for e in list(self.entries):
+            stale = any(catalog.version(ds) != v
+                        for ds, v in e.source_versions.items())
+            if not stale:
+                continue
+            spec = derive_refresh(e, catalog)
+            if spec is None:
+                drop.append(e)
+                continue
+            if spec.refreshed_signature in self.by_sig:
+                # a probe already recomputed (and registered) the
+                # new-version value: refreshing would index two entries
+                # under one signature — the stale entry is plain R4
+                drop.append(e)
+                continue
+            decision = mode if mode != "auto" else \
+                self.cost_model.refresh_decision(e, spec.delta_fraction)
+            if decision == "delete":
+                drop.append(e)
+            elif decision == "lazy":
+                self.pending_refresh[e.signature] = spec
+                report["lazy"] += 1
+            else:
+                self.apply_refresh(spec, engine, store, catalog)
+                report["refreshed"] += 1
+        drop_ids = {id(e) for e in drop}
+        self._replace([e for e in self.entries if id(e) not in drop_ids],
+                      drop, store)
+        report["deleted"] = len(drop)
+        return report
+
+    def apply_refresh(self, spec, engine, store, catalog) -> None:
+        """Execute one derived refresh and re-index the entry under its
+        refreshed signature (the semantic/exact matchers then see it as
+        an exact producer of the new-version value)."""
+        from .delta import execute_refresh
+        entry = spec.entry
+        old_sig = entry.signature
+        execute_refresh(spec, engine, store, catalog)
+        self.by_sig.pop(old_sig, None)
+        self.by_sig[entry.signature] = entry
+        self.pending_refresh.pop(old_sig, None)
+        self._ordered_dirty = True
+        self.refreshes += 1
+
+    def refresh_pending(self, plan, engine, catalog, store=None) -> int:
+        """Lazy-refresh hook: execute every pending refresh whose
+        *refreshed* signature appears in ``plan``'s fingerprints (the
+        probe that was deferred for has arrived).  A spec whose catalog
+        versions moved again since derivation is re-derived; one that is
+        no longer derivable is R4-dropped.  Returns refreshes applied."""
+        if not self.pending_refresh:
+            return 0
+        from .delta import derive_refresh
+        store = store if store is not None else self._store
+        fps = set(plan.fingerprints().values())
+        n = 0
+        for old_sig, spec in list(self.pending_refresh.items()):
+            entry = spec.entry
+            if any(catalog.version(ds) != v
+                   for ds, v in spec.new_versions.items()):
+                # catalog moved again since derivation: re-derive (the
+                # delta grew) before the fingerprint probe below, or
+                # drop to R4 when no longer derivable
+                del self.pending_refresh[old_sig]
+                spec = derive_refresh(entry, catalog)
+                if spec is None:
+                    drop_ids = {id(entry)}
+                    self._replace([e for e in self.entries
+                                   if id(e) not in drop_ids], [entry],
+                                  store)
+                    continue
+                self.pending_refresh[entry.signature] = spec
+            if spec.refreshed_signature in self.by_sig:
+                # the new-version value was recomputed+registered while
+                # the refresh was parked: the stale entry is redundant
+                del self.pending_refresh[entry.signature]
+                self._replace([e for e in self.entries if e is not entry],
+                              [entry], store)
+                continue
+            if spec.refreshed_signature not in fps:
+                continue
+            self.apply_refresh(spec, engine, store, catalog)
+            n += 1
+        return n
 
     # ------------------------------------------------------------- helpers
     def __len__(self):

@@ -130,8 +130,22 @@ class ReStore:
         self.store.flush()
         return results, RunReport(reports)
 
+    def maintain(self, mode: str = "auto") -> Dict[str, int]:
+        """Incremental maintenance entry point (DESIGN.md §12): refresh
+        append-stale repository artifacts from their dataset deltas
+        through this driver's engine; entries with no derivable delta
+        plan fall back to R4 deletion.  Call after `Catalog.append`/
+        `Catalog.register` churn, where `evict_stale` used to be."""
+        return self.repo.maintain(self.catalog, self.engine, self.store,
+                                  mode=mode)
+
     # ------------------------------------------------------------------
     def _process_job(self, job: Job) -> JobReport:
+        # lazily-deferred refreshes whose probe has arrived run first,
+        # so the refreshed entries match exactly below (DESIGN.md §12)
+        if self.repo.pending_refresh:
+            self.repo.refresh_pending(job.plan, self.engine, self.catalog,
+                                      self.store)
         # a job whose outputs all exist is fully answered by the store
         if all(self.store.exists(o) for o in job.outputs):
             # this is the hottest reuse path (identical recurring jobs):

@@ -267,11 +267,20 @@ class Engine:
         fn, uid_by_fp = self._jit_cache.get(key, build)
         return fn, uid_by_fp, fps
 
-    def run_job(self, job: Job) -> tuple[Dict[str, Table], JobStats]:
+    def run_job(self, job: Job,
+                transient: bool = False) -> tuple[Dict[str, Table],
+                                                  JobStats]:
         """Timed window mirrors Eq. 2: T_load (dataset reads from the
         store) + operator execution + T_store (artifact writes — with the
         write-behind store only the device-side handoff is on the clock;
-        serialization happens on the flusher thread)."""
+        serialization happens on the flusher thread).
+
+        ``transient=True`` skips T_store entirely: outputs are returned
+        to the caller but never put in the artifact store.  Incremental
+        maintenance (DESIGN.md §12) runs its delta jobs this way — the
+        delta value exists only to be merged into the refreshed
+        artifact, so storing-then-deleting it would waste a disk write
+        per refresh and pollute the IO calibration samples."""
         input_names = sorted({o.params["dataset"] for o in job.plan.loads()})
         props, overrides, parts_key = (None, {}, None)
         if self.mesh is not None:
@@ -307,8 +316,10 @@ class Engine:
             # one synchronization point per job (not per output): wait for
             # the whole output pytree at once
             outputs = jax.block_until_ready(outputs)
-            for name, t in outputs.items():                      # T_store
-                self.store.put(name, t, partitioning=out_parts.get(name))
+            if not transient:
+                for name, t in outputs.items():                  # T_store
+                    self.store.put(name, t,
+                                   partitioning=out_parts.get(name))
             walls.append(time.perf_counter() - t0)
             if self.measure_exec:
                 # drain the write-behind queue between reps so background

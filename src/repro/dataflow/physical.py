@@ -237,10 +237,15 @@ def op_join(left: Table, right: Table, lkeys, rkeys,
           & left.valid[:, None])
 
     rank = jnp.cumsum(ok.astype(jnp.int32), axis=1) - 1
-    # overflow: window exhausted while hashes were still equal
+    # overflow: window exhausted while hashes were still equal.  Only a
+    # tail INSIDE the array can witness that — when pos + probe_w runs
+    # past the end, the window already covers every remaining row, and
+    # the old clip-to-last-row check false-flagged any left key whose
+    # hash sorted within probe_w of the array end.
+    in_range = pos + probe_w <= cap_r - 1
     tail = jnp.clip(pos + probe_w, 0, cap_r - 1)
     overflow = jnp.sum(((jnp.take(h_r_sorted, tail) == h_l)
-                        & left.valid).astype(jnp.int32))
+                        & in_range & left.valid).astype(jnp.int32))
 
     out_cols: Dict[str, jnp.ndarray] = {}
     matched_list: List[jnp.ndarray] = []
@@ -248,8 +253,15 @@ def op_join(left: Table, right: Table, lkeys, rkeys,
     for j in range(expansion):
         sel = ok & (rank == j)
         matched_list.append(sel.any(axis=1))
-        ridx_list.append(jnp.take(cand_rows[..., None], jnp.argmax(
-            sel, axis=1)[:, None], axis=1)[:, 0, 0])
+        # per-row gather of the selected window slot.  Must be
+        # take_along_axis: jnp.take(..., axis=1) with a (Cl, 1) index
+        # array both materializes a (Cl, Cl) gather (XLA CPU: ~800x
+        # slower at 64k rows) and — worse — indexes every row by row
+        # 0's argmax, silently joining the wrong right row whenever a
+        # probe window's first match sits past slot 0 (h1 ties,
+        # duplicate right keys under expansion > 1).
+        ridx_list.append(jnp.take_along_axis(
+            cand_rows, jnp.argmax(sel, axis=1)[:, None], axis=1)[:, 0])
     matched = jnp.stack(matched_list, 1).reshape(-1)      # (Cl*exp,)
     ridx = jnp.stack(ridx_list, 1).reshape(-1)
 

@@ -173,6 +173,65 @@ class Table:
         return out
 
 
+def concat_tables(parts, capacity: int | None = None) -> Table:
+    """Host-side concatenation of the *valid* rows of ``parts``, in
+    order — the append primitive of incremental artifact maintenance
+    (DESIGN.md §12): an append-refreshed dataset/artifact is exactly the
+    old valid rows followed by the delta's valid rows (prefix-stable).
+    Schemas must match exactly."""
+    assert parts, "concat_tables: no inputs"
+    names = parts[0].names
+    for p in parts[1:]:
+        assert p.names == names, "concat_tables: schema mismatch"
+    cols: Dict[str, np.ndarray] = {}
+    for n in names:
+        cols[n] = np.concatenate(
+            [np.asarray(p.col(n))[np.asarray(p.valid).astype(bool)]
+             for p in parts])
+    nvalid = len(cols[names[0]])
+    cap = capacity if capacity is not None else max(nvalid, 8)
+    return Table.from_numpy(cols, nvalid=nvalid, capacity=cap)
+
+
+def slice_valid(table: Table, lo: int, hi: int | None = None,
+                round_pow2: bool = False, cols=None) -> Table:
+    """Table holding valid rows ``[lo:hi]`` of ``table`` (host-side).
+    With an append-only lineage, ``slice_valid(cur, 0, n_old)`` is the
+    pre-append snapshot and ``slice_valid(cur, n_old)`` the delta
+    (DESIGN.md §12).  ``round_pow2`` pads the capacity to the next
+    power of two — data-dependent row counts otherwise produce a fresh
+    shape (and a fresh jit trace) per call on anything downstream.
+    ``cols`` restricts the slice to a column subset (delta bindings only
+    materialize the bytes their subplan consumes)."""
+    # one flatnonzero over the mask, then a gather of just the selected
+    # rows — not an O(n)-per-column copy of every valid row first
+    rows = np.flatnonzero(np.asarray(table.valid))[lo:hi]
+    names = table.names if cols is None else sorted(cols)
+    out: Dict[str, np.ndarray] = {}
+    for n in names:
+        out[n] = np.asarray(table.col(n))[rows]
+    nvalid = len(rows)
+    cap = max(nvalid, 8)
+    if round_pow2:
+        cap = 1 << (cap - 1).bit_length()
+    return Table.from_numpy(out, nvalid=nvalid, capacity=cap)
+
+
+def pad_capacity(table: Table, multiple: int) -> Table:
+    """Pad ``table`` with invalid rows so its capacity is a multiple of
+    ``multiple`` (mesh engines shard inputs into equal blocks)."""
+    cap = table.capacity
+    if multiple <= 1 or cap % multiple == 0:
+        return table
+    new_cap = ((cap + multiple - 1) // multiple) * multiple
+    cols = {}
+    for n, c in table.columns.items():
+        pad = [(0, new_cap - cap)] + [(0, 0)] * (c.ndim - 1)
+        cols[n] = jnp.asarray(np.pad(np.asarray(c), pad))
+    valid = jnp.asarray(np.pad(np.asarray(table.valid), (0, new_cap - cap)))
+    return Table(cols, valid)
+
+
 def encode_strings(values, width: int = 20) -> np.ndarray:
     """Python strings -> (n, width) uint8, truncated/zero-padded."""
     out = np.zeros((len(values), width), dtype=np.uint8)

@@ -37,7 +37,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from ..dataflow.table import Table, partition_ids_device
+from ..dataflow.table import (Table, concat_tables, partition_ids_device,
+                              slice_valid)
 
 # Default byte bound for the device-resident cache tier.
 DEFAULT_CACHE_BYTES = int(os.environ.get("RESTORE_CACHE_BYTES",
@@ -714,6 +715,99 @@ class ArtifactStore:
             self._io[tier + "_bytes"] += m["nbytes"]
             self._io[tier + "_s"] += time.perf_counter() - t_start
 
+    # ------------------------------------------------------------- refresh
+    def append(self, name: str, delta: Table) -> dict:
+        """Delta-refresh an artifact in place: merge ``delta``'s valid
+        rows into the stored value (DESIGN.md §12).  Monolithic
+        artifacts concatenate column-wise on device — an artifact's
+        value is its valid rows, so holes need no compaction here (the
+        disk path compacts on the flusher thread as always) and the
+        merge is one memcpy-speed pass instead of a host round trip.
+        Partitioned artifacts take the shard-local `merge_shards` path.
+        Either way the write goes through `put`, which replaces the
+        device-cache entry, coalesces over any pending write-behind job
+        and invalidates every derived `get_partitioned` view of the old
+        value — an in-place refresh must never leave a stale view
+        servable."""
+        name = self._resolve(name)
+        if self.partitioning(name) is not None:
+            return self.merge_shards(name, delta)
+        old = self.get(name)
+        if set(old.names) != set(delta.names):
+            raise ValueError(f"append({name!r}): schema mismatch")
+        import jax.numpy as jnp
+        cols = {n: jnp.concatenate([old.col(n), delta.col(n)], axis=0)
+                for n in old.names}
+        valid = jnp.concatenate([old.valid, delta.valid])
+        return self.put(name, Table(cols, valid))
+
+    def merge_shards(self, name: str, delta: Table, merge_fn=None) -> dict:
+        """Shard-local refresh of a partitioned artifact: each ``delta``
+        row is routed to its shard by the stored partition hash, and the
+        shard is merged locally — pure append when ``merge_fn`` is None,
+        else ``merge_fn(old_shard, delta_shard) -> Table`` (the
+        re-aggregation operator of a refreshed GROUPBY/DISTINCT
+        artifact, whose partition keys co-locate each group with its
+        partial).  No cross-shard exchange happens: a co-partitioned
+        artifact refreshes with the same locality its consumers exploit
+        (DESIGN.md §11/§12).  The merged value is re-put under the same
+        partition property, so the layout validation in `put` re-checks
+        the claim."""
+        name = self._resolve(name)
+        part = self.partitioning(name)
+        if part is None:
+            raise ValueError(
+                f"merge_shards({name!r}): artifact is not partitioned")
+        n_parts = int(part["n_parts"])
+        old = self.get(name)
+        shard_cap = old.capacity // n_parts
+        names_ = old.names
+        if set(delta.names) != set(names_):
+            raise ValueError(f"merge_shards({name!r}): schema mismatch")
+        pid = _partition_ids(delta, part["keys"], n_parts)
+        dmask = np.asarray(delta.valid).astype(bool)
+        dhost = {n: np.asarray(delta.col(n)) for n in names_}
+        ohost = {n: np.asarray(old.col(n)) for n in names_}
+        omask = np.asarray(old.valid).astype(bool)
+        # per-shard delta tables share one capacity, so a jitted
+        # merge_fn traces once instead of once per shard
+        d_counts = np.bincount(pid[dmask], minlength=n_parts)
+        dcap = max(8, _pow2ceil(int(d_counts.max()) if d_counts.size else 1))
+        import jax.numpy as jnp
+        merged_np = []
+        for p in range(n_parts):
+            sl = slice(p * shard_cap, (p + 1) * shard_cap)
+            rows = np.flatnonzero(dmask & (pid == p))
+            if merge_fn is None:
+                m = {n: np.concatenate([ohost[n][sl][omask[sl]],
+                                        dhost[n][rows]]) for n in names_}
+            else:
+                old_p = Table({n: jnp.asarray(ohost[n][sl])
+                               for n in names_}, jnp.asarray(omask[sl]))
+                delta_p = Table.from_numpy(
+                    {n: dhost[n][rows] for n in names_}, capacity=dcap)
+                mt = merge_fn(old_p, delta_p)
+                mm = np.asarray(mt.valid).astype(bool)
+                m = {n: np.asarray(mt.col(n))[mm] for n in names_}
+            merged_np.append(m)
+        counts = [len(next(iter(m.values()))) for m in merged_np]
+        new_cap = max(8, _pow2ceil(max(counts) if counts else 1))
+        blocks = {}
+        for n in names_:
+            padded = []
+            for m in merged_np:
+                a = m[n]
+                pad = [(0, new_cap - len(a))] + [(0, 0)] * (a.ndim - 1)
+                padded.append(np.pad(a, pad))
+            blocks[n] = jnp.asarray(np.concatenate(padded))
+        valid = jnp.asarray(np.concatenate(
+            [np.arange(new_cap) < c for c in counts]))
+        return self.put(name, Table(blocks, valid),
+                        partitioning={"keys": list(part["keys"]),
+                                      "n_parts": n_parts,
+                                      "scheme": part.get("scheme",
+                                                         "hash_mod")})
+
     def delete(self, name: str):
         # cancel the pending/in-flight write FIRST: the flusher re-inserts
         # the compacted table into the cache after publishing, so dropping
@@ -757,16 +851,112 @@ class ArtifactStore:
 class Catalog:
     """Source-dataset catalog with version stamps (eviction rule R4:
     modifying a dataset bumps its version, so old fingerprints never match
-    and dependent artifacts are invalidated)."""
+    and dependent artifacts are invalidated).
+
+    Beyond the paper, the catalog distinguishes *append* deltas from
+    arbitrary rewrites (DESIGN.md §12): ``append`` bumps the version like
+    ``register`` but records the per-version valid-row count on an
+    append lineage, so incremental maintenance can extract the delta
+    rows (and the pre-append snapshot) of any version still on the
+    lineage and refresh stale artifacts instead of R4-deleting them.
+    ``register`` is an arbitrary rewrite and resets the lineage."""
 
     def __init__(self, store: ArtifactStore):
         self.store = store
         self.versions: Dict[str, int] = {}
         self.sources: Dict[str, Table] = {}
+        # name -> [(version, n_valid_rows), ...] for the run of
+        # consecutive append()s since the last register()
+        self._lineage: Dict[str, list] = {}
+        # datasets whose source table is prefix-valid (valid rows form
+        # a leading contiguous block) — true by construction for
+        # append()-built tables, and what lets delta/snapshot slicing
+        # be a direct row-range view instead of an O(n) mask pass
+        self._compact: set = set()
 
     def register(self, name: str, table: Table):
         self.versions[name] = self.versions.get(name, -1) + 1
         self.sources[name] = table
+        self._compact.discard(name)
+        n = int(np.asarray(table.valid).astype(bool).sum())
+        self._lineage[name] = [(self.versions[name], n)]
+
+    def append(self, name: str, delta: Table) -> int:
+        """Append-only ingest: the new version extends the old one by
+        exactly ``delta``'s valid rows, prefix-stable (the first n_old
+        valid rows of the new version ARE the old version's rows).
+        Returns the new version."""
+        if name not in self.sources:
+            raise KeyError(f"append to unregistered dataset {name!r}")
+        merged = concat_tables([self.sources[name], delta])
+        n = int(np.asarray(merged.valid).astype(bool).sum())
+        v = self.versions.get(name, 0) + 1
+        self.versions[name] = v
+        self.sources[name] = merged
+        self._compact.add(name)      # concat_tables output is compacted
+        self._lineage.setdefault(name, [(v - 1, n - int(
+            np.asarray(delta.valid).astype(bool).sum()))]).append((v, n))
+        return v
+
+    # -- append-lineage queries (incremental maintenance, DESIGN.md §12)
+    def rows_at(self, name: str, version: int) -> Optional[int]:
+        """Valid-row count of ``name`` at ``version``, or None when the
+        version is not on the recorded append lineage."""
+        for v, n in self._lineage.get(name, []):
+            if v == version:
+                return n
+        return None
+
+    def is_append_since(self, name: str, version: int) -> bool:
+        """True iff the dataset's current version extends ``version`` by
+        appends only (both versions on the recorded lineage)."""
+        return self.rows_at(name, version) is not None
+
+    def _slice_rows(self, name: str, lo: int,
+                    hi: Optional[int], cols) -> Table:
+        """Valid rows [lo:hi] of a source.  A prefix-valid (append-built)
+        table slices by direct row range — a view plus one small copy —
+        instead of slice_valid's mask pass.  Capacities round to the
+        next power of two: real append sizes vary run to run, and an
+        exact capacity would hand the delta plan a fresh input shape
+        (and a full jit retrace) per refresh."""
+        t = self.sources[name]
+        if name not in self._compact:
+            return slice_valid(t, lo, hi, cols=cols, round_pow2=True)
+        names = t.names if cols is None else sorted(cols)
+        out = {n: np.asarray(t.col(n))[lo:hi] for n in names}
+        nvalid = len(out[names[0]])
+        cap = 1 << (max(nvalid, 8) - 1).bit_length()
+        return Table.from_numpy(out, nvalid=nvalid, capacity=cap)
+
+    def delta_table(self, name: str, version: int,
+                    cols=None) -> Optional[Table]:
+        """The rows appended since ``version`` (None off-lineage).
+        ``cols`` restricts to the columns the consumer needs."""
+        n_old = self.rows_at(name, version)
+        n_cur = self.rows_at(name, self.version(name))
+        if n_old is None or n_cur is None:
+            return None
+        # explicit upper bound: a compact table may carry a few invalid
+        # padding rows past n_cur (min-capacity floor), which a direct
+        # row-range slice must not resurrect
+        return self._slice_rows(name, n_old, n_cur, cols)
+
+    def snapshot_table(self, name: str, version: int,
+                       cols=None) -> Optional[Table]:
+        """The dataset as it was at ``version`` (prefix snapshot)."""
+        n_old = self.rows_at(name, version)
+        if n_old is None:
+            return None
+        return self._slice_rows(name, 0, n_old, cols)
+
+    def delta_fraction(self, name: str, version: int) -> float:
+        """Appended rows as a fraction of the base at ``version``."""
+        n_old = self.rows_at(name, version)
+        n_cur = self.rows_at(name, self.version(name))
+        if n_old is None or n_cur is None:
+            return 1.0
+        return (n_cur - n_old) / max(n_old, 1)
 
     def version(self, name: str) -> int:
         return self.versions.get(name, 0)

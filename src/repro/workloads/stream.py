@@ -85,6 +85,15 @@ class StreamConfig:
     seed: int = 0
     churn_every: int = 0          # bump page_views version every N events
     cache_bytes: int = 64 * 1024 * 1024
+    # append churn (DESIGN.md §12): every N events page_views GROWS by
+    # append_frac × n_rows fresh rows — the dominant real-world change
+    # class, which incremental maintenance refreshes instead of
+    # R4-deleting.  maintain="refresh"|"auto"|"lazy" routes stale
+    # entries through Repository.maintain; "delete" reproduces the
+    # pre-§12 delete-and-recompute behavior (the ablation arm).
+    append_every: int = 0
+    append_frac: float = 0.10
+    maintain: str = "auto"
 
 
 @dataclasses.dataclass
@@ -109,6 +118,7 @@ class StreamResult:
     repo_bytes: int
     evictions: int
     rejections: int
+    refreshes: int = 0            # delta-refreshed entries (§12)
 
     @property
     def n_reused_total(self) -> int:
@@ -180,6 +190,18 @@ def run_stream(mode: str, cfg: StreamConfig,
                                  seed=cfg.seed + 1000 + i))
             if shared_rs is not None:
                 shared_rs.repo.evict_stale(catalog)
+        if cfg.append_every and i > 0 and i % cfg.append_every == 0:
+            # append churn: page_views grows; stale entries refresh from
+            # the delta instead of recomputing from zero (DESIGN.md §12)
+            n_delta = max(int(cfg.n_rows * cfg.append_frac), 1)
+            catalog.append("page_views",
+                           pigmix.gen_page_views(
+                               n_delta, seed=cfg.seed + 5000 + i))
+            if shared_rs is not None:
+                if cfg.maintain == "delete":
+                    shared_rs.repo.evict_stale(catalog)
+                else:
+                    shared_rs.maintain(mode=cfg.maintain)
         name, build = templates[tidx]
         plan = rebind_load_versions(
             build(), {ds: catalog.version(ds) for ds in DATASETS})
@@ -202,4 +224,5 @@ def run_stream(mode: str, cfg: StreamConfig,
         mode=mode, budget_bytes=budget_bytes, events=events,
         cum_wall_s=cum, total_wall_s=total, peak_store_bytes=peak_bytes,
         repo_entries=len(repo), repo_bytes=repo.total_stored_bytes(),
-        evictions=repo.evictions, rejections=repo.rejections)
+        evictions=repo.evictions, rejections=repo.rejections,
+        refreshes=repo.refreshes)

@@ -1,0 +1,92 @@
+"""Negative tests for the BENCH_core.json CI gate (tools/check_bench.py):
+the acceptance floors must actually fail when violated — a gate that
+passes everything is indistinguishable from no gate."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "tools"))
+
+import check_bench  # noqa: E402
+
+
+def _doc(**overrides):
+    base = {
+        "dist_runs": [{
+            "label": "full", "n_rows": 1 << 16, "n_shards": 8,
+            "arms": {}, "speedup_copart_vs_blind": 2.5,
+            "shuffles_skipped": 3,
+        }],
+        "delta_runs": [{
+            "label": "full", "n_rows": 1 << 16, "trials": 1,
+            "sweep": [
+                {"template": "groupby", "frac": 0.10, "t_refresh_s": 0.1,
+                 "t_recompute_s": 0.9, "speedup": 9.0, "identical": True},
+                {"template": "join", "frac": 0.10, "t_refresh_s": 0.2,
+                 "t_recompute_s": 0.8, "speedup": 4.0, "identical": True},
+                {"template": "join", "frac": 0.50, "t_refresh_s": 0.6,
+                 "t_recompute_s": 0.8, "speedup": 1.3, "identical": True},
+            ],
+        }],
+    }
+    base.update(overrides)
+    return base
+
+
+def _run(tmp_path, doc) -> int:
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps(doc))
+    return check_bench.check(str(p))
+
+
+def test_good_doc_passes(tmp_path):
+    assert _run(tmp_path, _doc()) == 0
+
+
+def test_delta_floor_violation_fails(tmp_path):
+    doc = _doc()
+    doc["delta_runs"][0]["sweep"][0]["speedup"] = 2.0   # < 3.0 at 10%
+    assert _run(tmp_path, doc) == 1
+
+
+def test_delta_floor_exempts_small_and_large_fracs(tmp_path):
+    doc = _doc()
+    # CI smoke size: below FLOOR_MIN_ROWS, no speedup floor
+    doc["delta_runs"][0]["n_rows"] = 1 << 13
+    doc["delta_runs"][0]["sweep"][0]["speedup"] = 0.5
+    assert _run(tmp_path, doc) == 0
+    # full size but a >10% fraction: not in the floor regime
+    doc = _doc()
+    doc["delta_runs"][0]["sweep"][2]["speedup"] = 0.5
+    assert _run(tmp_path, doc) == 0
+
+
+def test_delta_bit_identity_gates_at_any_size(tmp_path):
+    doc = _doc()
+    doc["delta_runs"][0]["n_rows"] = 1 << 13            # even CI smoke
+    doc["delta_runs"][0]["sweep"][1]["identical"] = False
+    assert _run(tmp_path, doc) == 1
+
+
+def test_delta_missing_field_fails(tmp_path):
+    doc = _doc()
+    del doc["delta_runs"][0]["sweep"]
+    assert _run(tmp_path, doc) == 1
+
+
+def test_copart_floor_violation_fails(tmp_path):
+    doc = _doc()
+    doc["dist_runs"][0]["speedup_copart_vs_blind"] = 1.2
+    assert _run(tmp_path, doc) == 1
+
+
+def test_same_label_regression_fails(tmp_path):
+    doc = _doc()
+    second = json.loads(json.dumps(doc["delta_runs"][0]))
+    for pt in second["sweep"]:
+        pt["speedup"] = pt["speedup"] * 0.5             # >20% drop
+    second["sweep"][0]["speedup"] = 3.5                 # still above floor
+    second["sweep"][1]["speedup"] = 3.1
+    doc["delta_runs"].append(second)
+    assert _run(tmp_path, doc) == 1

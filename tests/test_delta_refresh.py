@@ -1,0 +1,545 @@
+"""Incremental artifact maintenance (DESIGN.md §12).
+
+Per-op-class merge correctness: for every refreshable root class the
+refreshed artifact must be BIT-identical to a cold recompute over the
+appended inputs (integer-valued data keeps float32 aggregation exact;
+re-aggregation merges at most two partials per key, so it is exact for
+any float data).  Plus: non-appendable staleness falls back to R4
+deletion, partitioned artifacts refresh shard-locally, the cost model
+arbitrates refresh/lazy/delete, lazy refreshes fire on the next probe,
+and an in-place refresh invalidates every derived view of the old value
+(the stale-view regression).
+"""
+import numpy as np
+import pytest
+
+from repro.core import plan as P
+from repro.core.cost_model import CostModel
+from repro.core.delta import _reagg_merge, derive_refresh
+from repro.core.plan import Partitioning, rebind_load_versions
+from repro.core.repository import make_entry
+from repro.core.restore import ReStore
+from repro.dataflow.expr import Col, Const
+from repro.dataflow.physical import op_groupby
+from repro.dataflow.table import Table, partition_hash
+from repro.store.artifacts import ArtifactStore, Catalog
+
+N_DIM = 8
+
+
+def fact(seed: int, n: int = 96) -> Table:
+    rng = np.random.default_rng(seed)
+    return Table.from_numpy({
+        "k": rng.integers(0, N_DIM, n).astype(np.int32),
+        "v": rng.integers(0, 100, n).astype(np.int32),
+        # integer-valued float column: float32 sums stay exact
+        "w": rng.integers(0, 50, n).astype(np.float32),
+    })
+
+
+def dim(lo: int = 0, hi: int = N_DIM) -> Table:
+    ks = np.arange(lo, hi, dtype=np.int32)
+    return Table.from_numpy({"dk": ks, "x": (ks * 3).astype(np.int32)})
+
+
+def canon(t: Table):
+    d = t.to_numpy()
+    order = np.lexsort(tuple(d[c] for c in sorted(d, reverse=True)))
+    return {c: d[c][order] for c in sorted(d)}
+
+
+def assert_identical(a: Table, b: Table, label: str = ""):
+    ca, cb = canon(a), canon(b)
+    assert sorted(ca) == sorted(cb), f"{label}: column sets differ"
+    for c in ca:
+        assert ca[c].dtype == cb[c].dtype, f"{label}:{c}"
+        assert np.array_equal(ca[c], cb[c]), f"{label}:{c}"
+
+
+def _restore(delta_fact=None, delta_dim=None, **kw) -> ReStore:
+    store = ArtifactStore()
+    cat = Catalog(store)
+    cat.register("fact", fact(0))
+    cat.register("dim", dim())
+    rs = ReStore(cat, store, **kw)
+    if delta_fact is not None:
+        cat.append("fact", delta_fact)
+    if delta_dim is not None:
+        cat.append("dim", delta_dim)
+    return rs
+
+
+def _check_refresh(build, delta_fact=None, delta_dim=None,
+                   expect_refresh=True):
+    """Cold run -> append -> maintain(refresh) -> the new-version query
+    must be answered without executing, bit-identical to a plain cold
+    run over the appended data.  Returns the maintain report."""
+    rs = _restore(heuristic="aggressive")
+    rs.run_plan(build())
+    if delta_fact is not None:
+        rs.catalog.append("fact", delta_fact)
+    if delta_dim is not None:
+        rs.catalog.append("dim", delta_dim)
+    rep = rs.maintain(mode="refresh")
+    versions = {ds: rs.catalog.version(ds) for ds in ("fact", "dim")}
+    plan2 = rebind_load_versions(build(), versions)
+    got, run_rep = rs.run_plan(plan2)
+
+    ref_rs = _restore(delta_fact, delta_dim, heuristic="off",
+                      rewrite_enabled=False, semantic=False)
+    ref, _ = ref_rs.run_plan(plan2)
+    assert_identical(ref["out"], got["out"])
+    if expect_refresh:
+        assert rep["refreshed"] >= 1
+        assert run_rep.n_executed == 0, \
+            "refreshed repo must answer the new-version query exactly"
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# Per-op-class merge correctness (bit-identity vs cold recompute)
+
+
+def test_refresh_recordwise_chain():
+    def build():
+        f = P.filter_(P.load("fact"), Col("v") > 20)
+        pr = P.project(f, ["k", "v"])
+        fe = P.foreach(pr, {"k": Col("k"), "v2": Col("v") * Const(2)})
+        return P.PhysicalPlan([P.store(fe, "out")])
+    _check_refresh(build, delta_fact=fact(7, 32))
+
+
+def test_refresh_union():
+    def build():
+        a = P.project(P.load("fact"), ["k"])
+        b = P.foreach(P.project(P.load("dim"), ["dk"]), {"k": Col("dk")})
+        return P.PhysicalPlan([P.store(P.union(a, b), "out")])
+    _check_refresh(build, delta_fact=fact(8, 24))
+
+
+def test_refresh_union_both_inputs_changed():
+    def build():
+        a = P.project(P.load("fact"), ["k"])
+        b = P.foreach(P.project(P.load("dim"), ["dk"]), {"k": Col("dk")})
+        return P.PhysicalPlan([P.store(P.union(a, b), "out")])
+    _check_refresh(build, delta_fact=fact(9, 16),
+                   delta_dim=dim(N_DIM, N_DIM + 4))
+
+
+def test_refresh_groupby_all_decomposable_aggs():
+    def build():
+        f = P.filter_(P.load("fact"), Col("v") > 10)
+        g = P.groupby(f, ["k"], {"s": ("sum", "w"), "n": ("count", "v"),
+                                 "mn": ("min", "v"), "mx": ("max", "v")})
+        return P.PhysicalPlan([P.store(g, "out")])
+    _check_refresh(build, delta_fact=fact(11, 48))
+
+
+def test_refresh_distinct():
+    def build():
+        d = P.distinct(P.project(P.load("fact"), ["k", "v"]))
+        return P.PhysicalPlan([P.store(d, "out")])
+    _check_refresh(build, delta_fact=fact(12, 40))
+
+
+def test_refresh_join_left_side_changed():
+    def build():
+        j = P.join(P.project(P.load("fact"), ["k", "v"]),
+                   P.load("dim"), ["k"], ["dk"])
+        return P.PhysicalPlan([P.store(j, "out")])
+    _check_refresh(build, delta_fact=fact(13, 32))
+
+
+def test_refresh_join_both_sides_changed():
+    # appended dim keys are globally unique, so the bounded probe
+    # window never saturates and the three-way delta join is exact
+    def build():
+        j = P.join(P.project(P.load("fact"), ["k", "v"]),
+                   P.load("dim"), ["k"], ["dk"])
+        return P.PhysicalPlan([P.store(j, "out")])
+    rng = np.random.default_rng(14)
+    extra = Table.from_numpy({
+        "k": rng.integers(0, N_DIM + 4, 24).astype(np.int32),
+        "v": rng.integers(0, 100, 24).astype(np.int32),
+        "w": rng.integers(0, 50, 24).astype(np.float32)})
+    _check_refresh(build, delta_fact=extra,
+                   delta_dim=dim(N_DIM, N_DIM + 4))
+
+
+# ---------------------------------------------------------------------------
+# Fallback to R4 (delete) when no delta plan is derivable
+
+
+def test_rewrite_churn_falls_back_to_delete():
+    def build():
+        g = P.groupby(P.load("fact"), ["k"], {"s": ("sum", "v")})
+        return P.PhysicalPlan([P.store(g, "out")])
+    rs = _restore(heuristic="off")
+    rs.run_plan(build())
+    rs.catalog.register("fact", fact(55))          # arbitrary rewrite
+    rep = rs.maintain(mode="refresh")
+    assert rep == {"refreshed": 0, "lazy": 0, "deleted": 1}
+    assert len(rs.repo) == 0
+
+
+def test_nondecomposable_aggregate_falls_back_to_delete():
+    def build():
+        g = P.groupby(P.load("fact"), ["k"], {"m": ("mean", "v")})
+        return P.PhysicalPlan([P.store(g, "out")])
+    rs = _restore(heuristic="off")
+    rs.run_plan(build())
+    rs.catalog.append("fact", fact(3, 8))
+    rep = rs.maintain(mode="refresh")
+    assert rep["deleted"] == 1 and rep["refreshed"] == 0
+
+
+def test_ops_above_blocking_root_fall_back_to_delete():
+    def build():
+        g = P.groupby(P.load("fact"), ["k"], {"s": ("sum", "v")})
+        f = P.foreach(g, {"k": Col("k"), "s2": Col("s") * Const(2)})
+        return P.PhysicalPlan([P.store(f, "out")])
+    rs = _restore(heuristic="off")
+    rs.run_plan(build())
+    rs.catalog.append("fact", fact(3, 8))
+    rep = rs.maintain(mode="refresh")
+    # whole-job entry (FOREACH over GROUPBY) is not derivable
+    assert rep["deleted"] >= 1
+    entry_plans = [e.plan.sinks[0].inputs[0].kind for e in rs.repo.entries]
+    assert "FOREACH" not in entry_plans
+
+
+def test_boundary_artifact_inputs_fall_back_to_delete():
+    # a two-job workflow: the downstream job's entry loads an art/ name
+    def build():
+        g = P.groupby(P.load("fact"), ["k"], {"s": ("sum", "v")})
+        j = P.join(g, P.load("dim"), ["k"], ["dk"])
+        return P.PhysicalPlan([P.store(j, "out")])
+    rs = _restore(heuristic="off")
+    rs.run_plan(build())
+    art_loaders = [e for e in rs.repo.entries
+                   if any(ld.params["dataset"].startswith("art/")
+                          for ld in e.plan.loads())]
+    assert art_loaders, "expected a downstream entry loading a boundary"
+    rs.catalog.append("fact", fact(3, 8))
+    rep = rs.maintain(mode="refresh")
+    assert rep["deleted"] >= len(art_loaders)
+    # the first-job groupby entry refreshed, though
+    assert rep["refreshed"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Catalog append lineage
+
+
+def test_catalog_lineage():
+    store = ArtifactStore()
+    cat = Catalog(store)
+    cat.register("fact", fact(0, 10))
+    assert cat.version("fact") == 0 and cat.rows_at("fact", 0) == 10
+    cat.append("fact", fact(1, 4))
+    assert cat.version("fact") == 1
+    assert cat.rows_at("fact", 1) == 14
+    assert cat.is_append_since("fact", 0)
+    d = cat.delta_table("fact", 0)
+    assert int(np.asarray(d.valid).sum()) == 4
+    snap = cat.snapshot_table("fact", 0)
+    assert_identical(snap, fact(0, 10))
+    assert abs(cat.delta_fraction("fact", 0) - 0.4) < 1e-9
+    # prefix stability: first 10 valid rows of v1 == v0 rows, in order
+    cur = cat.get("fact").to_numpy()
+    old = fact(0, 10).to_numpy()
+    for c in old:
+        assert np.array_equal(cur[c][:10], old[c])
+    cat.register("fact", fact(2, 6))               # rewrite resets lineage
+    assert cat.version("fact") == 2
+    assert not cat.is_append_since("fact", 1)
+    assert cat.delta_table("fact", 1) is None
+
+
+# ---------------------------------------------------------------------------
+# Partitioned artifacts: shard-local refresh
+
+
+def _partitioned(store: ArtifactStore, name: str, t: Table, keys,
+                 n_parts: int):
+    store.put(name + "#tmp", t)
+    tp, _ = store.get_partitioned(name + "#tmp", keys, n_parts)
+    store.put(name, tp, partitioning={"keys": list(keys),
+                                      "n_parts": n_parts})
+    store.delete(name + "#tmp")
+
+
+def _assert_block_layout(t: Table, keys, n_parts: int):
+    blk = t.capacity // n_parts
+    pid = np.asarray(partition_hash(t, keys)) % np.uint32(n_parts)
+    mask = np.asarray(t.valid)
+    assert np.array_equal(pid[mask], (np.arange(t.capacity) // blk)[mask])
+
+
+def test_partitioned_append_is_shard_local_and_layout_valid():
+    store = ArtifactStore()
+    t, d = fact(0, 64), fact(5, 16)
+    _partitioned(store, "art", t, ["k"], 4)
+    store.append("art", d)
+    part = store.partitioning("art")
+    assert part is not None and part["n_parts"] == 4
+    got = store.get("art")
+    assert int(np.asarray(got.valid).sum()) == 64 + 16
+    _assert_block_layout(got, ["k"], 4)
+    # value identity: monolithic concat of the same rows
+    s2 = ArtifactStore()
+    s2.put("ref", t)
+    s2.append("ref", d)
+    assert_identical(got, s2.get("ref"))
+
+
+def test_partitioned_reagg_merge_matches_global_merge():
+    old = op_groupby(fact(0, 64), ["k"], {"s": ("sum", "w"),
+                                          "n": ("count", "v")})
+    partial = op_groupby(fact(5, 32), ["k"], {"s": ("sum", "w"),
+                                              "n": ("count", "v")})
+    merge = _reagg_merge(("k",), {"s": ("sum", "s"), "n": ("sum", "n")})
+    store = ArtifactStore()
+    _partitioned(store, "agg", old, ["k"], 4)
+    store.merge_shards("agg", partial, merge_fn=merge)
+    got = store.get("agg")
+    assert store.partitioning("agg")["n_parts"] == 4
+    _assert_block_layout(got, ["k"], 4)
+    assert_identical(got, merge(old, partial))
+
+
+def test_partitioned_refresh_e2e_preserves_property():
+    def build():
+        g = P.groupby(P.load("fact"), ["k"], {"s": ("sum", "w"),
+                                              "n": ("count", "v")})
+        return P.PhysicalPlan([P.store(g, "out")])
+    rs = _restore(heuristic="off")
+    rs.run_plan(build())
+    (entry,) = rs.repo.entries
+    # re-lay the stored artifact out partitioned on the group keys (the
+    # layout a mesh producer creates naturally, DESIGN.md §11)
+    tp, _ = rs.store.get_partitioned(entry.artifact, ["k"], 4)
+    rs.store.put(entry.artifact, tp,
+                 partitioning={"keys": ["k"], "n_parts": 4})
+    entry.partitioning = rs.store.partitioning(entry.artifact)
+    delta = fact(21, 48)
+    rs.catalog.append("fact", delta)
+    rep = rs.maintain(mode="refresh")
+    assert rep["refreshed"] == 1
+    part = rs.store.partitioning(entry.artifact)
+    assert part is not None and part["n_parts"] == 4, \
+        "shard-local refresh must preserve the partition property"
+    assert entry.partitioning == part
+    plan2 = rebind_load_versions(build(), {"fact": 1})
+    got, run_rep = rs.run_plan(plan2)
+    assert run_rep.n_executed == 0
+    ref_rs = _restore(delta, heuristic="off", rewrite_enabled=False,
+                      semantic=False)
+    ref, _ = ref_rs.run_plan(plan2)
+    assert_identical(ref["out"], got["out"])
+
+
+# ---------------------------------------------------------------------------
+# Stale-view regression: an in-place refresh must invalidate derived
+# get_partitioned views and the device-cache entry of the old value
+
+
+def test_refresh_invalidates_derived_views_and_device_cache():
+    import tempfile
+    store = ArtifactStore(root=tempfile.mkdtemp(prefix="delta_reg_"))
+    t, d = fact(0, 64), fact(5, 16)
+    _partitioned(store, "art", t, ["k"], 4)
+    # derived re-partitioned view at a different P + a cached get()
+    v8, _ = store.get_partitioned("art", ["k"], 8)
+    assert int(np.asarray(v8.valid).sum()) == 64
+    assert store.get("art") is not None
+    store.append("art", d)
+    got = store.get("art")                         # device cache path
+    assert int(np.asarray(got.valid).sum()) == 80, \
+        "device cache served a stale pre-refresh table"
+    v8b, _ = store.get_partitioned("art", ["k"], 8)
+    assert int(np.asarray(v8b.valid).sum()) == 80, \
+        "derived re-partitioned view survived the refresh"
+    _assert_block_layout(v8b, ["k"], 8)
+    store.flush()
+    store.close()
+
+
+def test_monolithic_refresh_replaces_device_cache_and_disk():
+    import tempfile
+    store = ArtifactStore(root=tempfile.mkdtemp(prefix="delta_reg2_"))
+    store.put("a", fact(0, 32))
+    assert store.cache.get("a") is not None
+    store.append("a", fact(1, 8))
+    assert int(np.asarray(store.get("a").valid).sum()) == 40
+    store.flush()
+    # reopened store reads the refreshed bytes
+    s2 = ArtifactStore(root=store.root)
+    assert int(np.asarray(s2.get("a").valid).sum()) == 40
+    store.close()
+    s2.close()
+
+
+# ---------------------------------------------------------------------------
+# Cost-model arbitration + lazy refresh
+
+
+def _entry_for_decision(use_count=0, producer_cost_s=10.0,
+                        bytes_out=1 << 10):
+    plan = P.PhysicalPlan([P.store(
+        P.groupby(P.load("fact"), ["k"], {"s": ("sum", "v")}), "art/d")])
+    e = make_entry(plan, "art/d", bytes_out=bytes_out,
+                   exec_time_s=producer_cost_s,
+                   producer_cost_s=producer_cost_s)
+    e.use_count = use_count
+    if use_count:
+        import time
+        e.last_used = time.time()
+    return e
+
+
+def test_refresh_decision_hot_entry_refreshes():
+    cm = CostModel()
+    e = _entry_for_decision(use_count=3)
+    assert cm.refresh_decision(e, delta_fraction=0.05) == "refresh"
+
+
+def test_refresh_decision_large_delta_deletes():
+    cm = CostModel()
+    e = _entry_for_decision(use_count=3)
+    # refresh cost >= recompute cost: no point maintaining
+    assert cm.refresh_decision(e, delta_fraction=1.5) == "delete"
+
+
+def test_refresh_decision_worthless_entry_deletes():
+    cm = CostModel(fixed_io_s=0.5)     # io dwarfs the 0.1s producer
+    e = _entry_for_decision(use_count=0, producer_cost_s=0.1)
+    assert cm.refresh_decision(e, delta_fraction=0.05) == "delete"
+
+
+def test_refresh_decision_cold_entry_defers():
+    cm = CostModel()
+    e = _entry_for_decision(use_count=0)     # expected uses ~ prior 0.5
+    assert cm.refresh_decision(e, delta_fraction=0.05) == "lazy"
+
+
+def test_lazy_refresh_fires_on_probe():
+    def build():
+        g = P.groupby(P.load("fact"), ["k"], {"s": ("sum", "v")})
+        return P.PhysicalPlan([P.store(g, "out")])
+    rs = _restore(heuristic="off")
+    rs.run_plan(build())
+    delta = fact(3, 16)
+    rs.catalog.append("fact", delta)
+    rep = rs.maintain(mode="lazy")
+    assert rep["lazy"] == 1 and len(rs.repo.pending_refresh) == 1
+    plan2 = rebind_load_versions(build(), {"fact": 1})
+    got, run_rep = rs.run_plan(plan2)
+    assert rs.repo.refreshes == 1 and not rs.repo.pending_refresh
+    assert run_rep.n_executed == 0
+    ref_rs = _restore(delta, heuristic="off", rewrite_enabled=False,
+                      semantic=False)
+    ref, _ = ref_rs.run_plan(plan2)
+    assert_identical(ref["out"], got["out"])
+
+
+def test_lazy_refresh_rederives_after_second_append():
+    def build():
+        g = P.groupby(P.load("fact"), ["k"], {"s": ("sum", "v")})
+        return P.PhysicalPlan([P.store(g, "out")])
+    rs = _restore(heuristic="off")
+    rs.run_plan(build())
+    rs.catalog.append("fact", fact(3, 16))
+    rs.maintain(mode="lazy")
+    rs.catalog.append("fact", fact(4, 8))          # moved again
+    plan2 = rebind_load_versions(build(), {"fact": 2})
+    got, run_rep = rs.run_plan(plan2)
+    assert rs.repo.refreshes == 1 and run_rep.n_executed == 0
+    ref_rs = _restore(heuristic="off", rewrite_enabled=False,
+                      semantic=False)
+    ref_rs.catalog.append("fact", fact(3, 16))
+    ref_rs.catalog.append("fact", fact(4, 8))
+    ref, _ = ref_rs.run_plan(plan2)
+    assert_identical(ref["out"], got["out"])
+
+
+def test_maintain_auto_uses_cost_model():
+    def build():
+        g = P.groupby(P.load("fact"), ["k"], {"s": ("sum", "v")})
+        return P.PhysicalPlan([P.store(g, "out")])
+    rs = _restore(heuristic="off")
+    rs.run_plan(build())
+    rs.run_plan(build())                  # whole-job fast path: a reuse
+    (entry,) = rs.repo.entries
+    assert entry.use_count >= 1
+    entry.producer_cost_s = 10.0          # make reuse clearly valuable
+    rs.catalog.append("fact", fact(3, 8))
+    rep = rs.maintain(mode="auto")
+    assert rep["refreshed"] == 1          # hot + cheap delta => eager
+
+
+def test_stream_append_churn_smoke():
+    from repro.workloads.stream import StreamConfig, run_stream
+    cfg = StreamConfig(n_events=8, n_tenants=2, n_rows=1 << 8,
+                       append_every=3, append_frac=0.25,
+                       maintain="refresh", seed=0)
+    res = run_stream("keep", cfg)
+    assert len(res.events) == 8
+    assert res.refreshes >= 1, "append churn must drive refreshes"
+
+
+def test_refresh_skipped_when_new_version_already_recomputed():
+    """If a probe recomputed (and registered) the new-version value
+    before maintain() ran, refreshing the stale entry would index two
+    entries under one signature — the stale entry must R4-drop."""
+    def build():
+        g = P.groupby(P.load("fact"), ["k"], {"s": ("sum", "v")})
+        return P.PhysicalPlan([P.store(g, "out")])
+    rs = _restore(heuristic="off")
+    rs.run_plan(build())
+    rs.catalog.append("fact", fact(3, 16))
+    # the new-version plan runs BEFORE maintenance: recompute + register
+    plan2 = rebind_load_versions(build(), {"fact": 1})
+    rs.run_plan(plan2)
+    assert len(rs.repo) == 2            # stale v0 entry + fresh v1 entry
+    rep = rs.maintain(mode="refresh")
+    assert rep == {"refreshed": 0, "lazy": 0, "deleted": 1}
+    assert len(rs.repo) == 1
+    (entry,) = rs.repo.entries
+    assert entry.source_versions["fact"] == 1
+    assert rs.repo.by_sig[entry.signature] is entry
+
+    # same guard on the lazy path: park a refresh, then register a
+    # fresh entry at the refreshed signature before the probe fires
+    rs2 = _restore(heuristic="off")
+    rs2.run_plan(build())
+    rs2.catalog.append("fact", fact(3, 16))
+    assert rs2.maintain(mode="lazy")["lazy"] == 1
+    (spec,) = rs2.repo.pending_refresh.values()
+    dup = make_entry(rebind_load_versions(build(), {"fact": 1}),
+                     "art/dup", bytes_out=64)
+    assert dup.signature == spec.refreshed_signature
+    assert rs2.repo.add(dup)
+    n = rs2.repo.refresh_pending(plan2, rs2.engine, rs2.catalog,
+                                 rs2.store)
+    assert n == 0 and not rs2.repo.pending_refresh
+    assert [e.signature for e in rs2.repo.entries] == [dup.signature]
+
+
+def test_derive_refresh_none_when_not_stale():
+    def build():
+        g = P.groupby(P.load("fact"), ["k"], {"s": ("sum", "v")})
+        return P.PhysicalPlan([P.store(g, "out")])
+    rs = _restore(heuristic="off")
+    rs.run_plan(build())
+    (entry,) = rs.repo.entries
+    assert derive_refresh(entry, rs.catalog) is None
+
+
+def test_partitioning_dataclass_roundtrip_unrelated_guard():
+    # merge_shards rejects non-partitioned artifacts loudly
+    store = ArtifactStore()
+    store.put("mono", fact(0, 16))
+    with pytest.raises(ValueError):
+        store.merge_shards("mono", fact(1, 4))
+    assert Partitioning.from_dict(None) is None

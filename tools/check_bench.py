@@ -12,10 +12,17 @@ Two jobs:
      Labels isolate scales: the small CI run (label "ci") is never
      compared against a committed full-size entry.
 
-Additionally the committed full-size ``dist_runs`` entries must meet
-the ISSUE 4 acceptance floor: co-partitioned reuse at least
-``MIN_COPART_SPEEDUP``x faster than partition-blind reuse (entries
-below ``FLOOR_MIN_ROWS`` rows — CI smoke sizes — are exempt).
+Additionally the committed full-size entries must meet acceptance
+floors (entries below ``FLOOR_MIN_ROWS`` rows — CI smoke sizes — are
+exempt):
+
+  * ``dist_runs`` — co-partitioned reuse at least ``MIN_COPART_SPEEDUP``x
+    faster than partition-blind reuse (ISSUE 4);
+  * ``delta_runs`` — at append fractions ≤ ``DELTA_FLOOR_MAX_FRAC``,
+    delta refresh at least ``MIN_DELTA_SPEEDUP``x faster than
+    delete-and-recompute for the groupby and join templates (ISSUE 5);
+    every sweep point of every entry (any size) must also record
+    ``identical: true`` — a refresh that is fast but wrong gates red.
 
 Usage: python tools/check_bench.py [path]   (exit 0 = all checks pass)
 """
@@ -30,6 +37,9 @@ DEFAULT_PATH = os.path.join(ROOT, "BENCH_core.json")
 
 MAX_REGRESSION = float(os.environ.get("CHECK_BENCH_MAX_REGRESSION", 0.20))
 MIN_COPART_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_COPART", 2.0))
+MIN_DELTA_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_DELTA", 3.0))
+DELTA_FLOOR_MAX_FRAC = 0.10      # the ISSUE 5 "≤10% append" regime
+DELTA_FLOOR_TEMPLATES = ("groupby", "join")
 FLOOR_MIN_ROWS = 1 << 16         # full-size entries only
 
 # run-list name -> (required fields, headline metric fn or None)
@@ -38,6 +48,12 @@ FLOOR_MIN_ROWS = 1 << 16         # full-size entries only
 def _semantic_headline(rec):
     at50 = [r for r in rec["sweep"] if r.get("overlap") == 0.50]
     return at50[0]["speedup_vs_plain"] if at50 else None
+
+
+def _delta_headline(rec):
+    pts = [r["speedup"] for r in rec["sweep"]
+           if r.get("frac", 1.0) <= DELTA_FLOOR_MAX_FRAC]
+    return min(pts) if pts else None
 
 
 SCHEMAS = {
@@ -49,6 +65,7 @@ SCHEMAS = {
     "dist_runs": (("label", "n_rows", "n_shards", "arms",
                    "speedup_copart_vs_blind", "shuffles_skipped"),
                   lambda r: r["speedup_copart_vs_blind"]),
+    "delta_runs": (("label", "n_rows", "sweep"), _delta_headline),
 }
 
 
@@ -104,6 +121,30 @@ def check(path: str) -> int:
                             f"dist_runs label={rec['label']!r}: "
                             f"co-partitioned reuse speedup {s:.2f} below "
                             f"the {MIN_COPART_SPEEDUP:.1f}x floor "
+                            f"({rec['n_rows']} rows)")
+
+        # acceptance floors for delta-refresh entries (ISSUE 5)
+        if list_name == "delta_runs":
+            for rec in entries:
+                for pt in rec["sweep"]:
+                    n_checked += 1
+                    if not pt.get("identical", False):
+                        errors.append(
+                            f"delta_runs label={rec['label']!r} "
+                            f"{pt.get('template')}@{pt.get('frac')}: "
+                            f"refresh result not bit-identical to "
+                            f"recompute")
+                    if (rec["n_rows"] >= FLOOR_MIN_ROWS
+                            and pt.get("frac", 1.0) <= DELTA_FLOOR_MAX_FRAC
+                            and pt.get("template")
+                            in DELTA_FLOOR_TEMPLATES
+                            and pt.get("speedup", 0.0)
+                            < MIN_DELTA_SPEEDUP):
+                        errors.append(
+                            f"delta_runs label={rec['label']!r} "
+                            f"{pt['template']}@{pt['frac']}: refresh "
+                            f"speedup {pt['speedup']:.2f} below the "
+                            f"{MIN_DELTA_SPEEDUP:.1f}x floor "
                             f"({rec['n_rows']} rows)")
 
     if errors:
