@@ -23,8 +23,8 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 from benchmarks import (core_bench, delta_bench, distributed_bench,  # noqa
                         filter_sweep, heuristics, policy_bench,
                         prefix_reuse_bench, projection_sweep,
-                        semantic_reuse_bench, store_overhead, subjob_reuse,
-                        whole_job_reuse)
+                        semantic_reuse_bench, service_bench,
+                        store_overhead, subjob_reuse, whole_job_reuse)
 
 SUITES = {
     "core": core_bench.run,
@@ -32,6 +32,7 @@ SUITES = {
     "semantic": semantic_reuse_bench.run,
     "dist": distributed_bench.run,
     "delta": delta_bench.run,
+    "service": service_bench.run,
     "fig9_whole_job": whole_job_reuse.run,
     "fig10_12_subjob": subjob_reuse.run,
     "fig11_overhead": store_overhead.run,
@@ -42,7 +43,7 @@ SUITES = {
 }
 
 # suites that accept a --label (snapshots into BENCH_core.json)
-LABELLED = {"core", "policy", "semantic", "dist", "delta"}
+LABELLED = {"core", "policy", "semantic", "dist", "delta", "service"}
 
 
 def main() -> None:

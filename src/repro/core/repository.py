@@ -39,8 +39,9 @@ driver calls ``rebalance`` after unpinning to settle back under budget.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional
 
 from .cost_model import CostModel
 from .matcher import match_bottom_up
@@ -103,7 +104,11 @@ class Repository:
         self.policy = policy
         self.cost_model = cost_model or CostModel(
             load_bandwidth_bytes_s=load_bandwidth_bytes_s)
-        self.pinned: Set[str] = set()
+        # artifact name -> pin refcount.  Counting (not a set) lets
+        # concurrent service workflows pin a shared artifact without one
+        # run's unpin releasing another's protection; membership and
+        # emptiness read exactly like the old set.
+        self.pinned: Dict[str, int] = {}
         self.evictions = 0            # budget evictions (not R3/R4)
         self.rejections = 0           # budget admission rejections
         self.exact_hits = 0           # record_use(kind="exact")
@@ -114,6 +119,14 @@ class Repository:
         # whose plan would match the refreshed signature (DESIGN.md §12)
         self.pending_refresh: Dict[str, object] = {}
         self._store = None            # bound by the ReStore driver
+        # WAL journal (service.journal.RepositoryJournal) or None: every
+        # state transition that must survive process death is appended
+        # before this method returns (DESIGN.md §13)
+        self.journal = None
+        # one lock around every compound state transition: service
+        # workers share a single Repository.  Reentrant because
+        # add -> _admit -> _apply_eviction -> _replace nest.
+        self._lock = threading.RLock()
         self._ordered_dirty = True
         self._ordered: List[RepositoryEntry] = []
 
@@ -123,33 +136,52 @@ class Repository:
         called without an explicit store) can delete evicted artifacts."""
         self._store = store
 
+    def bind_journal(self, journal) -> None:
+        """Attach a WAL journal; subsequent mutations are logged."""
+        self.journal = journal
+
     def pin(self, artifacts) -> None:
-        self.pinned.update(artifacts)
+        with self._lock:
+            for a in artifacts:
+                self.pinned[a] = self.pinned.get(a, 0) + 1
+            if self.journal is not None:
+                self.journal.record_pin(artifacts)
 
     def unpin(self, artifacts) -> None:
-        self.pinned.difference_update(artifacts)
+        with self._lock:
+            for a in artifacts:
+                n = self.pinned.get(a, 0) - 1
+                if n > 0:
+                    self.pinned[a] = n
+                else:
+                    self.pinned.pop(a, None)
+            if self.journal is not None:
+                self.journal.record_unpin(artifacts)
 
     # ------------------------------------------------------------- insert
     def add(self, entry: RepositoryEntry) -> bool:
         """Apply keep-rules R1/R2 and the byte-budget admission policy,
         then insert (idempotent by signature).  Returns True iff the
         entry is now in the repository."""
-        if entry.signature in self.by_sig:
-            return False
-        if self.keep_only_reducing and entry.bytes_out >= entry.bytes_in:
-            return False            # rule R1
-        if self.keep_only_time_saving:
-            load_time = entry.bytes_out / self.load_bw
-            if entry.exec_time_s <= load_time:
-                return False        # rule R2 (Eq. 1/2 estimate)
-        entry.created_at = entry.created_at or time.time()
-        if self.budget_bytes is not None and not self._admit(entry):
-            self.rejections += 1
-            return False
-        self.entries.append(entry)
-        self.by_sig[entry.signature] = entry
-        self._ordered_dirty = True
-        return True
+        with self._lock:
+            if entry.signature in self.by_sig:
+                return False
+            if self.keep_only_reducing and entry.bytes_out >= entry.bytes_in:
+                return False            # rule R1
+            if self.keep_only_time_saving:
+                load_time = entry.bytes_out / self.load_bw
+                if entry.exec_time_s <= load_time:
+                    return False        # rule R2 (Eq. 1/2 estimate)
+            entry.created_at = entry.created_at or time.time()
+            if self.budget_bytes is not None and not self._admit(entry):
+                self.rejections += 1
+                return False
+            self.entries.append(entry)
+            self.by_sig[entry.signature] = entry
+            self._ordered_dirty = True
+            if self.journal is not None:
+                self.journal.record_add(entry)
+            return True
 
     # ------------------------------------------------------------- budget
     def _score(self, e: RepositoryEntry, now: float) -> float:
@@ -211,30 +243,33 @@ class Repository:
         """Evict lowest-ranked unpinned entries until the repository fits
         its byte budget again (no-op without a budget).  Called by the
         driver after unpinning a finished workflow's artifacts."""
-        if self.budget_bytes is None:
-            return 0
-        excess = self.total_stored_bytes() - self.budget_bytes
-        if excess <= 0:
-            return 0
-        victims, _ = self._select_victims(excess, time.time())
-        self._apply_eviction(victims)
-        return len(victims)
+        with self._lock:
+            if self.budget_bytes is None:
+                return 0
+            excess = self.total_stored_bytes() - self.budget_bytes
+            if excess <= 0:
+                return 0
+            victims, _ = self._select_victims(excess, time.time())
+            self._apply_eviction(victims)
+            return len(victims)
 
     # ------------------------------------------------------------- ordering
     def ordered(self) -> List[RepositoryEntry]:
         """Entries in scan order per the two ordering rules."""
-        if not self._ordered_dirty:
+        with self._lock:
+            if not self._ordered_dirty:
+                return self._ordered
+            # subsumption partial order: A subsumes B iff B's plan is
+            # contained in A's plan.  n_ops is a cheap necessary condition.
+            es = sorted(self.entries,
+                        key=lambda e: (-e.n_ops(), -e.reduction,
+                                       -e.exec_time_s))
+            # stable insertion respecting subsumption (larger plans first
+            # already guarantees a subsumer precedes what it subsumes,
+            # since a subsumer has strictly more operators unless equal)
+            self._ordered = es
+            self._ordered_dirty = False
             return self._ordered
-        # subsumption partial order: A subsumes B iff B's plan is contained
-        # in A's plan.  n_ops is a cheap necessary condition.
-        es = sorted(self.entries,
-                    key=lambda e: (-e.n_ops(), -e.reduction, -e.exec_time_s))
-        # stable insertion respecting subsumption (larger plans first
-        # already guarantees a subsumer precedes what it subsumes, since a
-        # subsumer has strictly more operators unless equal)
-        self._ordered = es
-        self._ordered_dirty = False
-        return self._ordered
 
     def subsumes(self, a: RepositoryEntry, b: RepositoryEntry) -> bool:
         return match_bottom_up(a.plan, b.plan) is not None
@@ -250,14 +285,17 @@ class Repository:
         of covering-but-inexact artifacts be audited separately."""
         if kind not in ("exact", "semantic"):
             raise ValueError(f"unknown reuse kind {kind!r}")
-        entry.last_used = time.time()
-        entry.use_count += 1
-        entry.saved_s_total += saved_s
-        if kind == "semantic":
-            entry.semantic_uses += 1
-            self.semantic_hits += 1
-        else:
-            self.exact_hits += 1
+        with self._lock:
+            entry.last_used = time.time()
+            entry.use_count += 1
+            entry.saved_s_total += saved_s
+            if kind == "semantic":
+                entry.semantic_uses += 1
+                self.semantic_hits += 1
+            else:
+                self.exact_hits += 1
+            if self.journal is not None:
+                self.journal.record_use(entry, saved_s, kind)
 
     # backwards-compatible alias (pre-§9 API)
     def touch(self, entry: RepositoryEntry):
@@ -266,35 +304,52 @@ class Repository:
     def evict_unused(self, window_s: float, store=None) -> int:
         """Rule R3: drop entries not used within ``window_s`` seconds
         (artifacts deleted from ``store``, defaulting to the bound one)."""
-        now = time.time()
-        keep, drop = [], []
-        for e in self.entries:
-            ref = e.last_used or e.created_at
-            (keep if now - ref <= window_s else drop).append(e)
-        self._replace(keep, drop, store if store is not None else self._store)
-        return len(drop)
+        with self._lock:
+            now = time.time()
+            keep, drop = [], []
+            for e in self.entries:
+                ref = e.last_used or e.created_at
+                (keep if now - ref <= window_s else drop).append(e)
+            self._replace(keep, drop,
+                          store if store is not None else self._store)
+            return len(drop)
 
     def evict_stale(self, catalog, store=None) -> int:
         """Rule R4 garbage collection: an entry whose recorded source
         versions no longer match the catalog can never match again.  Its
         artifact is deleted from ``store`` (default: the bound store)."""
-        keep, drop = [], []
-        for e in self.entries:
-            stale = any(catalog.version(ds) != v
-                        for ds, v in e.source_versions.items())
-            (drop if stale else keep).append(e)
-        self._replace(keep, drop, store if store is not None else self._store)
-        return len(drop)
+        with self._lock:
+            keep, drop = [], []
+            for e in self.entries:
+                stale = any(catalog.version(ds) != v
+                            for ds, v in e.source_versions.items())
+                (drop if stale else keep).append(e)
+            self._replace(keep, drop,
+                          store if store is not None else self._store)
+            return len(drop)
+
+    def drop_artifact(self, name: str) -> int:
+        """Drop every entry whose artifact is ``name`` WITHOUT touching
+        the store — the quarantine path already deleted the damaged
+        bytes; what remains is un-advertising them (DESIGN.md §13)."""
+        with self._lock:
+            keep = [e for e in self.entries if e.artifact != name]
+            drop = [e for e in self.entries if e.artifact == name]
+            self._replace(keep, drop, None)
+            return len(drop)
 
     def _replace(self, keep, drop, store):
-        self.entries = keep
-        self.by_sig = {e.signature: e for e in keep}
-        self._ordered_dirty = True
-        for e in drop:               # evicted entries owe no lazy refresh
-            self.pending_refresh.pop(e.signature, None)
-        if store is not None:
-            for e in drop:
-                store.delete(e.artifact)
+        with self._lock:
+            self.entries = keep
+            self.by_sig = {e.signature: e for e in keep}
+            self._ordered_dirty = True
+            for e in drop:           # evicted entries owe no lazy refresh
+                self.pending_refresh.pop(e.signature, None)
+            if self.journal is not None and drop:
+                self.journal.record_drop([e.signature for e in drop])
+            if store is not None:
+                for e in drop:
+                    store.delete(e.artifact)
 
     # ------------------------------------------------- incremental refresh
     def maintain(self, catalog, engine, store=None,
@@ -310,53 +365,60 @@ class Repository:
         the decision — "delete" reproduces the pre-§12 behavior).
         Returns counters {refreshed, lazy, deleted}."""
         from .delta import derive_refresh
-        store = store if store is not None else self._store
-        report = {"refreshed": 0, "lazy": 0, "deleted": 0}
-        drop = []
-        for e in list(self.entries):
-            stale = any(catalog.version(ds) != v
-                        for ds, v in e.source_versions.items())
-            if not stale:
-                continue
-            spec = derive_refresh(e, catalog)
-            if spec is None:
-                drop.append(e)
-                continue
-            if spec.refreshed_signature in self.by_sig:
-                # a probe already recomputed (and registered) the
-                # new-version value: refreshing would index two entries
-                # under one signature — the stale entry is plain R4
-                drop.append(e)
-                continue
-            decision = mode if mode != "auto" else \
-                self.cost_model.refresh_decision(e, spec.delta_fraction)
-            if decision == "delete":
-                drop.append(e)
-            elif decision == "lazy":
-                self.pending_refresh[e.signature] = spec
-                report["lazy"] += 1
-            else:
-                self.apply_refresh(spec, engine, store, catalog)
-                report["refreshed"] += 1
-        drop_ids = {id(e) for e in drop}
-        self._replace([e for e in self.entries if id(e) not in drop_ids],
-                      drop, store)
-        report["deleted"] = len(drop)
-        return report
+        with self._lock:
+            store = store if store is not None else self._store
+            report = {"refreshed": 0, "lazy": 0, "deleted": 0}
+            drop = []
+            for e in list(self.entries):
+                stale = any(catalog.version(ds) != v
+                            for ds, v in e.source_versions.items())
+                if not stale:
+                    continue
+                spec = derive_refresh(e, catalog)
+                if spec is None:
+                    drop.append(e)
+                    continue
+                if spec.refreshed_signature in self.by_sig:
+                    # a probe already recomputed (and registered) the
+                    # new-version value: refreshing would index two
+                    # entries under one signature — the stale entry is
+                    # plain R4
+                    drop.append(e)
+                    continue
+                decision = mode if mode != "auto" else \
+                    self.cost_model.refresh_decision(e, spec.delta_fraction)
+                if decision == "delete":
+                    drop.append(e)
+                elif decision == "lazy":
+                    self.pending_refresh[e.signature] = spec
+                    if self.journal is not None:
+                        self.journal.record_pending(e.signature)
+                    report["lazy"] += 1
+                else:
+                    self.apply_refresh(spec, engine, store, catalog)
+                    report["refreshed"] += 1
+            drop_ids = {id(e) for e in drop}
+            self._replace([e for e in self.entries
+                           if id(e) not in drop_ids], drop, store)
+            report["deleted"] = len(drop)
+            return report
 
     def apply_refresh(self, spec, engine, store, catalog) -> None:
         """Execute one derived refresh and re-index the entry under its
         refreshed signature (the semantic/exact matchers then see it as
         an exact producer of the new-version value)."""
         from .delta import execute_refresh
-        entry = spec.entry
-        old_sig = entry.signature
-        execute_refresh(spec, engine, store, catalog)
-        self.by_sig.pop(old_sig, None)
-        self.by_sig[entry.signature] = entry
-        self.pending_refresh.pop(old_sig, None)
-        self._ordered_dirty = True
-        self.refreshes += 1
+        with self._lock:
+            entry = spec.entry
+            old_sig = entry.signature
+            execute_refresh(spec, engine, store, catalog)
+            self.by_sig.pop(old_sig, None)
+            self.by_sig[entry.signature] = entry
+            self.pending_refresh.pop(old_sig, None)
+            self._ordered_dirty = True
+            self.refreshes += 1
+            if self.journal is not None:
+                self.journal.record_refresh(old_sig, entry)
 
     def refresh_pending(self, plan, engine, catalog, store=None) -> int:
         """Lazy-refresh hook: execute every pending refresh whose
@@ -367,7 +429,17 @@ class Repository:
         if not self.pending_refresh:
             return 0
         from .delta import derive_refresh
-        store = store if store is not None else self._store
+        self._lock.acquire()
+        try:
+            return self._refresh_pending_locked(
+                plan, engine, catalog,
+                store if store is not None else self._store,
+                derive_refresh)
+        finally:
+            self._lock.release()
+
+    def _refresh_pending_locked(self, plan, engine, catalog, store,
+                                derive_refresh) -> int:
         fps = set(plan.fingerprints().values())
         n = 0
         for old_sig, spec in list(self.pending_refresh.items()):

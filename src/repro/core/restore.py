@@ -21,7 +21,8 @@ from typing import Dict, List, Optional
 
 from ..dataflow.compiler import Job, Workflow, compile_workflow
 from ..dataflow.executor import Engine, JobStats
-from ..store.artifacts import ArtifactStore, Catalog
+from ..store.artifacts import (ArtifactError, ArtifactFlushError,
+                               ArtifactStore, Catalog)
 from .enumerator import enumerate_subjobs, whole_job_candidates
 from .plan import PhysicalPlan
 from .repository import Repository, make_entry
@@ -45,6 +46,13 @@ class JobReport:
 class RunReport:
     jobs: List[JobReport]
     wall_s: float = 0.0
+    # artifacts quarantined (corrupt/missing -> recomputed cold) during
+    # this run: reuse degraded, correctness did not (DESIGN.md §13)
+    degraded: int = 0
+    # artifact names whose write-behind flush failed permanently at the
+    # end-of-run durability barrier (they are de-advertised; the run's
+    # results are unaffected — they were computed on device)
+    flush_failures: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def n_executed(self) -> int:
@@ -105,30 +113,59 @@ class ReStore:
         # backing artifact must survive budget eviction until the
         # workflow is done (downstream jobs load it through the alias)
         self._run_pins: set = set()
+        # artifacts quarantined + recomputed cold in the current run
+        self._degraded = 0
 
     # ------------------------------------------------------------------
     def run_plan(self, plan: PhysicalPlan):
         return self.run_workflow(compile_workflow(plan))
 
     def run_workflow(self, wf: Workflow):
-        reports: List[JobReport] = []
         # job-boundary artifacts are loaded by downstream jobs of THIS
         # workflow: pin them so budget eviction cannot delete them
         # mid-run, then settle back under budget once the run is over
         boundary = {o for job in wf.jobs for o in job.outputs}
         self.repo.pin(boundary)
+        self._degraded = 0
         try:
-            for job in wf.jobs:
-                reports.append(self._process_job(job))
-            results = {user: self.store.get(ds)
-                       for user, ds in wf.final_outputs.items()}
+            # graceful degradation (DESIGN.md §13): an ArtifactError while
+            # gathering results means a boundary artifact went bad AFTER
+            # its job completed — quarantine it and replay the workflow;
+            # intact jobs short-circuit through the fast path, only the
+            # damaged one recomputes.  Per-job faults degrade inside
+            # _process_job; this loop only absorbs the gather window.
+            for cycle in range(3):
+                reports: List[JobReport] = []
+                try:
+                    for job in wf.jobs:
+                        reports.append(self._process_job(job))
+                    results = {user: self.store.get(ds)
+                               for user, ds in wf.final_outputs.items()}
+                    break
+                except ArtifactError as e:
+                    if e.name is None or cycle == 2:
+                        raise
+                    self._degrade(e)
         finally:
-            self.repo.unpin(boundary | self._run_pins)
+            # unpin mirrors the two pin sites exactly (boundary at run
+            # start, _pin_for_run increments during the run): pins are
+            # refcounted so concurrent workflows sharing the repository
+            # don't release each other's protection
+            self.repo.unpin(boundary)
+            self.repo.unpin(self._run_pins)
             self._run_pins = set()
         self.repo.rebalance()
-        # workflow end is a durability point for the write-behind store
-        self.store.flush()
-        return results, RunReport(reports)
+        # workflow end is a durability point for the write-behind store.
+        # A permanent flush failure does not invalidate the results (they
+        # were computed on device); the failed artifacts are already
+        # de-advertised — report them instead of failing the run.
+        flush_failures: List[str] = []
+        try:
+            self.store.flush()
+        except ArtifactFlushError as e:
+            flush_failures = sorted(e.failures)
+        return results, RunReport(reports, degraded=self._degraded,
+                                  flush_failures=flush_failures)
 
     def maintain(self, mode: str = "auto") -> Dict[str, int]:
         """Incremental maintenance entry point (DESIGN.md §12): refresh
@@ -140,7 +177,36 @@ class ReStore:
                                   mode=mode)
 
     # ------------------------------------------------------------------
+    def _degrade(self, e: ArtifactError) -> None:
+        """Absorb one artifact failure: quarantine the damaged bytes,
+        un-advertise every repository entry backed by them, count it.
+        The caller then retries — with the artifact gone, matching
+        cannot pick it again, so the retry recomputes cold."""
+        self._degraded += 1
+        self.store.quarantine(e.name)
+        self.repo.drop_artifact(e.name)
+
     def _process_job(self, job: Job) -> JobReport:
+        """One job with graceful degradation: an ArtifactError from the
+        reuse machinery (corrupt npz, missing file, flaky IO past its
+        retries) quarantines the named artifact and retries; the final
+        attempt runs with rewriting disabled — fully cold — so reuse is
+        never a correctness dependency (DESIGN.md §13)."""
+        last: Optional[ArtifactError] = None
+        for attempt in range(3):
+            try:
+                return self._process_job_once(
+                    job, rewrite_enabled=(self.rewrite_enabled
+                                          and attempt < 2))
+            except ArtifactError as e:
+                if e.name is None:
+                    raise
+                last = e
+                self._degrade(e)
+        raise last
+
+    def _process_job_once(self, job: Job,
+                          rewrite_enabled: bool = True) -> JobReport:
         # lazily-deferred refreshes whose probe has arrived run first,
         # so the refreshed entries match exactly below (DESIGN.md §12)
         if self.repo.pending_refresh:
@@ -168,7 +234,7 @@ class ReStore:
         n_before = job.plan.n_ops()
         n_semantic = 0
         comp_ids = set()
-        if self.rewrite_enabled:
+        if rewrite_enabled:
             # mesh context lets the rewriter price the exchanges a
             # co-partitioned artifact avoids (DESIGN.md §11)
             n_shards = self.engine.n_shards \
@@ -265,9 +331,13 @@ class ReStore:
 
     def _pin_for_run(self, names) -> None:
         """Pin artifacts until the current workflow run finishes (used
-        for alias targets that back reused job outputs)."""
-        self._run_pins.update(names)
-        self.repo.pin(names)
+        for alias targets that back reused job outputs).  Each name is
+        pinned at most once per run so the single unpin in run_workflow
+        balances the refcount exactly."""
+        new = set(names) - self._run_pins
+        if new:
+            self._run_pins |= new
+            self.repo.pin(new)
 
     def _versions_of_artifact(self, name: str) -> Dict[str, int]:
         """Transitive source versions of a boundary artifact: from this

@@ -104,46 +104,58 @@ def plan_from_json(d: Dict[str, Any]) -> P.PhysicalPlan:
 # Repository
 
 
-def repository_to_json(repo) -> str:
+def entry_to_json(e) -> Dict[str, Any]:
+    """One repository entry as a JSON-safe dict (shared by the state
+    snapshot and the WAL journal — one codec, one format)."""
+    return {
+        "plan": plan_to_json(e.plan), "artifact": e.artifact,
+        "signature": e.signature, "bytes_in": e.bytes_in,
+        "bytes_out": e.bytes_out, "rows_out": e.rows_out,
+        "exec_time_s": e.exec_time_s, "created_at": e.created_at,
+        "producer_cost_s": e.producer_cost_s,
+        "history_uses": e.history_uses,
+        "last_used": e.last_used, "use_count": e.use_count,
+        "semantic_uses": e.semantic_uses,
+        "saved_s_total": e.saved_s_total,
+        "source_versions": e.source_versions,
+        "partitioning": e.partitioning,
+    }
+
+
+def entry_from_json(d: Dict[str, Any]):
+    """Decode one entry, or None when the payload fails the integrity
+    check (a corrupted plan no longer matches its signature)."""
     from .repository import RepositoryEntry
-    entries = []
-    for e in repo.entries:
-        entries.append({
-            "plan": plan_to_json(e.plan), "artifact": e.artifact,
-            "signature": e.signature, "bytes_in": e.bytes_in,
-            "bytes_out": e.bytes_out, "rows_out": e.rows_out,
-            "exec_time_s": e.exec_time_s, "created_at": e.created_at,
-            "producer_cost_s": e.producer_cost_s,
-            "history_uses": e.history_uses,
-            "last_used": e.last_used, "use_count": e.use_count,
-            "semantic_uses": e.semantic_uses,
-            "saved_s_total": e.saved_s_total,
-            "source_versions": e.source_versions,
-            "partitioning": e.partitioning,
-        })
-    return json.dumps({"entries": entries}, indent=1)
+    plan = plan_from_json(d["plan"])
+    e = RepositoryEntry(
+        plan=plan, artifact=d["artifact"], signature=d["signature"],
+        bytes_in=d["bytes_in"], bytes_out=d["bytes_out"],
+        rows_out=d["rows_out"], exec_time_s=d["exec_time_s"],
+        producer_cost_s=d.get("producer_cost_s", 0.0),
+        history_uses=d.get("history_uses", 0.0),
+        created_at=d["created_at"], last_used=d["last_used"],
+        use_count=d["use_count"],
+        semantic_uses=d.get("semantic_uses", 0),
+        saved_s_total=d.get("saved_s_total", 0.0),
+        source_versions=d["source_versions"],
+        partitioning=d.get("partitioning"))
+    if P.plan_signature(plan) != e.signature:
+        return None
+    return e
+
+
+def repository_to_json(repo) -> str:
+    return json.dumps(
+        {"entries": [entry_to_json(e) for e in repo.entries]}, indent=1)
 
 
 def repository_from_json(text: str, repo=None):
-    from .repository import Repository, RepositoryEntry
+    from .repository import Repository
     repo = repo if repo is not None else Repository()
     data = json.loads(text)
     for d in data["entries"]:
-        plan = plan_from_json(d["plan"])
-        e = RepositoryEntry(
-            plan=plan, artifact=d["artifact"], signature=d["signature"],
-            bytes_in=d["bytes_in"], bytes_out=d["bytes_out"],
-            rows_out=d["rows_out"], exec_time_s=d["exec_time_s"],
-            producer_cost_s=d.get("producer_cost_s", 0.0),
-            history_uses=d.get("history_uses", 0.0),
-            created_at=d["created_at"], last_used=d["last_used"],
-            use_count=d["use_count"],
-            semantic_uses=d.get("semantic_uses", 0),
-            saved_s_total=d.get("saved_s_total", 0.0),
-            source_versions=d["source_versions"],
-            partitioning=d.get("partitioning"))
-        # integrity: a corrupted plan no longer matches its signature
-        if P.plan_signature(plan) == e.signature:
+        e = entry_from_json(d)
+        if e is not None:
             repo.add(e)
     return repo
 
@@ -159,6 +171,16 @@ def save_repository(repo, path: str) -> None:
     os.replace(tmp, path)        # atomic, like the artifact store
 
 
-def load_repository(path: str, repo=None):
-    with open(path) as f:
-        return repository_from_json(f.read(), repo)
+def load_repository(path: str, repo=None, journal_path=None):
+    """Load a repository state file.  A truncated/corrupt file raises by
+    default (pre-§13 behavior); with ``journal_path`` it instead falls
+    back to replaying the WAL journal — the crash-consistent source of
+    truth the snapshot is merely a compaction of (DESIGN.md §13)."""
+    try:
+        with open(path) as f:
+            return repository_from_json(f.read(), repo)
+    except (OSError, ValueError, KeyError, TypeError):
+        if journal_path is None:
+            raise
+        from ..service.journal import replay_journal
+        return replay_journal(journal_path, repo)

@@ -108,21 +108,39 @@ class JitCache:
         self._fns: "collections.OrderedDict[Tuple, Callable]" = \
             collections.OrderedDict()
         self._lock = threading.Lock()
+        # key -> Event for a build in progress: concurrent service
+        # workers building DIFFERENT plans must not serialize on one
+        # global lock (tracing/compilation dominates cold latency), and
+        # two workers racing on the SAME key must compile it once
+        self._building: Dict[Tuple, threading.Event] = {}
         self.hits = 0
         self.misses = 0
 
     def get(self, key: Tuple, build: Callable[[], Callable]) -> Callable:
-        with self._lock:
-            fn = self._fns.get(key)
-            if fn is not None:
-                self._fns.move_to_end(key)
-                self.hits += 1
-                return fn
-            self.misses += 1
+        while True:
+            with self._lock:
+                fn = self._fns.get(key)
+                if fn is not None:
+                    self._fns.move_to_end(key)
+                    self.hits += 1
+                    return fn
+                ev = self._building.get(key)
+                if ev is None:
+                    self._building[key] = threading.Event()
+                    self.misses += 1
+                    break               # this thread builds
+            ev.wait()                   # a peer is building this key
+        try:
             fn = build()
+        except BaseException:
+            with self._lock:            # waiters retry (and rebuild)
+                self._building.pop(key).set()
+            raise
+        with self._lock:
             self._fns[key] = fn
             while len(self._fns) > self.max_entries:
                 self._fns.popitem(last=False)
+            self._building.pop(key).set()
             return fn
 
     def clear(self):

@@ -27,12 +27,14 @@ from __future__ import annotations
 
 import atexit
 import collections
+import io
 import json
 import os
 import shutil
 import tempfile
 import threading
 import time
+import zlib
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -46,6 +48,63 @@ DEFAULT_CACHE_BYTES = int(os.environ.get("RESTORE_CACHE_BYTES",
 # Bounded write-behind queue: puts block (backpressure) once this many
 # distinct artifact names are waiting to be flushed.
 DEFAULT_QUEUE_DEPTH = 64
+# Orphaned ``.tmp-*`` publish dirs older than this are reaped when a
+# store opens (DESIGN.md §13).  The age guard keeps a concurrently
+# publishing process's live tmp dir safe; crash recovery, which knows
+# no writer is alive, passes ``tmp_gc_age_s=0``.
+DEFAULT_TMP_GC_AGE_S = float(os.environ.get("RESTORE_TMP_GC_AGE_S", 900))
+# Transient-IO retry policy (capped exponential backoff).
+READ_ATTEMPTS = 5
+WRITE_ATTEMPTS = 4
+RETRY_BASE_S = 0.002
+RETRY_CAP_S = 0.1
+
+
+class ArtifactError(Exception):
+    """Base for artifact-level failures the driver can degrade around:
+    reuse is an optimization, so every subclass maps to "quarantine the
+    artifact and recompute cold" (DESIGN.md §13)."""
+
+    def __init__(self, name: Optional[str], msg: Optional[str] = None):
+        self.name = name
+        super().__init__(msg or str(name))
+
+
+class ArtifactMissingError(ArtifactError, KeyError):
+    """Artifact not in the store (subclasses KeyError for callers of the
+    pre-§13 API)."""
+
+
+class CorruptArtifactError(ArtifactError):
+    """On-disk bytes fail checksum/parse verification — deterministic
+    damage, never retried, always quarantined."""
+
+
+class TransientStoreError(ArtifactError):
+    """IO kept failing after the capped-backoff retries."""
+
+
+class ArtifactFlushError(ArtifactError, OSError):
+    """One or more write-behind flushes failed permanently.  Raised by
+    ``flush()`` — the durability barrier can never silently succeed
+    after a failed write.  ``failures`` maps artifact name -> the
+    exception that killed its write; the named artifacts have been
+    de-advertised (a later run recomputes them).  Subclasses OSError:
+    pre-§13 callers caught the propagated write error directly."""
+
+    def __init__(self, failures: Dict[str, BaseException]):
+        self.failures = dict(failures)
+        ArtifactError.__init__(
+            self, None, f"write-behind flush failed for "
+                        f"{sorted(self.failures)}")
+
+
+class SimulatedCrash(BaseException):
+    """Raised by a FaultInjector to model process death mid-operation.
+    Deliberately NOT an ``Exception``: retry wrappers must not absorb
+    it, and the publish path must leave its tmp dir in place exactly
+    like a real kill would (the crash-recovery suites assert the
+    reopened store GCs it)."""
 
 
 def _encode_name(name: str) -> str:
@@ -76,6 +135,14 @@ def _decode_name(enc: str) -> str:
 
 def _pow2ceil(n: int) -> int:
     return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def _npz_bytes(arrays: Dict[str, np.ndarray]) -> bytes:
+    """Serialize arrays to npz bytes in memory, so the crc32 recorded in
+    the manifest covers exactly the bytes written to disk."""
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
 
 
 def _partition_ids(table: Table, keys, n_parts: int) -> np.ndarray:
@@ -221,7 +288,12 @@ class _WriteBehind:
         self._order: "collections.deque[str]" = collections.deque()
         self._queued = set()
         self._writing: Optional[str] = None
-        self._error: Optional[BaseException] = None
+        # name -> exception of a permanently failed write.  Tracked
+        # per artifact so one bad write can't hide behind a later good
+        # one: flush() raises ArtifactFlushError listing every failure
+        # since the last barrier (DESIGN.md §13).  Healed by a
+        # successful re-put of the same name, or by cancel/delete.
+        self.failures: Dict[str, BaseException] = {}
         self._closed = False
         self._thread: Optional[threading.Thread] = None
         self.flushed_count = 0
@@ -238,16 +310,18 @@ class _WriteBehind:
             atexit.register(self._flush_quietly)
 
     def _flush_quietly(self):
+        # atexit drain: failures are still *recorded* (and the artifacts
+        # de-advertised by the flusher) — only the raise is suppressed,
+        # with a stderr warning so a failed write is never invisible
         try:
             self.flush()
-        except BaseException:
-            pass
+        except BaseException as e:
+            import sys
+            print(f"restore: write-behind flush failed at exit: {e!r}",
+                  file=sys.stderr)
 
     def submit(self, name: str, table: Table, meta: dict, pid=None):
         with self._cv:
-            if self._error is not None:
-                err, self._error = self._error, None
-                raise err
             if self._closed:
                 raise RuntimeError("store is closed")
             while (len(self._order) >= self._max_depth
@@ -270,6 +344,7 @@ class _WriteBehind:
         same name (so delete() cannot race with a publish)."""
         with self._cv:
             self._jobs.pop(name, None)
+            self.failures.pop(name, None)   # deleted names owe no report
             if name in self._queued:
                 self._queued.discard(name)
                 try:        # stale names must not count toward backpressure
@@ -281,25 +356,31 @@ class _WriteBehind:
                 self._cv.wait()
 
     def flush(self):
+        """Durability barrier.  Returns only when the queue is drained
+        AND every write since the last barrier succeeded; otherwise
+        raises ArtifactFlushError naming each failed artifact (already
+        de-advertised by the flusher).  Reported failures are cleared —
+        each barrier reports what broke since the previous one."""
         with self._cv:
-            while (self._jobs or self._writing is not None) \
-                    and self._error is None:
+            while self._jobs or self._writing is not None:
                 self._cv.wait()
-            if self._error is not None:
-                err, self._error = self._error, None
-                raise err
+            if self.failures:
+                failed, self.failures = self.failures, {}
+                raise ArtifactFlushError(failed)
 
     def close(self):
-        self.flush()
-        with self._cv:
-            self._closed = True
-            self._cv.notify_all()
-        if self._thread is not None:
-            self._thread.join(timeout=5)
-            # the atexit hook would otherwise pin the store (and its
-            # device cache) in memory for the process lifetime
-            atexit.unregister(self._flush_quietly)
-            self._thread = None
+        try:
+            self.flush()
+        finally:
+            with self._cv:
+                self._closed = True
+                self._cv.notify_all()
+            if self._thread is not None:
+                self._thread.join(timeout=5)
+                # the atexit hook would otherwise pin the store (and its
+                # device cache) in memory for the process lifetime
+                atexit.unregister(self._flush_quietly)
+                self._thread = None
 
     # ------------------------------------------------------------ flusher
     def _run(self):
@@ -319,28 +400,43 @@ class _WriteBehind:
                 self._cv.notify_all()
             err = None
             compacted = None
-            try:
-                compacted = self._store._write_to_disk(name, job[0], job[1],
-                                                       pid=job[2])
-            except BaseException as e:   # surfaced on next flush()/put()
-                err = e
+            for attempt in range(WRITE_ATTEMPTS):
+                try:
+                    compacted = self._store._write_to_disk(
+                        name, job[0], job[1], pid=job[2])
+                    err = None
+                    break
+                except OSError as e:     # transient IO: capped backoff
+                    err = e
+                    if attempt + 1 < WRITE_ATTEMPTS:
+                        self._store.stats["write_retries"] += 1
+                        time.sleep(min(RETRY_CAP_S,
+                                       RETRY_BASE_S * (2 ** attempt)))
+                except BaseException as e:
+                    # SimulatedCrash and programming errors are not
+                    # transient — never retried, surfaced at flush()
+                    err = e
+                    break
             with self._cv:
-                if err is not None:
-                    self._error = err
                 if self._jobs.get(name) is job:
                     del self._jobs[name]     # no newer put superseded us
                     if compacted is not None:
+                        self.failures.pop(name, None)   # healed
                         # swap the compacted table into the device cache
                         # so reuse paths see the truncated capacity —
                         # unless a newer put already cached fresher data
                         self._store.cache.swap_if(name, job[0], compacted,
                                                   job[1]["nbytes"])
                     elif err is not None:
-                        # the write is lost (no retry): stop advertising
+                        # the write is lost (retries exhausted): record
+                        # the failure for flush() and stop advertising
                         # the artifact, or later runs would "reuse" data
                         # that will never be on disk
+                        self.failures[name] = err
                         self._store.meta.pop(name, None)
                         self._store.cache.drop(name)
+                # a superseded job's failure is irrelevant — the newer
+                # put will be written (or fail) on its own turn
                 self._writing = None
                 self.flushed_count += 1
                 self._cv.notify_all()
@@ -350,11 +446,27 @@ class ArtifactStore:
     def __init__(self, root: Optional[str] = None,
                  cache_bytes: int = DEFAULT_CACHE_BYTES,
                  queue_depth: int = DEFAULT_QUEUE_DEPTH,
-                 write_behind: bool = True):
+                 write_behind: bool = True,
+                 fault_injector=None,
+                 tmp_gc_age_s: float = DEFAULT_TMP_GC_AGE_S):
         self.root = root
         self.mem: Dict[str, Table] = {}
         self.meta: Dict[str, dict] = {}
         self.aliases: Dict[str, str] = {}
+        # service.faults.FaultInjector (or None): called at the four IO
+        # choke points ("read"/"write"/"publish"/"published") so the
+        # fault suites can model torn writes, crashes and flaky IO
+        # without monkeypatching store internals (DESIGN.md §13)
+        self.fault_injector = fault_injector
+        self.tmp_gc_age_s = float(tmp_gc_age_s)
+        # robustness counters (fault suites + service stats assert these)
+        self.stats = {"quarantined": 0, "read_retries": 0,
+                      "write_retries": 0, "tmp_gc": 0, "corrupt_on_open": 0}
+        # guards compound metadata transitions (put's record-then-submit,
+        # delete's cancel-then-unlink, alias rewrites) against concurrent
+        # service workers.  The flusher thread must NEVER take this lock:
+        # delete() holds it while waiting out an in-flight write.
+        self._lock = threading.RLock()
         # measured transfer samples (bytes moved, seconds on the caller's
         # clock) — the repository cost model calibrates its load/store
         # bandwidth estimates from these (DESIGN.md §9).  put() samples
@@ -374,8 +486,15 @@ class ArtifactStore:
         self._wb = _WriteBehind(self, queue_depth) if write_behind else None
         if root:
             os.makedirs(root, exist_ok=True)
+            self.gc_tmp(self.tmp_gc_age_s)
             for name in self._scan_disk():
-                self.meta[name] = self._read_manifest(name)
+                try:
+                    self.meta[name] = self._read_manifest(name)
+                except (json.JSONDecodeError, OSError, ValueError):
+                    # a torn manifest means the artifact can never be
+                    # loaded: reap it now rather than advertise it
+                    self.stats["corrupt_on_open"] += 1
+                    shutil.rmtree(self._path(name), ignore_errors=True)
 
     def _resolve(self, name: str) -> str:
         seen = set()
@@ -386,11 +505,42 @@ class ArtifactStore:
 
     def alias(self, name: str, target: str):
         if name != target:
-            self.aliases[name] = target
+            with self._lock:
+                self.aliases[name] = target
 
     # ------------------------------------------------------------------ disk
     def _path(self, name: str) -> str:
         return os.path.join(self.root, _encode_name(name))
+
+    def _fault(self, point: str, name: str, path: Optional[str] = None):
+        """Fault-injection choke point (no-op without an injector)."""
+        if self.fault_injector is not None:
+            self.fault_injector.on(point, name, path=path)
+
+    def gc_tmp(self, age_s: Optional[float] = None) -> int:
+        """Reap orphaned ``.tmp-*`` publish dirs older than ``age_s``
+        seconds (a crashed writer leaks them forever otherwise).  The
+        age guard protects a concurrently publishing process's live tmp
+        dir; crash recovery, which knows no writer survived, passes 0."""
+        if not self.root:
+            return 0
+        if age_s is None:
+            age_s = self.tmp_gc_age_s
+        now = time.time()
+        reaped = 0
+        for d in os.listdir(self.root):
+            if not d.startswith(".tmp-"):
+                continue
+            p = os.path.join(self.root, d)
+            try:
+                if now - os.path.getmtime(p) < age_s:
+                    continue
+                shutil.rmtree(p)
+                reaped += 1
+            except OSError:
+                continue        # racing writer published/cleaned it
+        self.stats["tmp_gc"] += reaped
+        return reaped
 
     def _scan_disk(self):
         out = []
@@ -430,21 +580,42 @@ class ArtifactStore:
         packed = table.host_compact(meta["capacity"], meta["rows"])
         valid = packed.pop("__valid__")
         final = self._path(name)
+        self._fault("write", name)
         tmp = tempfile.mkdtemp(dir=self.root, prefix=".tmp-")
         try:
-            np.savez(os.path.join(tmp, "data.npz"),
-                     __valid__=valid, **packed)
+            data = _npz_bytes(dict(__valid__=valid, **packed))
+            # checksums land in the SAME meta dict put() advertised, so
+            # in-memory readers and the disk manifest agree after flush
+            meta["checksums"] = {"data.npz": zlib.crc32(data)}
+            with open(os.path.join(tmp, "data.npz"), "wb") as f:
+                f.write(data)
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(meta, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)        # atomic publish
+            self._fault("publish", name, path=tmp)
+            self._publish(tmp, final)
+        except SimulatedCrash:
+            raise   # a real kill leaves its tmp dir; the injected one must
         except Exception:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
+        self._fault("published", name, path=final)
         import jax.numpy as jnp
         return Table({n: jnp.asarray(a) for n, a in packed.items()},
                      jnp.asarray(valid))
+
+    def _publish(self, tmp: str, final: str):
+        """Atomically swap ``tmp`` into place.  An existing version is
+        renamed aside first (itself atomic), so a concurrent reader
+        never observes a half-deleted directory — the window where
+        ``final`` does not exist is one rename wide, and the retrying
+        reader rides over it."""
+        if os.path.exists(final):
+            aside = tempfile.mkdtemp(dir=self.root, prefix=".tmp-old-")
+            os.rename(final, os.path.join(aside, "d"))
+            os.rename(tmp, final)
+            shutil.rmtree(aside, ignore_errors=True)
+        else:
+            os.rename(tmp, final)
 
     def _write_sharded(self, name: str, table: Table, meta: dict,
                        pid=None) -> Table:
@@ -458,20 +629,29 @@ class ArtifactStore:
                                            shard_cap)
         vblocks = [np.arange(shard_cap) < c for c in counts]
         final = self._path(name)
+        self._fault("write", name)
         tmp = tempfile.mkdtemp(dir=self.root, prefix=".tmp-")
         try:
+            checks = {}
             for p in range(n_parts):
-                np.savez(os.path.join(tmp, f"shard_{p:05d}.npz"),
-                         __valid__=vblocks[p],
-                         **{n: blocks[n][p] for n in host})
+                fn = f"shard_{p:05d}.npz"
+                data = _npz_bytes(dict(
+                    __valid__=vblocks[p],
+                    **{n: blocks[n][p] for n in host}))
+                checks[fn] = zlib.crc32(data)
+                with open(os.path.join(tmp, fn), "wb") as f:
+                    f.write(data)
+            meta["checksums"] = checks
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(meta, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)        # atomic publish
+            self._fault("publish", name, path=tmp)
+            self._publish(tmp, final)
+        except SimulatedCrash:
+            raise
         except Exception:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
+        self._fault("published", name, path=final)
         import jax.numpy as jnp
         return Table({n: jnp.asarray(np.concatenate(bs))
                       for n, bs in blocks.items()},
@@ -551,30 +731,35 @@ class ArtifactStore:
                     nbytes=int(nbytes), created=time.time())
         if part is not None:
             meta["partitioning"] = part
-        # a re-put replaces the artifact's data, so any cached
-        # re-partitioned views derived from the OLD data are stale now
-        self._drop_derived(name)
-        # cache the live (uncompacted) device table: the flusher swaps in
-        # the compacted version once it is published.  meta is recorded
-        # BEFORE submit so the flusher's failed-write de-advertising
-        # (meta.pop) can never be overwritten by this thread.
-        self.cache.put(name, table, table.nbytes())
-        self.meta[name] = meta
-        try:
-            if self.root:
-                if self._wb is not None:
-                    self._wb.submit(name, table, meta, pid)
+        # the compound record-then-submit transition is atomic w.r.t. a
+        # concurrent delete()/quarantine() of the same name (service
+        # workers share one store); the flusher never takes this lock
+        with self._lock:
+            # a re-put replaces the artifact's data, so any cached
+            # re-partitioned views derived from the OLD data are stale now
+            self._drop_derived(name)
+            # cache the live (uncompacted) device table: the flusher swaps
+            # in the compacted version once it is published.  meta is
+            # recorded BEFORE submit so the flusher's failed-write
+            # de-advertising (meta.pop) can never be overwritten by this
+            # thread.
+            self.cache.put(name, table, table.nbytes())
+            self.meta[name] = meta
+            try:
+                if self.root:
+                    if self._wb is not None:
+                        self._wb.submit(name, table, meta, pid)
+                    else:
+                        compacted = self._write_to_disk(name, table, meta,
+                                                        pid=pid)
+                        self.cache.put(name, compacted, meta["nbytes"])
                 else:
-                    compacted = self._write_to_disk(name, table, meta,
-                                                    pid=pid)
-                    self.cache.put(name, compacted, meta["nbytes"])
-            else:
-                self.mem[name] = table
-        except BaseException:
-            # a failed put must not leave a phantom artifact
-            self.cache.drop(name)
-            self.meta.pop(name, None)
-            raise
+                    self.mem[name] = table
+            except BaseException:
+                # a failed put must not leave a phantom artifact
+                self.cache.drop(name)
+                self.meta.pop(name, None)
+                raise
         self._io["store_bytes"] += meta["nbytes"]
         self._io["store_s"] += time.perf_counter() - t_start
         return meta
@@ -590,16 +775,50 @@ class ArtifactStore:
             self._sample_load(name, t_start, tier="memload")
             return self.mem[name]
         if not self.root:
-            raise KeyError(name)
+            raise ArtifactMissingError(name)
         if self._wb is not None:
             pend = self._wb.pending(name)
             if pend is not None:         # evicted from cache, not yet on disk
                 return pend
+        t = self._load_disk_retry(name)
+        self.cache.put(name, t, t.nbytes())
+        self._sample_load(name, t_start, tier="load")
+        return t
+
+    def _load_disk_retry(self, name: str) -> Table:
+        """Disk load with capped-backoff retries over transient OSErrors
+        (flaky IO, the one-rename publish window).  Deterministic damage
+        (checksum/parse failure) and genuinely absent artifacts raise
+        immediately — retrying cannot heal them."""
+        last: Optional[BaseException] = None
+        for attempt in range(READ_ATTEMPTS):
+            try:
+                return self._load_disk(name)
+            except (ArtifactMissingError, CorruptArtifactError):
+                raise
+            except OSError as e:
+                last = e
+                if attempt + 1 < READ_ATTEMPTS:
+                    self.stats["read_retries"] += 1
+                    time.sleep(min(RETRY_CAP_S,
+                                   RETRY_BASE_S * (2 ** attempt)))
+        raise TransientStoreError(
+            name, f"load({name!r}) failed after {READ_ATTEMPTS} "
+                  f"attempts: {last!r}")
+
+    def _load_disk(self, name: str) -> Table:
+        self._fault("read", name)
         m = self.meta.get(name)
-        if m is None and os.path.exists(
-                os.path.join(self._path(name), "manifest.json")):
-            m = self.meta[name] = self._read_manifest(name)
-        part = (m or {}).get("partitioning")
+        if m is None:
+            try:
+                m = self.meta[name] = self._read_manifest(name)
+            except FileNotFoundError:
+                raise ArtifactMissingError(name)
+            except (json.JSONDecodeError, ValueError) as e:
+                raise CorruptArtifactError(
+                    name, f"manifest unreadable: {e}")
+        checks = m.get("checksums") or {}
+        part = m.get("partitioning")
         import jax.numpy as jnp
         if part is not None:
             # sharded load: concatenating the shards in partition order
@@ -607,29 +826,44 @@ class ArtifactStore:
             cols: Dict[str, list] = {}
             valids = []
             for p in range(part["n_parts"]):
-                sp = os.path.join(self._path(name), f"shard_{p:05d}.npz")
-                if not os.path.exists(sp):
-                    raise KeyError(name)
-                z = np.load(sp)
+                fn = f"shard_{p:05d}.npz"
+                z = self._read_npz_verified(name, fn, checks.get(fn))
                 valids.append(z["__valid__"])
                 for n in z.files:
                     if n != "__valid__":
                         cols.setdefault(n, []).append(z[n])
-            t = Table({n: jnp.asarray(np.concatenate(bs))
-                       for n, bs in cols.items()},
-                      jnp.asarray(np.concatenate(valids)))
-        else:
-            path = os.path.join(self._path(name), "data.npz")
-            if not os.path.exists(path):
-                raise KeyError(name)
-            z = np.load(path)
-            valid = z["__valid__"]
-            t = Table({n: jnp.asarray(z[n])
-                       for n in z.files if n != "__valid__"},
-                      jnp.asarray(valid))
-        self.cache.put(name, t, t.nbytes())
-        self._sample_load(name, t_start, tier="load")
-        return t
+            return Table({n: jnp.asarray(np.concatenate(bs))
+                          for n, bs in cols.items()},
+                         jnp.asarray(np.concatenate(valids)))
+        z = self._read_npz_verified(name, "data.npz",
+                                    checks.get("data.npz"))
+        return Table({n: jnp.asarray(z[n])
+                      for n in z.files if n != "__valid__"},
+                     jnp.asarray(z["__valid__"]))
+
+    def _read_npz_verified(self, name: str, fname: str,
+                           crc: Optional[int]):
+        """Read one data file whole, crc-verify against the manifest
+        (when recorded — pre-checksum artifacts still parse-check), and
+        parse from memory.  Any mismatch is CorruptArtifactError: the
+        caller quarantines and recomputes cold."""
+        path = os.path.join(self._path(name), fname)
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+        except FileNotFoundError:
+            if not os.path.exists(
+                    os.path.join(self._path(name), "manifest.json")):
+                raise ArtifactMissingError(name)   # whole artifact gone
+            raise CorruptArtifactError(
+                name, f"{fname} missing from published artifact")
+        if crc is not None and zlib.crc32(data) != crc:
+            raise CorruptArtifactError(
+                name, f"{fname} checksum mismatch")
+        try:
+            return np.load(io.BytesIO(data))
+        except Exception as e:      # BadZipFile / ValueError / pickle junk
+            raise CorruptArtifactError(name, f"{fname} unreadable: {e}")
 
     def _drop_derived(self, name: str) -> None:
         """Invalidate cached ``<name>#repart...`` views (put/delete of
@@ -655,14 +889,18 @@ class ArtifactStore:
         if t is not None:
             return tuple(t.names)
         if not self.root:
-            raise KeyError(name)
+            raise ArtifactMissingError(name)
         part = self.partitioning(name)
         fn = "shard_00000.npz" if part is not None else "data.npz"
         path = os.path.join(self._path(name), fn)
         if not os.path.exists(path):
-            raise KeyError(name)
-        with np.load(path) as z:
-            return tuple(sorted(n for n in z.files if n != "__valid__"))
+            raise ArtifactMissingError(name)
+        try:
+            with np.load(path) as z:
+                return tuple(sorted(n for n in z.files
+                                    if n != "__valid__"))
+        except Exception as e:
+            raise CorruptArtifactError(name, f"{fn} unreadable: {e}")
 
     # ------------------------------------------------------- partitioning
     def partitioning(self, name: str) -> Optional[dict]:
@@ -809,24 +1047,69 @@ class ArtifactStore:
                                                          "hash_mod")})
 
     def delete(self, name: str):
-        # cancel the pending/in-flight write FIRST: the flusher re-inserts
-        # the compacted table into the cache after publishing, so dropping
-        # the cache entry before the cancel could resurrect the artifact
-        if self.root and self._wb is not None:
-            self._wb.cancel(name)
-        # drop any alias FROM this name: put() resolves aliases, so a
-        # dangling mapping would silently redirect a later re-store of
-        # the deleted name to the alias target
-        self.aliases.pop(name, None)
-        self.mem.pop(name, None)
-        self.meta.pop(name, None)
-        self.cache.drop(name)
-        # derived re-partitioned views of the artifact are stale too
-        self._drop_derived(name)
-        if self.root:
-            p = self._path(name)
-            if os.path.exists(p):
-                shutil.rmtree(p)
+        with self._lock:
+            # cancel the pending/in-flight write FIRST: the flusher
+            # re-inserts the compacted table into the cache after
+            # publishing, so dropping the cache entry before the cancel
+            # could resurrect the artifact
+            if self.root and self._wb is not None:
+                self._wb.cancel(name)
+            # drop any alias FROM this name: put() resolves aliases, so a
+            # dangling mapping would silently redirect a later re-store of
+            # the deleted name to the alias target
+            self.aliases.pop(name, None)
+            self.mem.pop(name, None)
+            self.meta.pop(name, None)
+            self.cache.drop(name)
+            # derived re-partitioned views of the artifact are stale too
+            self._drop_derived(name)
+            if self.root:
+                p = self._path(name)
+                if os.path.exists(p):
+                    shutil.rmtree(p, ignore_errors=True)
+
+    def quarantine(self, name: str):
+        """Remove a damaged/missing artifact everywhere and count it.
+        The caller (driver or recovery) then recomputes cold — reuse is
+        an optimization, never a correctness dependency (DESIGN.md §13).
+        """
+        with self._lock:
+            self.stats["quarantined"] += 1
+            self.delete(name)
+
+    def verify(self, name: str) -> bool:
+        """Integrity check of the on-disk bytes of ``name`` — crc32 of
+        every data file against the manifest (parse-check for
+        pre-checksum artifacts) — without building a Table.  Journal
+        recovery uses this to reconcile entries against what actually
+        survived on disk."""
+        name = self._resolve(name)
+        if not self.root:
+            return name in self.mem
+        try:
+            m = self._read_manifest(name)
+        except (OSError, ValueError):
+            return False
+        checks = m.get("checksums") or {}
+        part = m.get("partitioning")
+        files = ([f"shard_{p:05d}.npz" for p in range(part["n_parts"])]
+                 if part is not None else ["data.npz"])
+        for fn in files:
+            try:
+                with open(os.path.join(self._path(name), fn), "rb") as f:
+                    data = f.read()
+            except OSError:
+                return False
+            crc = checks.get(fn)
+            if crc is not None:
+                if zlib.crc32(data) != crc:
+                    return False
+            else:
+                try:
+                    np.load(io.BytesIO(data)).close()
+                except Exception:
+                    return False
+        return True
 
     def flush(self):
         """Durability barrier: returns once every accepted put() has been

@@ -125,6 +125,19 @@ class StreamResult:
         return sum(e.n_reused for e in self.events)
 
 
+def open_loop_arrivals(n_events: int, rate_per_s: float,
+                       seed: int = 0) -> np.ndarray:
+    """Absolute arrival offsets (seconds) for an open-loop Poisson
+    stream: exponential inter-arrival times at ``rate_per_s``.  Open
+    loop means arrivals do NOT wait for completions — the offered load
+    is fixed, so an overloaded service shows up as growing latency and
+    falling goodput rather than as a politely self-throttling client
+    (the service bench's saturation measurements depend on this)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / float(rate_per_s), n_events)
+    return np.cumsum(gaps)
+
+
 def _event_schedule(cfg: StreamConfig, n_templates: int):
     """Deterministic (tenant, template) sequence: zipfian rank
     distribution mapped through a per-tenant popularity permutation."""

@@ -1,0 +1,77 @@
+"""Shared helpers for the service / fault / crash-recovery suites.
+
+Canonical comparison: reused artifacts are compacted to power-of-two
+capacities while cold results keep the original capacity, so raw array
+equality over padded tables is meaningless.  ``identical`` compares the
+*valid* rows after a lexicographic sort — bit-identity of the answer,
+not of the padding.
+"""
+import numpy as np
+
+from repro.core.repository import Repository
+from repro.core.restore import ReStore
+from repro.store.artifacts import ArtifactStore, Catalog
+from repro.workloads import pigmix
+
+
+def sortable(a):
+    """1-D lexsort key: fixed-width byte-string columns (2-D uint8)
+    collapse to bytes scalars."""
+    if a.ndim == 2:
+        return np.ascontiguousarray(a).view(f"S{a.shape[1]}").ravel()
+    return a
+
+
+def canon(table):
+    d = table.to_numpy()
+    order = np.lexsort(tuple(sortable(d[c])
+                             for c in sorted(d, reverse=True)))
+    return {c: d[c][order] for c in sorted(d)}
+
+
+def identical(a, b):
+    ca, cb = canon(a), canon(b)
+    if sorted(ca) != sorted(cb):
+        return False
+    return all(np.array_equal(ca[c], cb[c]) for c in ca)
+
+
+def results_identical(ra, rb):
+    if sorted(ra) != sorted(rb):
+        return False
+    return all(identical(ra[k], rb[k]) for k in ra)
+
+
+def fresh_driver(root=None, n_rows=512, seed=0, injector=None,
+                 repository=None, **kw):
+    """ReStore driver over a fresh store (+ optional disk root and
+    fault injector), with pigmix registered at ``n_rows``."""
+    store = ArtifactStore(root=None if root is None else str(root),
+                          fault_injector=injector,
+                          **{k: v for k, v in kw.items()
+                             if k in ("cache_bytes", "write_behind",
+                                      "tmp_gc_age_s")})
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=n_rows, seed=seed)
+    repo = repository if repository is not None else Repository()
+    drv_kw = {k: v for k, v in kw.items()
+              if k not in ("cache_bytes", "write_behind", "tmp_gc_age_s")}
+    return ReStore(cat, store, repo, **drv_kw)
+
+
+def query_mix():
+    """The suites' standard workload: reuse-heavy (L3 variants share the
+    join sub-job) plus an independent join."""
+    return [("L3_sum", lambda: pigmix.L3("sum")),
+            ("L2", pigmix.L2),
+            ("L3_mean", lambda: pigmix.L3("mean"))]
+
+
+def run_mix(driver):
+    """Run the standard mix, returning {label/sink: Table}."""
+    out = {}
+    for label, qfn in query_mix():
+        results, _ = driver.run_plan(qfn())
+        for sink, table in results.items():
+            out[f"{label}:{sink}"] = table
+    return out

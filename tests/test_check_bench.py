@@ -29,6 +29,15 @@ def _doc(**overrides):
                  "t_recompute_s": 0.8, "speedup": 1.3, "identical": True},
             ],
         }],
+        "service_runs": [{
+            "label": "full", "n_rows": 1 << 15, "n_events": 48,
+            "worker_sweep": [
+                {"workers": 1, "goodput_per_s": 5.0, "p95_ms": 900.0},
+                {"workers": 4, "goodput_per_s": 9.0, "p95_ms": 450.0},
+            ],
+            "goodput_scaling_4w_vs_1w": 1.8,
+            "singleflight_hits": 21, "dup_executions": 0,
+        }],
     }
     base.update(overrides)
     return base
@@ -89,4 +98,48 @@ def test_same_label_regression_fails(tmp_path):
     second["sweep"][0]["speedup"] = 3.5                 # still above floor
     second["sweep"][1]["speedup"] = 3.1
     doc["delta_runs"].append(second)
+    assert _run(tmp_path, doc) == 1
+
+
+# ------------------------------------------------ service_runs (ISSUE 6)
+
+
+def test_service_scaling_floor_violation_fails(tmp_path):
+    doc = _doc()
+    doc["service_runs"][0]["goodput_scaling_4w_vs_1w"] = 1.2
+    assert _run(tmp_path, doc) == 1
+
+
+def test_service_scaling_floor_exempts_small_sizes(tmp_path):
+    doc = _doc()
+    doc["service_runs"][0]["n_rows"] = 1 << 12          # CI smoke size
+    doc["service_runs"][0]["goodput_scaling_4w_vs_1w"] = 1.0
+    assert _run(tmp_path, doc) == 0
+
+
+def test_service_dup_executions_gate_at_any_size(tmp_path):
+    doc = _doc()
+    doc["service_runs"][0]["n_rows"] = 1 << 12          # even CI smoke
+    doc["service_runs"][0]["dup_executions"] = 1
+    assert _run(tmp_path, doc) == 1
+
+
+def test_service_requires_singleflight_coverage(tmp_path):
+    doc = _doc()
+    doc["service_runs"][0]["singleflight_hits"] = 0
+    assert _run(tmp_path, doc) == 1
+
+
+def test_service_missing_field_fails(tmp_path):
+    doc = _doc()
+    del doc["service_runs"][0]["worker_sweep"]
+    assert _run(tmp_path, doc) == 1
+
+
+def test_service_same_label_regression_fails(tmp_path):
+    doc = _doc()
+    doc["service_runs"][0]["goodput_scaling_4w_vs_1w"] = 2.5
+    second = json.loads(json.dumps(doc["service_runs"][0]))
+    second["goodput_scaling_4w_vs_1w"] = 1.8            # above floor,
+    doc["service_runs"].append(second)                  # but a >20% drop
     assert _run(tmp_path, doc) == 1

@@ -1,0 +1,270 @@
+"""Crash safety: WAL journal replay, SIGKILL-mid-publish recovery,
+snapshot/journal damage tolerance (DESIGN.md §13).
+
+The subprocess harness kills a real process (SIGKILL — no atexit, no
+flush) while the write-behind flusher is mid-publish, then reopens the
+store + journal in this process and asserts the recovery invariants:
+zero orphaned ``.tmp-*`` dirs, zero repository entries pointing at
+missing/unverifiable artifacts, and reuse still working for everything
+published before the kill.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from _service_util import fresh_driver, results_identical, run_mix
+from repro.core.repository import Repository
+from repro.core.restore import ReStore
+from repro.core.serialize import load_repository, save_repository
+from repro.service.journal import RepositoryJournal, replay_journal
+from repro.store.artifacts import ArtifactStore, Catalog
+from repro.workloads import pigmix
+
+N_ROWS = 512
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CHILD = r"""
+import sys, time
+from repro.core.repository import Repository
+from repro.core.restore import ReStore
+from repro.service.journal import RepositoryJournal
+from repro.store.artifacts import ArtifactStore, Catalog
+from repro.workloads import pigmix
+
+root, marker = sys.argv[1], sys.argv[2]
+
+
+class StallAtPublish:
+    # fault-injector shim: signal the parent, then hang the flusher
+    # mid-publish (tmp dir fully written, rename not yet issued) so a
+    # SIGKILL lands at the worst moment
+    def __init__(self):
+        self.armed = False
+
+    def on(self, point, name, path=None):
+        if self.armed and point == "publish":
+            with open(marker + ".tmp", "w") as f:
+                f.write(name)
+            import os
+            os.replace(marker + ".tmp", marker)
+            time.sleep(600)
+
+
+inj = StallAtPublish()
+store = ArtifactStore(root=root, fault_injector=inj)
+cat = Catalog(store)
+pigmix.register_all(cat, n_rows=%(n_rows)d)
+journal = RepositoryJournal(root)
+repo = Repository()
+repo.bind_journal(journal)
+journal.repo = repo
+drv = ReStore(cat, store, repo)
+
+drv.run_plan(pigmix.L3("sum"))
+store.flush()                       # first workflow fully durable
+print("FLUSHED", flush=True)
+inj.armed = True
+drv.run_plan(pigmix.L2())           # second workflow: publish stalls
+store.flush()                       # never returns; parent SIGKILLs
+""" % {"n_rows": N_ROWS}
+
+
+def _spawn_and_kill(tmp_path):
+    root = str(tmp_path / "store")
+    marker = str(tmp_path / "mid_publish")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    proc = subprocess.Popen([sys.executable, "-c", _CHILD, root, marker],
+                            env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE)
+    deadline = time.time() + 300
+    while not os.path.exists(marker):
+        if proc.poll() is not None:
+            out, err = proc.communicate()
+            raise AssertionError(
+                f"child died before the kill point:\n{err.decode()}")
+        assert time.time() < deadline, "child never reached mid-publish"
+        time.sleep(0.01)
+    os.kill(proc.pid, signal.SIGKILL)
+    proc.wait(timeout=60)
+    return root
+
+
+def test_sigkill_mid_publish_recovers_clean(tmp_path):
+    root = _spawn_and_kill(tmp_path)
+    # the kill left an orphaned tmp dir behind (the stalled publish)
+    assert any(d.startswith(".tmp-") for d in os.listdir(root)), \
+        "harness must actually catch a mid-publish state"
+
+    store = ArtifactStore(root=root)
+    repo, journal = RepositoryJournal.recover(store)
+    # invariant 1: no orphaned tmp dirs survive recovery
+    assert not any(d.startswith(".tmp-") for d in os.listdir(root))
+    # invariant 2: every surviving entry points at verified bytes
+    for e in repo.entries:
+        assert store.exists(e.artifact) and store.verify(e.artifact)
+    assert journal.recovered_entries == len(repo.entries)
+    assert journal.recovered_entries >= 1, \
+        "the flushed first workflow must survive the crash"
+
+    # reuse still works for everything published before the kill
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=N_ROWS)
+    drv = ReStore(cat, store, repo)
+    _, rep = drv.run_plan(pigmix.L3("sum"))
+    assert rep.n_executed == 0, "whole-workflow reuse after recovery"
+
+    # and interrupted work recomputes correctly from cold
+    baseline = run_mix(fresh_driver(n_rows=N_ROWS))
+    got = run_mix(drv)
+    assert results_identical(baseline, got)
+
+
+# ------------------------------------------------- journal unit behavior
+
+
+def _disk_driver(tmp_path, journal=True):
+    root = str(tmp_path / "store")
+    store = ArtifactStore(root=root)
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=N_ROWS)
+    repo = Repository()
+    j = None
+    if journal:
+        j = RepositoryJournal(root)
+        repo.bind_journal(j)
+        j.repo = repo
+    return ReStore(cat, store, repo), j, root
+
+
+def test_recover_drops_entries_for_missing_artifacts(tmp_path):
+    drv, _, root = _disk_driver(tmp_path)
+    drv.run_plan(pigmix.L3("sum"))
+    drv.store.flush()
+    n = len(drv.repo)
+    victim = drv.repo.entries[0].artifact
+    import shutil
+    from repro.store.artifacts import _encode_name
+    shutil.rmtree(os.path.join(root, _encode_name(victim)))
+
+    store2 = ArtifactStore(root=root)
+    repo2, journal2 = RepositoryJournal.recover(store2)
+    assert journal2.reconciled_drops == 1
+    assert len(repo2) == n - 1
+    assert all(e.artifact != victim for e in repo2.entries)
+
+
+def test_corrupt_snapshot_falls_back_to_journal_replay(tmp_path):
+    drv, j, root = _disk_driver(tmp_path)
+    drv.run_plan(pigmix.L3("sum"))
+    drv.store.flush()
+    n = len(drv.repo)
+    j.close()
+    with open(j.snapshot_path, "w") as f:
+        f.write("{ definitely not json")
+    store2 = ArtifactStore(root=root)
+    repo2, _ = RepositoryJournal.recover(store2)
+    assert len(repo2) == n, "journal alone must rebuild the state"
+
+
+def test_rotate_compacts_journal_and_roundtrips(tmp_path):
+    drv, j, root = _disk_driver(tmp_path)
+    drv.run_plan(pigmix.L3("sum"))
+    drv.store.flush()
+    n = len(drv.repo)
+    assert j.appended > 0
+    j.rotate(drv.repo)
+    assert j.rotations == 1
+    assert os.path.getsize(j.journal_path) == 0, "rotate truncates"
+    snap = json.load(open(j.snapshot_path))
+    assert len(snap["entries"]) == n
+    j.close()
+    store2 = ArtifactStore(root=root)
+    repo2, _ = RepositoryJournal.recover(store2)
+    assert len(repo2) == n
+
+
+def test_auto_rotation_at_threshold(tmp_path):
+    drv, j, root = _disk_driver(tmp_path)
+    j.rotate_every = 5
+    drv.run_plan(pigmix.L3("sum"))
+    drv.run_plan(pigmix.L3("mean"))
+    assert j.rotations >= 1
+    store2 = ArtifactStore(root=root)
+    repo2, _ = RepositoryJournal.recover(store2)
+    assert len(repo2) == len(drv.repo)
+
+
+def test_torn_journal_tail_is_tolerated(tmp_path):
+    drv, j, root = _disk_driver(tmp_path)
+    drv.run_plan(pigmix.L3("sum"))
+    drv.store.flush()
+    n = len(drv.repo)
+    j.close()
+    with open(j.journal_path, "a") as f:
+        f.write('{"t": "add", "e": {"trunc')    # crash mid-append
+    store2 = ArtifactStore(root=root)
+    repo2, _ = RepositoryJournal.recover(store2)
+    assert len(repo2) == n
+
+
+def test_use_records_replay_post_update_totals(tmp_path):
+    drv, j, root = _disk_driver(tmp_path)
+    drv.run_plan(pigmix.L3("sum"))
+    drv.run_plan(pigmix.L3("sum"))      # second run: reuse -> use records
+    drv.store.flush()
+    by_sig = {e.signature: e for e in drv.repo.entries}
+    store2 = ArtifactStore(root=root)
+    repo2, _ = RepositoryJournal.recover(store2)
+    for e in repo2.entries:
+        live = by_sig[e.signature]
+        assert e.use_count == live.use_count
+        assert e.saved_s_total == pytest.approx(live.saved_s_total)
+
+
+def test_pins_are_not_restored(tmp_path):
+    drv, j, root = _disk_driver(tmp_path)
+    drv.run_plan(pigmix.L3("sum"))
+    drv.store.flush()
+    drv.repo.pin([drv.repo.entries[0].artifact])
+    store2 = ArtifactStore(root=root)
+    repo2, _ = RepositoryJournal.recover(store2)
+    assert not repo2.pinned, "pins are run-scoped, never recovered"
+
+
+def test_load_repository_corrupt_state_falls_back_to_journal(tmp_path):
+    drv, j, root = _disk_driver(tmp_path)
+    drv.run_plan(pigmix.L3("sum"))
+    drv.store.flush()
+    n = len(drv.repo)
+    state = str(tmp_path / "state.json")
+    save_repository(drv.repo, state)
+    with open(state, "w") as f:
+        f.write('{"entries": [truncated')
+    with pytest.raises((ValueError, OSError)):
+        load_repository(state)          # pre-§13 contract: raise
+    repo2 = load_repository(state, journal_path=root)
+    assert len(repo2) == n
+
+
+def test_replay_journal_accepts_store_root_or_journal_dir(tmp_path):
+    drv, j, root = _disk_driver(tmp_path)
+    drv.run_plan(pigmix.L2())
+    drv.store.flush()
+    n = len(drv.repo)
+    assert len(replay_journal(root)) == n
+    assert len(replay_journal(os.path.join(root, "_journal"))) == n
+
+
+def test_journal_dir_never_scanned_as_artifact(tmp_path):
+    drv, j, root = _disk_driver(tmp_path)
+    drv.run_plan(pigmix.L2())
+    drv.store.flush()
+    store2 = ArtifactStore(root=root)
+    assert "_journal" not in store2.names()
+    assert all("_journal" not in n for n in store2.names())

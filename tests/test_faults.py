@@ -1,0 +1,216 @@
+"""Seeded fault-injection sweep + targeted degradation paths
+(DESIGN.md §13).
+
+The sweep is the headline: for every seeded schedule the driver must
+return bit-identical answers (canonical compare — padding/capacity may
+differ between reused and cold results) with no permanent query
+failure, while the injector tears writes, flips bytes, garbles
+manifests, throws transient IO errors and adds latency.  Reuse is an
+optimization, never a correctness dependency.
+
+``RESTORE_FAULT_SCHEDULES`` scales the sweep (default 40 here; the CI
+``faults`` job shards seed offsets so the matrix covers >= 200).
+"""
+import os
+import tempfile
+
+import pytest
+
+from _service_util import fresh_driver, results_identical, run_mix
+from repro.core.repository import Repository
+from repro.core.restore import ReStore
+from repro.service.faults import FaultInjector, FaultSchedule
+from repro.store.artifacts import ArtifactStore, Catalog
+from repro.workloads import pigmix
+
+N_ROWS = 512
+SWEEP_RATES = {"transient": 0.15, "latency": 0.05,
+               "truncate": 0.10, "flip": 0.10, "manifest": 0.05}
+
+
+def _n_schedules(default=40):
+    return int(os.environ.get("RESTORE_FAULT_SCHEDULES", default))
+
+
+def _seed_base():
+    return int(os.environ.get("RESTORE_FAULT_SEED_BASE", 0))
+
+
+# ------------------------------------------------------------------ sweep
+
+
+def test_fault_sweep_bit_identical_and_no_permanent_failure():
+    baseline = run_mix(fresh_driver(n_rows=N_ROWS))
+    n = _n_schedules()
+    base = _seed_base()
+    total_injected = 0
+    total_quarantined = 0
+    bad = []
+    for seed in range(base, base + n):
+        inj = FaultInjector(FaultSchedule(seed, rates=SWEEP_RATES,
+                                          max_faults=6),
+                            latency_s=0.001)
+        with tempfile.TemporaryDirectory() as root:
+            drv = fresh_driver(root=root, n_rows=N_ROWS, injector=inj)
+            try:
+                got = run_mix(drv)          # must never raise
+                drv.store.flush()
+            except BaseException as e:      # noqa: BLE001 - report seed
+                bad.append((seed, repr(e)))
+                continue
+            if not results_identical(baseline, got):
+                bad.append((seed, "result mismatch"))
+            total_quarantined += drv.store.stats["quarantined"]
+        total_injected += inj.total_injected()
+    assert not bad, f"failing seeds: {bad[:5]} ({len(bad)}/{n})"
+    # a sweep that never fired a fault proves nothing
+    assert total_injected > 0, "no faults injected across the sweep"
+
+
+def test_schedule_is_deterministic():
+    a = FaultSchedule(7, rates=SWEEP_RATES, max_faults=100)
+    b = FaultSchedule(7, rates=SWEEP_RATES, max_faults=100)
+    draws_a = [a.draw("read") for _ in range(200)]
+    draws_b = [b.draw("read") for _ in range(200)]
+    assert draws_a == draws_b
+    assert any(k is not None for k in draws_a)
+
+
+def test_injector_respects_fault_budget():
+    inj = FaultInjector(FaultSchedule(3, rates={"transient": 1.0},
+                                      max_faults=2))
+    fired = 0
+    for _ in range(10):
+        try:
+            inj.on("read", "x")
+        except OSError:
+            fired += 1
+    assert fired == 2 and inj.total_injected() == 2
+
+
+# ------------------------------------------------- targeted degradation
+
+
+def _corrupt_every_artifact(root):
+    """Flip one byte in every published .npz under ``root``."""
+    n = 0
+    for d in os.listdir(root):
+        path = os.path.join(root, d)
+        if not os.path.isdir(path) or d.startswith((".", "_")):
+            continue
+        for fn in os.listdir(path):
+            if fn.endswith(".npz"):
+                fp = os.path.join(path, fn)
+                with open(fp, "r+b") as f:
+                    b = f.read(1)
+                    f.seek(0)
+                    f.write(bytes([b[0] ^ 0xFF]))
+                n += 1
+                break
+    return n
+
+
+def test_corrupted_artifacts_quarantined_with_cold_fallback(tmp_path):
+    baseline = run_mix(fresh_driver(n_rows=N_ROWS))
+    root = str(tmp_path / "store")
+    drv = fresh_driver(root=root, n_rows=N_ROWS)
+    run_mix(drv)
+    drv.store.flush()
+    assert _corrupt_every_artifact(root) > 0
+    # reopen: fresh store instance (cold caches) over the damaged root,
+    # same repository -> every reuse attempt hits a checksum failure
+    store2 = ArtifactStore(root=root)
+    cat2 = Catalog(store2)
+    pigmix.register_all(cat2, n_rows=N_ROWS, seed=0)
+    drv2 = ReStore(cat2, store2, drv.repo)
+    got = run_mix(drv2)
+    assert results_identical(baseline, got), \
+        "cold fallback must reproduce the fault-free answer"
+    assert store2.stats["quarantined"] >= 1
+    # quarantined artifacts are gone from disk and from the repository
+    for e in drv2.repo.entries:
+        assert store2.exists(e.artifact)
+
+
+def test_degraded_runs_surface_in_report(tmp_path):
+    root = str(tmp_path / "store")
+    drv = fresh_driver(root=root, n_rows=N_ROWS)
+    results, _ = drv.run_plan(pigmix.L3("sum"))
+    drv.store.flush()
+    assert _corrupt_every_artifact(root) > 0
+    store2 = ArtifactStore(root=root)
+    cat2 = Catalog(store2)
+    pigmix.register_all(cat2, n_rows=N_ROWS, seed=0)
+    drv2 = ReStore(cat2, store2, drv.repo)
+    _, rep = drv2.run_plan(pigmix.L3("sum"))
+    assert rep.degraded >= 1
+
+
+def test_manifest_corruption_reaped_on_open(tmp_path):
+    root = str(tmp_path / "store")
+    drv = fresh_driver(root=root, n_rows=N_ROWS)
+    drv.run_plan(pigmix.L2())
+    drv.store.flush()
+    dirs = [d for d in os.listdir(root)
+            if os.path.isdir(os.path.join(root, d))
+            and not d.startswith((".", "_"))]
+    victim = os.path.join(root, sorted(dirs)[0], "manifest.json")
+    with open(victim, "w") as f:
+        f.write("{ not json")
+    store2 = ArtifactStore(root=root)
+    assert store2.stats["corrupt_on_open"] == 1
+    assert not os.path.exists(os.path.dirname(victim)), \
+        "corrupt artifact dir must be removed at open"
+
+
+def test_transient_read_errors_are_retried(tmp_path):
+    root = str(tmp_path / "store")
+    drv = fresh_driver(root=root, n_rows=N_ROWS)
+    results, _ = drv.run_plan(pigmix.L2())
+    drv.store.flush()
+    names = [e.artifact for e in drv.repo.entries]
+    assert names
+    inj = FaultInjector(FaultSchedule(0, rates={"transient": 1.0},
+                                      max_faults=3))
+    store2 = ArtifactStore(root=root, fault_injector=inj)
+    t = store2.get(names[0])            # 3 injected failures, then clean
+    assert t is not None
+    assert store2.stats["read_retries"] == 3
+
+
+def test_transient_reads_exhaust_to_transient_error(tmp_path):
+    from repro.store.artifacts import TransientStoreError
+    root = str(tmp_path / "store")
+    drv = fresh_driver(root=root, n_rows=N_ROWS)
+    drv.run_plan(pigmix.L2())
+    drv.store.flush()
+    name = drv.repo.entries[0].artifact
+    inj = FaultInjector(FaultSchedule(0, rates={"transient": 1.0},
+                                      max_faults=10**6))
+    store2 = ArtifactStore(root=root, fault_injector=inj)
+    with pytest.raises(TransientStoreError):
+        store2.get(name)
+
+
+def test_simulated_crash_in_flusher_reports_at_flush(tmp_path):
+    """A SimulatedCrash killing a write-behind flush is a permanent
+    failure: flush() raises, the artifact is de-advertised, and its
+    orphaned tmp dir is reaped on the next open."""
+    from repro.store.artifacts import ArtifactFlushError
+    root = str(tmp_path / "store")
+    inj = FaultInjector(FaultSchedule(0, rates={}, max_faults=1))
+    store = ArtifactStore(root=root, fault_injector=inj)
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=N_ROWS)
+    drv = ReStore(cat, store, Repository())
+    inj.arm("publish")
+    _, rep = drv.run_plan(pigmix.L2())
+    flush_failed = bool(rep.flush_failures)
+    if not flush_failed:                # crash hit a later artifact
+        with pytest.raises(ArtifactFlushError):
+            store.flush()
+    assert any(d.startswith(".tmp-") for d in os.listdir(root)), \
+        "a crash mid-publish leaves its tmp dir, like a real kill"
+    store2 = ArtifactStore(root=root, tmp_gc_age_s=0)
+    assert not any(d.startswith(".tmp-") for d in os.listdir(root))
+    assert store2.stats["tmp_gc"] >= 1

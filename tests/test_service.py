@@ -1,0 +1,350 @@
+"""Concurrent ReStore service: worker pool, singleflight, fairness,
+backpressure, retries, deadlines, shutdown (DESIGN.md §13)."""
+import threading
+import time
+
+import pytest
+
+from _service_util import identical, results_identical, run_mix
+from repro.core.repository import Repository
+from repro.service.journal import RepositoryJournal
+from repro.service.service import (ReStoreService, ServiceClosed,
+                                   ServiceOverloaded, ServiceTimeout)
+from repro.store.artifacts import (ArtifactStore, Catalog,
+                                   TransientStoreError)
+from repro.workloads import pigmix
+
+N_ROWS = 512
+
+
+def _service(tmp_path=None, **kw):
+    store = ArtifactStore(root=None if tmp_path is None
+                          else str(tmp_path / "store"))
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=N_ROWS)
+    kw.setdefault("n_workers", 2)
+    return ReStoreService(cat, store, Repository(), **kw)
+
+
+def _gate(svc):
+    """Make every worker block inside run_plan until released —
+    deterministic queue-buildup for the scheduling tests."""
+    ev = threading.Event()
+    for drv in svc._drivers:
+        orig = drv.run_plan
+
+        def wrapped(plan, _orig=orig):
+            ev.wait(30)
+            return _orig(plan)
+
+        drv.run_plan = wrapped
+    return ev
+
+
+def _distinct_plans():
+    return [pigmix.L2(), pigmix.L3("sum"), pigmix.L3("mean"),
+            pigmix.L4(), pigmix.L5()]
+
+
+def _wait(pred, timeout=10.0):
+    deadline = time.time() + timeout
+    while not pred():
+        assert time.time() < deadline, "condition never became true"
+        time.sleep(0.002)
+
+
+# -------------------------------------------------------------- correctness
+
+
+def test_concurrent_results_match_serial_baseline():
+    from _service_util import fresh_driver
+    baseline = run_mix(fresh_driver(n_rows=N_ROWS))
+    svc = _service(n_workers=4)
+    try:
+        tickets = [(label, svc.submit(qfn(), tenant=f"t{i % 2}"))
+                   for i, (label, qfn) in enumerate(
+                       [("L3_sum", lambda: pigmix.L3("sum")),
+                        ("L2", pigmix.L2),
+                        ("L3_mean", lambda: pigmix.L3("mean"))])]
+        got = {}
+        for label, t in tickets:
+            results, report = t.result(timeout=120)
+            for sink, table in results.items():
+                got[f"{label}:{sink}"] = table
+        assert results_identical(baseline, got)
+        st = svc.stats()
+        assert st["dup_executions"] == 0
+        assert st["completed"] == 3 and st["failed"] == 0
+    finally:
+        svc.stop()
+
+
+def test_shared_repository_gives_cross_tenant_reuse():
+    svc = _service(n_workers=2)
+    try:
+        svc.run(pigmix.L3("sum"), tenant="alice", timeout=120)
+        _, rep = svc.run(pigmix.L3("mean"), tenant="bob", timeout=120)
+        assert not rep.jobs[0].executed, \
+            "bob must reuse alice's join sub-job"
+    finally:
+        svc.stop()
+
+
+# ------------------------------------------------------------- singleflight
+
+
+def test_singleflight_computes_once_and_shares_results():
+    svc = _service(n_workers=1)
+    gate = _gate(svc)
+    try:
+        tickets = [svc.submit(pigmix.L3("sum"), tenant=f"t{i}")
+                   for i in range(5)]
+        gate.set()
+        outs = [t.result(timeout=120) for t in tickets]
+        st = svc.stats()
+        assert st["singleflight_hits"] == 4
+        assert st["dup_executions"] == 0
+        assert st["completed"] == 5
+        r0 = outs[0][0]
+        for results, _ in outs[1:]:
+            assert sorted(results) == sorted(r0)
+            for k in r0:
+                assert identical(r0[k], results[k])
+    finally:
+        svc.stop()
+
+
+def test_singleflight_disabled_executes_each_submit():
+    svc = _service(n_workers=1, singleflight=False)
+    gate = _gate(svc)
+    try:
+        tickets = [svc.submit(pigmix.L2(), tenant="t") for _ in range(3)]
+        gate.set()
+        for t in tickets:
+            t.result(timeout=120)
+        assert svc.stats()["singleflight_hits"] == 0
+        assert svc.stats()["completed"] == 3
+    finally:
+        svc.stop()
+
+
+# ------------------------------------------------------------- backpressure
+
+
+def test_backpressure_rejects_nonblocking_when_full():
+    svc = _service(n_workers=1, max_queue=2)
+    gate = _gate(svc)
+    try:
+        plans = _distinct_plans()
+        svc.submit(plans[0], tenant="t")
+        _wait(lambda: svc.stats()["executing"] == 1)
+        svc.submit(plans[1], tenant="t")
+        svc.submit(plans[2], tenant="t")
+        with pytest.raises(ServiceOverloaded):
+            svc.submit(plans[3], tenant="t", block=False)
+        with pytest.raises(ServiceOverloaded):
+            svc.submit(plans[4], tenant="t", timeout=0.05)
+        assert svc.stats()["rejected"] == 2
+        gate.set()
+    finally:
+        svc.stop()
+
+
+def test_blocking_submit_proceeds_when_space_frees():
+    svc = _service(n_workers=1, max_queue=1)
+    gate = _gate(svc)
+    try:
+        plans = _distinct_plans()
+        svc.submit(plans[0], tenant="t")
+        _wait(lambda: svc.stats()["executing"] == 1)
+        svc.submit(plans[1], tenant="t")      # queue now full
+        release = threading.Timer(0.05, gate.set)
+        release.start()
+        t = svc.submit(plans[2], tenant="t", timeout=30)  # blocks, then ok
+        t.result(timeout=120)
+        release.join()
+    finally:
+        svc.stop()
+
+
+# ----------------------------------------------------------------- fairness
+
+
+def test_round_robin_prevents_tenant_starvation():
+    svc = _service(n_workers=1)
+    gate = _gate(svc)
+    order = []
+    for drv in svc._drivers:
+        orig = drv.run_plan
+
+        def wrapped(plan, _orig=orig):
+            order.append(plan.sinks[0].params["name"])
+            return _orig(plan)
+
+        drv.run_plan = wrapped
+    try:
+        plans = _distinct_plans()
+        first = svc.submit(plans[0], tenant="chatty")
+        _wait(lambda: svc.stats()["executing"] == 1)
+        for p in plans[1:]:
+            svc.submit(p, tenant="chatty")
+        quiet = svc.submit(pigmix.L6(), tenant="quiet")
+        gate.set()
+        quiet.result(timeout=120)
+        first.result(timeout=120)
+        svc.stop()                       # drain the rest
+        chatty_last = max(i for i, s in enumerate(order)
+                          if s != "L6_out")
+        assert order.index("L6_out") < chatty_last, \
+            f"quiet tenant starved: {order}"
+    finally:
+        svc.stop()
+
+
+# --------------------------------------------------------- retry / deadline
+
+
+def test_transient_errors_requeue_with_backoff():
+    svc = _service(n_workers=1, max_attempts=3, retry_base_s=0.001)
+    calls = {"n": 0}
+    drv = svc._drivers[0]
+    orig = drv.run_plan
+
+    def flaky(plan):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise TransientStoreError("art/x", "injected transient")
+        return orig(plan)
+
+    drv.run_plan = flaky
+    try:
+        results, _ = svc.run(pigmix.L2(), timeout=120)
+        assert "L2_out" in results
+        st = svc.stats()
+        assert st["retries"] == 2 and calls["n"] == 3
+        assert st["completed"] == 1 and st["failed"] == 0
+    finally:
+        svc.stop()
+
+
+def test_transient_errors_exhaust_to_failure():
+    svc = _service(n_workers=1, max_attempts=2, retry_base_s=0.001)
+
+    def always_fail(plan):
+        raise TransientStoreError("art/x", "injected transient")
+
+    svc._drivers[0].run_plan = always_fail
+    try:
+        with pytest.raises(TransientStoreError):
+            svc.run(pigmix.L2(), timeout=120)
+        st = svc.stats()
+        assert st["failed"] == 1 and st["retries"] == 1
+    finally:
+        svc.stop()
+
+
+def test_deadline_exceeded_fails_at_pickup():
+    svc = _service(n_workers=1)
+    gate = _gate(svc)
+    try:
+        blocker = svc.submit(pigmix.L2(), tenant="t")
+        _wait(lambda: svc.stats()["executing"] == 1)
+        doomed = svc.submit(pigmix.L4(), tenant="t", deadline_s=0.01)
+        time.sleep(0.05)
+        gate.set()
+        with pytest.raises(ServiceTimeout):
+            doomed.result(timeout=120)
+        blocker.result(timeout=120)
+        assert svc.stats()["timeouts"] == 1
+    finally:
+        svc.stop()
+
+
+# ----------------------------------------------------------------- shutdown
+
+
+def test_stop_drain_finishes_queued_work():
+    svc = _service(n_workers=2)
+    tickets = [svc.submit(p, tenant="t") for p in _distinct_plans()]
+    svc.stop(drain=True)
+    for t in tickets:
+        t.result(timeout=1)              # already resolved
+    assert svc.stats()["completed"] == len(tickets)
+    with pytest.raises(ServiceClosed):
+        svc.submit(pigmix.L2())
+
+
+def test_stop_nondrain_fails_queued_tickets():
+    svc = _service(n_workers=1)
+    gate = _gate(svc)
+    running = svc.submit(pigmix.L2(), tenant="t")
+    _wait(lambda: svc.stats()["executing"] == 1)
+    queued = svc.submit(pigmix.L4(), tenant="t")
+    stopper = threading.Thread(target=svc.stop,
+                               kwargs={"drain": False})
+    stopper.start()
+    time.sleep(0.05)
+    gate.set()
+    stopper.join(timeout=60)
+    assert not stopper.is_alive()
+    running.result(timeout=1)
+    with pytest.raises(ServiceClosed):
+        queued.result(timeout=1)
+
+
+# ------------------------------------------------- journal + maintenance
+
+
+def test_service_with_journal_recovers_for_reuse(tmp_path):
+    root = str(tmp_path / "store")
+    store = ArtifactStore(root=root)
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=N_ROWS)
+    svc = ReStoreService(cat, store, Repository(), n_workers=2,
+                         journal=RepositoryJournal(root))
+    svc.run(pigmix.L3("sum"), tenant="a", timeout=120)
+    svc.run(pigmix.L2(), tenant="b", timeout=120)
+    n_entries = len(svc.repo)
+    svc.stop()
+    assert n_entries > 0
+
+    # new process: reopen everything from disk
+    store2 = ArtifactStore(root=root)
+    cat2 = Catalog(store2)
+    pigmix.register_all(cat2, n_rows=N_ROWS)
+    repo2, journal2 = RepositoryJournal.recover(store2)
+    assert journal2.recovered_entries == n_entries
+    assert journal2.reconciled_drops == 0
+    svc2 = ReStoreService(cat2, store2, repo2, n_workers=2,
+                          journal=journal2)
+    try:
+        _, rep = svc2.run(pigmix.L3("sum"), tenant="a", timeout=120)
+        assert rep.n_executed == 0, "full reuse after recovery"
+    finally:
+        svc2.stop()
+
+
+def test_maintain_now_runs_and_returns_counters(tmp_path):
+    svc = _service(tmp_path, n_workers=1)
+    try:
+        svc.run(pigmix.L3("sum"), timeout=120)
+        out = svc.maintain_now()
+        assert isinstance(out, dict)
+    finally:
+        svc.stop()
+
+
+def test_stats_shape():
+    svc = _service(n_workers=1)
+    try:
+        svc.run(pigmix.L2(), tenant="t0", timeout=120)
+        st = svc.stats()
+        for k in ("submitted", "completed", "failed", "rejected",
+                  "retries", "timeouts", "singleflight_hits",
+                  "dup_executions", "degraded", "flush_failures",
+                  "queued", "executing", "per_tenant", "store",
+                  "quarantined"):
+            assert k in st
+        assert st["per_tenant"]["t0"]["completed"] == 1
+    finally:
+        svc.stop()

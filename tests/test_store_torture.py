@@ -1,0 +1,185 @@
+"""Concurrent artifact-store torture + write-behind failure reporting
+(DESIGN.md §13 satellites).
+
+The torture test hammers ONE shared ArtifactStore (device cache and
+write-behind enabled) from many threads with put/get/delete/alias/
+flush/gc and asserts the two invariants torn state would break: every
+successful ``get`` returns an internally-consistent table (version tag
+and checksum column agree), and the store reopened from disk afterwards
+verifies clean.
+"""
+import os
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.dataflow.table import Table
+from repro.store.artifacts import (ArtifactFlushError, ArtifactMissingError,
+                                   ArtifactStore, CorruptArtifactError)
+
+N_THREADS = 6
+OPS_PER_THREAD = 60
+NAMES = [f"art/t{i}" for i in range(8)]
+
+
+def _tagged_table(tag: int, n=256):
+    # "check" is derived from "v": a torn read (rows from two versions)
+    # breaks the equality below
+    v = np.full(n, tag, dtype=np.int32)
+    return Table.from_numpy({"v": v, "check": v * 2 + 1})
+
+
+def _consistent(t):
+    d = t.to_numpy()
+    v = d["v"]
+    return (v == v[0]).all() and (d["check"] == v * 2 + 1).all()
+
+
+def test_concurrent_store_torture(tmp_path):
+    store = ArtifactStore(root=str(tmp_path / "store"))
+    errors = []
+    inconsistent = []
+
+    def worker(wid):
+        rng = random.Random(1000 + wid)
+        try:
+            for op in range(OPS_PER_THREAD):
+                name = rng.choice(NAMES)
+                r = rng.random()
+                if r < 0.40:
+                    store.put(name, _tagged_table(wid * 1000 + op))
+                elif r < 0.80:
+                    try:
+                        t = store.get(name)
+                    except (ArtifactMissingError, KeyError):
+                        continue
+                    if not _consistent(t):
+                        inconsistent.append(name)
+                elif r < 0.90:
+                    store.delete(name)
+                elif r < 0.95:
+                    store.alias(f"alias/{wid}", name)
+                else:
+                    try:
+                        store.flush()
+                    except ArtifactFlushError as e:
+                        errors.append(repr(e))
+        except BaseException as e:      # noqa: BLE001 - surface in main
+            errors.append(f"worker {wid}: {e!r}")
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "torture worker deadlocked"
+    assert not errors, errors[:3]
+    assert not inconsistent, f"torn reads observed: {inconsistent[:3]}"
+    store.flush()
+
+    # survivors are readable and internally consistent
+    for name in list(store.names()):
+        t = store.get(name)
+        assert _consistent(t)
+        assert store.verify(name)
+
+    # disk state reopens clean: no tmp dirs, no corrupt manifests,
+    # every artifact verifies against its checksums
+    store2 = ArtifactStore(root=store.root, tmp_gc_age_s=0)
+    assert store2.stats["corrupt_on_open"] == 0
+    assert not any(d.startswith(".tmp-")
+                   for d in os.listdir(store.root))
+    for name in store2.names():
+        assert store2.verify(name), f"{name} fails checksum after reopen"
+        assert _consistent(store2.get(name))
+
+
+# ----------------------------------------------- write-behind failures
+
+
+def test_flush_failure_is_recorded_and_raised(tmp_path, monkeypatch):
+    """Satellite (a): a failed background write must never vanish —
+    it is recorded per artifact, the artifact is de-advertised, and
+    ``flush()`` (the durability barrier) raises."""
+    store = ArtifactStore(root=str(tmp_path / "store"))
+    import repro.store.artifacts as A
+    real_savez = np.savez
+    monkeypatch.setattr(A.np, "savez",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            OSError("disk on fire")))
+    store.put("art/doomed", _tagged_table(1))
+    with pytest.raises(ArtifactFlushError) as ei:
+        store.flush()
+    assert "art/doomed" in ei.value.failures
+    assert isinstance(ei.value, OSError), "pre-§13 catch still works"
+    assert not store.exists("art/doomed"), \
+        "a failed write must de-advertise the artifact"
+    assert store.stats["write_retries"] > 0, "OSError path is retried"
+
+    # the failure does not wedge the store: subsequent writes succeed
+    monkeypatch.setattr(A.np, "savez", real_savez)
+    store.put("art/fine", _tagged_table(2))
+    store.flush()                        # failures were drained: no raise
+    assert store.exists("art/fine")
+    store.close()
+
+
+def test_flush_failure_counts_per_artifact(tmp_path, monkeypatch):
+    store = ArtifactStore(root=str(tmp_path / "store"))
+    import repro.store.artifacts as A
+    monkeypatch.setattr(A.np, "savez",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            OSError("nope")))
+    store.put("art/a", _tagged_table(1))
+    store.put("art/b", _tagged_table(2))
+    with pytest.raises(ArtifactFlushError) as ei:
+        store.flush()
+    assert set(ei.value.failures) == {"art/a", "art/b"}
+
+
+# ------------------------------------------------------- tmp-dir GC
+
+
+def test_tmp_gc_age_guard(tmp_path):
+    root = str(tmp_path / "store")
+    os.makedirs(root)
+    fresh = os.path.join(root, ".tmp-fresh")
+    stale = os.path.join(root, ".tmp-stale")
+    os.makedirs(fresh)
+    os.makedirs(stale)
+    old = time.time() - 48 * 3600
+    os.utime(stale, (old, old))
+
+    # default age guard: a fresh tmp dir may belong to a LIVE writer in
+    # another process — only the stale one is reaped
+    store = ArtifactStore(root=root)
+    assert not os.path.exists(stale)
+    assert os.path.exists(fresh)
+    assert store.stats["tmp_gc"] == 1
+
+    # age 0 (we KNOW no writer survived, e.g. post-crash recovery)
+    store2 = ArtifactStore(root=root, tmp_gc_age_s=0)
+    assert not os.path.exists(fresh)
+    assert store2.stats["tmp_gc"] == 1
+
+
+def test_corrupt_artifact_error_from_verify_path(tmp_path):
+    store = ArtifactStore(root=str(tmp_path / "store"))
+    store.put("art/x", _tagged_table(3))
+    store.flush()
+    from repro.store.artifacts import _encode_name
+    d = os.path.join(store.root, _encode_name("art/x"))
+    npz = [f for f in os.listdir(d) if f.endswith(".npz")][0]
+    p = os.path.join(d, npz)
+    with open(p, "r+b") as f:
+        b = f.read(1)
+        f.seek(0)
+        f.write(bytes([b[0] ^ 0xFF]))
+    assert not store.verify("art/x")
+    store2 = ArtifactStore(root=store.root)
+    with pytest.raises(CorruptArtifactError):
+        store2.get("art/x")

@@ -22,7 +22,11 @@ exempt):
     delta refresh at least ``MIN_DELTA_SPEEDUP``x faster than
     delete-and-recompute for the groupby and join templates (ISSUE 5);
     every sweep point of every entry (any size) must also record
-    ``identical: true`` — a refresh that is fast but wrong gates red.
+    ``identical: true`` — a refresh that is fast but wrong gates red;
+  * ``service_runs`` — 4-worker goodput at least ``MIN_SERVICE_SCALING``x
+    the 1-worker goodput at full size (ISSUE 6); every entry of ANY
+    size must record ``dup_executions == 0`` (the singleflight
+    invariant) and at least one singleflight hit.
 
 Usage: python tools/check_bench.py [path]   (exit 0 = all checks pass)
 """
@@ -38,9 +42,11 @@ DEFAULT_PATH = os.path.join(ROOT, "BENCH_core.json")
 MAX_REGRESSION = float(os.environ.get("CHECK_BENCH_MAX_REGRESSION", 0.20))
 MIN_COPART_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_COPART", 2.0))
 MIN_DELTA_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_DELTA", 3.0))
+MIN_SERVICE_SCALING = float(os.environ.get("CHECK_BENCH_MIN_SERVICE", 1.5))
 DELTA_FLOOR_MAX_FRAC = 0.10      # the ISSUE 5 "≤10% append" regime
 DELTA_FLOOR_TEMPLATES = ("groupby", "join")
 FLOOR_MIN_ROWS = 1 << 16         # full-size entries only
+SERVICE_FLOOR_MIN_ROWS = 1 << 15  # the service bench's full size
 
 # run-list name -> (required fields, headline metric fn or None)
 
@@ -66,6 +72,10 @@ SCHEMAS = {
                    "speedup_copart_vs_blind", "shuffles_skipped"),
                   lambda r: r["speedup_copart_vs_blind"]),
     "delta_runs": (("label", "n_rows", "sweep"), _delta_headline),
+    "service_runs": (("label", "n_rows", "n_events", "worker_sweep",
+                      "goodput_scaling_4w_vs_1w", "singleflight_hits",
+                      "dup_executions"),
+                     lambda r: r["goodput_scaling_4w_vs_1w"]),
 }
 
 
@@ -145,6 +155,29 @@ def check(path: str) -> int:
                             f"{pt['template']}@{pt['frac']}: refresh "
                             f"speedup {pt['speedup']:.2f} below the "
                             f"{MIN_DELTA_SPEEDUP:.1f}x floor "
+                            f"({rec['n_rows']} rows)")
+
+        # acceptance floors for concurrent-service entries (ISSUE 6)
+        if list_name == "service_runs":
+            for rec in entries:
+                n_checked += 1
+                if rec["dup_executions"] != 0:
+                    errors.append(
+                        f"service_runs label={rec['label']!r}: "
+                        f"{rec['dup_executions']} duplicate executions "
+                        f"(singleflight invariant is == 0)")
+                if rec["singleflight_hits"] < 1:
+                    errors.append(
+                        f"service_runs label={rec['label']!r}: no "
+                        f"singleflight hits recorded (stampede phase "
+                        f"did not run)")
+                if rec["n_rows"] >= SERVICE_FLOOR_MIN_ROWS:
+                    s = rec["goodput_scaling_4w_vs_1w"]
+                    if s < MIN_SERVICE_SCALING:
+                        errors.append(
+                            f"service_runs label={rec['label']!r}: "
+                            f"4w/1w goodput scaling {s:.2f} below the "
+                            f"{MIN_SERVICE_SCALING:.1f}x floor "
                             f"({rec['n_rows']} rows)")
 
     if errors:
