@@ -19,7 +19,12 @@ def main():
     store = ArtifactStore()
     catalog = Catalog(store)
     catalog.register("corpus", synthetic_corpus(512, 128, 8192))
-    restore = ReStore(catalog, store, heuristic="aggressive")
+    # min_splice_benefit_s=0: the walkthrough pins prefix-reuse
+    # MECHANICS at toy scale, where the production default would
+    # (correctly) decline the streaming tokenize+filter splice as not
+    # worth its IO (DESIGN.md §14)
+    restore = ReStore(catalog, store, heuristic="aggressive",
+                      min_splice_benefit_s=0.0)
 
     print("=== run A: quality > 0.3 ===")
     _, repA = restore.run_plan(pipeline_plan(0.3, out_name="corpusA"))

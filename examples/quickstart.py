@@ -25,7 +25,12 @@ def main():
     store = ArtifactStore()
     catalog = Catalog(store)
     pigmix.register_all(catalog, n_rows=1 << 14)
-    restore = ReStore(catalog, store, heuristic="aggressive")
+    # min_splice_benefit_s=0: this walkthrough demonstrates the paper's
+    # splice MECHANICS at toy scale, where the production default would
+    # (correctly) decline the Q3 streaming splice as not worth its IO
+    # (DESIGN.md §14)
+    restore = ReStore(catalog, store, heuristic="aggressive",
+                      min_splice_benefit_s=0.0)
 
     print("=== Q1: join page_views x users (paper Fig 2) ===")
     # exactly the paper's Q1: project both sources, join on user==name

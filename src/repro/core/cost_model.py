@@ -39,6 +39,13 @@ import dataclasses
 import time
 from typing import Dict, Optional
 
+# Operator kinds that stream: one pass, output rows a subset/projection
+# of input rows, no exchange and no state across rows.  A matched region
+# made only of these re-derives its value at memory bandwidth, so an
+# exact splice saves IO bytes at most (see CostModel.should_splice).
+STREAMING_KINDS = frozenset(
+    {"LOAD", "STORE", "SPLIT", "FILTER", "PROJECT", "FOREACH", "UNION"})
+
 
 @dataclasses.dataclass
 class OpStats:
@@ -60,7 +67,8 @@ class CostModel:
                  ewma_alpha: float = 0.5,
                  reuse_halflife_s: float = 1800.0,
                  prior_uses: float = 0.5,
-                 max_expected_uses: float = 64.0):
+                 max_expected_uses: float = 64.0,
+                 min_splice_benefit_s: float = 0.0):
         self.load_bw = load_bandwidth_bytes_s
         self.store_bw = store_bandwidth_bytes_s
         self.shuffle_bw = shuffle_bandwidth_bytes_s
@@ -69,6 +77,7 @@ class CostModel:
         self.halflife_s = reuse_halflife_s
         self.prior_uses = prior_uses
         self.max_expected_uses = max_expected_uses
+        self.min_splice_benefit_s = min_splice_benefit_s
         self.op_stats: Dict[str, OpStats] = {}
 
     # ------------------------------------------------------------- IO price
@@ -153,6 +162,35 @@ class CostModel:
     def savings_per_reuse_s(self, producer_cost_s: float,
                             nbytes: int) -> float:
         return producer_cost_s - self.load_cost_s(nbytes)
+
+    def splice_benefit_s(self, bytes_in: int, bytes_out: int) -> float:
+        """Predicted benefit of answering a *streaming* matched region
+        from its artifact: such a region re-derives its value in one
+        pass over bytes the query loads anyway, so the only real saving
+        is the byte diet — reading the (smaller) artifact instead of
+        the (larger) region inputs."""
+        return self.load_cost_s(bytes_in) - self.load_cost_s(bytes_out)
+
+    def should_splice(self, entry) -> bool:
+        """Exact-splice admission (the L7 guard): decline splices whose
+        predicted benefit cannot clear the splice overhead
+        ``min_splice_benefit_s`` (re-trace of the rewritten plan plus
+        an artifact read where the input may sit in the page cache —
+        the measured L7 0.6x regression).  Scope is deliberately
+        narrow: only regions made entirely of streaming operators — a
+        blocking region (JOIN/GROUPBY/DISTINCT/COGROUP) amortizes
+        super-linear recompute and always splices — and only with
+        bytes evidence on the entry; absent either, the paper's
+        always-reuse rule stands.  Inert at the default threshold 0."""
+        if self.min_splice_benefit_s <= 0.0:
+            return True
+        kinds = {op.kind for op in entry.plan.topo()}
+        if not kinds <= STREAMING_KINDS:
+            return True
+        if entry.bytes_in <= 0 or entry.bytes_out <= 0:
+            return True
+        return (self.splice_benefit_s(entry.bytes_in, entry.bytes_out)
+                >= self.min_splice_benefit_s)
 
     def expected_future_uses(self, past_uses: float, ref_time: float,
                              now: Optional[float] = None) -> float:

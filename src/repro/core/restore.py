@@ -81,10 +81,20 @@ class ReStore:
                  measure_exec: bool = False,
                  repeats: int = 5,
                  mesh=None, shuffle_axis: str = "data",
-                 skew_factor: float = 4.0, partition_aware: bool = True):
+                 skew_factor: float = 4.0, partition_aware: bool = True,
+                 min_splice_benefit_s: float = 1e-3):
         self.catalog = catalog
         self.store = store
-        self.repo = repository if repository is not None else Repository()
+        if repository is not None:
+            self.repo = repository
+        else:
+            # engine-owned repository: arm the exact-splice admission
+            # guard (CostModel.should_splice) — a streaming-only region
+            # whose predicted byte-diet saving cannot clear the splice
+            # overhead recomputes instead of reusing (the L7 fix).  A
+            # caller-supplied repository keeps its own cost model as-is.
+            self.repo = Repository()
+            self.repo.cost_model.min_splice_benefit_s = min_splice_benefit_s
         self.repo.bind_store(store)
         # mesh: run every job's map->shuffle->reduce stages across a JAX
         # device mesh (DESIGN.md §11); partition_aware=False is the

@@ -148,6 +148,7 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
     # entry plans are immutable: peel each once, not once per round
     peels: Dict[int, Optional[tuple]] = {}
 
+    cm = repo.cost_model
     for _ in range(max_rewrites):
         hit: Optional[Tuple[RepositoryEntry, Operator]] = None
         index: Optional[FingerprintIndex] = None
@@ -156,6 +157,8 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
             for entry in repo.ordered():
                 anchor = pairwise_plan_traversal(plan, entry.plan)
                 if anchor is not None and anchor.kind not in ("LOAD", "STORE"):
+                    if not cm.should_splice(entry):
+                        continue       # L7 guard: benefit below overhead
                     hit = (entry, anchor)
                     break
         else:
@@ -165,9 +168,10 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
                 # Merkle pass over the entry plan
                 anchor = index.probe_fp(entry.signature)
                 if anchor is not None:
+                    if not cm.should_splice(entry):
+                        continue       # L7 guard: benefit below overhead
                     hit = (entry, anchor)
                     break
-        cm = repo.cost_model
         if hit is not None:
             entry, anchor = hit
             new_load = load(entry.artifact)

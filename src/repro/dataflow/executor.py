@@ -24,6 +24,7 @@ import jax
 
 from ..core.plan import (Partitioning, load_partition_demands,
                          plan_physical_props)
+from ..kernels import autotune
 from ..store.artifacts import ArtifactStore, Catalog
 from .compiler import Job, Workflow
 from .physical import execute_plan, use_pallas
@@ -50,6 +51,9 @@ class JobStats:
     shuffle_overflow: int = 0
     shuffles: int = 0
     shuffles_skipped: int = 0
+    # 1 if the bounded-bucket / hash-reduce run lost rows and the job
+    # was rerun on the lossless configuration (DESIGN.md §14)
+    shuffle_retries: int = 0
     op_partitioning: Dict[int, dict] = dataclasses.field(default_factory=dict)
 
     @property
@@ -181,7 +185,12 @@ class Engine:
         # benchmark beats.
         self.mesh = mesh
         self.shuffle_axis = shuffle_axis
-        self.skew_factor = skew_factor
+        # the exchange's bucket skew is an autotunable knob: a smaller
+        # factor shrinks every downstream capacity (less reduce work),
+        # a larger one absorbs more key skew without the lossless retry
+        # (kernels/autotune.py; inert unless RESTORE_AUTOTUNE=1)
+        self.skew_factor = autotune.choose("exchange", 0, "row", "skew",
+                                           skew_factor)
         self.partition_aware = partition_aware
         self._jit_cache = GLOBAL_JIT_CACHE
 
@@ -212,9 +221,15 @@ class Engine:
             sp = self.store.partitioning(n) if self.partition_aware \
                 else None
             want = demands.get(n)
-            if sp is not None and want and sp["n_parts"] != n_shards:
-                # re-partition on read: one host pass now instead of a
-                # device exchange on every consumption
+            covered = (sp is not None and sp["n_parts"] == n_shards
+                       and set(sp["keys"]) <= set(want or ()))
+            if want and not covered and self.partition_aware \
+                    and self.store.exists(n):
+                # co-partition on read (M3R-style partition stability):
+                # one host pass now, cached as a derived view, instead
+                # of a device exchange on every consumption — covers
+                # monolithic artifacts and mismatched-P layouts alike.
+                # Catalog-only datasets stay on the device exchange.
                 overrides[n], sp = self.store.get_partitioned(
                     n, want, n_shards)
             dataset_parts[n] = sp
@@ -253,7 +268,8 @@ class Engine:
         except KeyError:
             return tuple(self.catalog.get(name).names)
 
-    def _jitted(self, plan, props=None, parts_key=None):
+    def _jitted(self, plan, props=None, parts_key=None,
+                skew=None, lossless=False):
         """Returns (fn, uid_by_fp, fps): the cached jitted computation,
         the CACHED plan's op-uid per fingerprint, and the current plan's
         fingerprints.  A cache hit serves a closure over the *first*
@@ -268,17 +284,19 @@ class Engine:
         # plan over a differently-partitioned artifact is a different
         # computation).  Everything else that matters is in the
         # fingerprints; input shapes are handled by jax.jit retracing.
-        key = (sig, use_pallas(), parts_key)
+        if skew is None:
+            skew = self.skew_factor
+        key = (sig, use_pallas(), parts_key, skew, lossless)
         # the closure outlives this Engine in the PROCESS-WIDE cache:
         # capture plain locals, never `self` (an Engine reference would
         # pin its catalog + store + device cache for process lifetime)
-        mesh, axis, skew = self.mesh, self.shuffle_axis, self.skew_factor
+        mesh, axis = self.mesh, self.shuffle_axis
 
         def build():
             def fn(datasets):
                 return execute_plan(plan, datasets, mesh=mesh,
                                     shuffle_axis=axis, skew_factor=skew,
-                                    props=props)
+                                    props=props, lossless=lossless)
             uid_by_fp = {fps[id(op)]: op.uid for op in plan.topo()}
             return jax.jit(fn), uid_by_fp
 
@@ -360,10 +378,45 @@ class Engine:
         ovf = sum(int(s.get("join_overflow", 0)) for s in stats.values())
         sh_ovf = sum(int(s.get("shuffle_overflow", 0))
                      for s in stats.values())
+        retries = 0
+        if sh_ovf > 0 and self.mesh is not None:
+            # lossless retry (DESIGN.md §14): the bounded buckets
+            # dropped rows or the hash reduce hit an h1 collision, so
+            # results are not trustworthy — rerun once with
+            # skew=n_shards (every bucket can hold a full source shard)
+            # and the collision-proof sort-based reduce.  The retry's
+            # wall adds to the job's; the first attempt's overflow
+            # count stays in the stats as the audit trail.
+            fn2, uid_by_fp, fps = self._jitted(
+                job.plan, props, parts_key,
+                skew=float(self.n_shards), lossless=True)
+            if self.measure_exec:       # keep compile off the clock
+                warm, _ = fn2(load_inputs())
+                jax.block_until_ready(warm)
+                del warm
+            t0 = time.perf_counter()
+            inputs = load_inputs()
+            outputs, stats = fn2(inputs)
+            outputs = jax.block_until_ready(outputs)
+            if not transient:
+                for name, t in outputs.items():
+                    self.store.put(name, t,
+                                   partitioning=out_parts.get(name))
+            wall += time.perf_counter() - t0
+            retries = 1
+            rows_out = sum(int(t.num_valid()) for t in outputs.values())
+            bytes_out = sum(t.nbytes() for t in outputs.values())
+            op_rows = {}
+            for op in job.plan.topo():
+                s = stats.get(uid_by_fp.get(fps[id(op)]))
+                if s is not None:
+                    op_rows[op.uid] = int(s["rows_out"])
+            ovf = sum(int(s.get("join_overflow", 0))
+                      for s in stats.values())
         op_cost = attribute_op_costs(job.plan, op_rows, wall)
         js = JobStats(job.job_id, wall, rows_in, bytes_in,
                       rows_out, bytes_out, op_rows, ovf, op_cost,
-                      shuffle_overflow=sh_ovf)
+                      shuffle_overflow=sh_ovf, shuffle_retries=retries)
         if props is not None:
             js.shuffles = props.n_exchanges()
             js.shuffles_skipped = props.n_skipped()

@@ -83,12 +83,23 @@ def _pad1(a: jnp.ndarray, pad: int, value) -> jnp.ndarray:
 
 
 def _sort_by_keys(t: Table, keys,
-                  hc: "HashCache | None" = None
-                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                  hc: "HashCache | None" = None,
+                  pre=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Return (order, new_seg): stable order by (h1, h2) with invalid rows
-    last, and exact segment-start mask in sorted order."""
-    h1 = jnp.where(t.valid, _key_hashes(t, keys, 0, hc), _U32_MAX)
-    h2 = jnp.where(t.valid, _key_hashes(t, keys, 101, hc), _U32_MAX)
+    last, and exact segment-start mask in sorted order.  ``pre`` is an
+    optional (h1, h2) pair of UNMASKED key hashes computed upstream —
+    the lanes a distributed exchange ships with each row (DESIGN.md
+    §14) — substituting for re-hashing the key columns here.  Validity
+    masking still happens at this use site, so zero-filled rows from
+    unhit exchange slots are parked with the invalid rows either way."""
+    if pre is not None:
+        h1u = pre[0]
+        h2u = pre[1] if len(pre) > 1 else _key_hashes(t, keys, 101, hc)
+    else:
+        h1u = _key_hashes(t, keys, 0, hc)
+        h2u = _key_hashes(t, keys, 101, hc)
+    h1 = jnp.where(t.valid, h1u, _U32_MAX)
+    h2 = jnp.where(t.valid, h2u, _U32_MAX)
     order = jnp.lexsort((h2, h1))
     sv = jnp.take(t.valid, order)
     prev = jnp.roll(order, 1)
@@ -157,6 +168,120 @@ def _segment_aggregate(t: Table, keys, aggs, order, new_seg) -> Table:
 
 
 # ---------------------------------------------------------------------------
+# Sort-free hash-segmented reduce (distributed path, DESIGN.md §14)
+#
+# XLA CPU argsort costs ~6x a plain value sort at 64k rows, and the
+# lexsort in _sort_by_keys dominates every blocking operator.  The
+# distributed reduce does not need a row ORDER, only segment ids: sort
+# the h1 VALUES (cheap), then each row's segment is the first sorted
+# position of its hash.  Exactness: every row's actual key columns are
+# verified against its segment representative; any mismatch (two
+# distinct keys sharing an h1) is COUNTED, and the engine reruns the
+# job on the lossless sort-based path — the same contract as the
+# exchange's bounded buckets and the join's probe window.
+#
+# Bit-identity with the single-device sort path: within a group all
+# rows share (h1, h2), so the stable lexsort keeps them in row-index
+# order — exactly the order segment_sum accumulates them here; group
+# representatives are the minimum-index row on both paths.
+
+
+def _hash_segments(t: Table, keys, h1u):
+    """Return (pos, out_valid, rep, collisions): per-row segment id
+    (the first sorted position of the row's masked h1, invalid rows
+    parked at cap-1), validity of each output slot (first-occurrence
+    positions among valid rows), the minimum-index representative row
+    per segment, and the count of valid rows whose keys mismatch their
+    representative (h1 collisions between distinct keys)."""
+    cap = t.capacity
+    h1m = jnp.where(t.valid, h1u, _U32_MAX)
+    s = jnp.sort(h1m)
+    pos = jnp.searchsorted(s, h1m, side="left").astype(jnp.int32)
+    # invalid rows park at cap-1; a valid row's first-occurrence
+    # position is always < n_valid <= cap-1 when any invalid row
+    # exists, so parking never mixes with a real segment
+    pos = jnp.where(t.valid, pos, cap - 1)
+    iota = jnp.arange(cap, dtype=jnp.int32)
+    n_valid = jnp.sum(t.valid.astype(jnp.int32))
+    new = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    out_valid = new & (iota < n_valid)
+    rep = jax.ops.segment_min(jnp.where(t.valid, iota, cap), pos,
+                              num_segments=cap)
+    rep = jnp.clip(rep, 0, cap - 1).astype(jnp.int32)
+    eq = cols_equal(t, iota, t, jnp.take(rep, pos), keys)
+    collisions = jnp.sum((t.valid & ~eq).astype(jnp.int32))
+    return pos, out_valid, rep, collisions
+
+
+def op_groupby_hashed(t: Table, keys, aggs, hc: "HashCache | None" = None,
+                      pre=None) -> Tuple[Table, jnp.ndarray]:
+    """Sort-free GROUPBY for the distributed reduce.  Returns (table,
+    collision count); a nonzero count means the result dropped/merged
+    groups and the caller must fall back to the sort-based path."""
+    h1u = pre[0] if pre is not None else _key_hashes(t, keys, 0, hc)
+    pos, out_valid, rep, collisions = _hash_segments(t, keys, h1u)
+    cap = t.capacity
+    sv = t.valid
+
+    cols: Dict[str, jnp.ndarray] = {}
+    for k in keys:
+        kc = jnp.take(t.col(k), rep, axis=0)
+        cols[k] = jnp.where(
+            out_valid.reshape((-1,) + (1,) * (kc.ndim - 1)), kc,
+            jnp.zeros_like(kc))
+
+    # one batched (N, k) scatter-add covers the count column and every
+    # sum/mean aggregate: segment reduction is row-bound scatter traffic
+    # (~6 ms per pass at 128k rows on host XLA), so lanes ride together
+    need_counts = any(fn in ("count", "mean") for fn, _ in aggs.values())
+    lanes, lane_names = [], []
+    if need_counts:
+        lanes.append(sv.astype(jnp.float32))
+        lane_names.append(None)
+    for out_name, (fn, cname) in aggs.items():
+        if fn in ("sum", "mean"):
+            lanes.append(jnp.where(sv, t.col(cname).astype(jnp.float32),
+                                   0.0))
+            lane_names.append(out_name)
+    if lanes:
+        summed = jax.ops.segment_sum(jnp.stack(lanes, axis=1), pos,
+                                     num_segments=cap)
+        by_lane = {n: summed[:, i] for i, n in enumerate(lane_names)}
+        counts = by_lane.get(None)
+
+    for out_name, (fn, cname) in aggs.items():
+        if fn == "count":
+            cols[out_name] = counts.astype(jnp.float32)
+            continue
+        if fn in ("sum", "mean"):
+            s = by_lane[out_name]
+            cols[out_name] = s if fn == "sum" else s / jnp.maximum(counts,
+                                                                   1.0)
+        elif fn == "min":
+            v = jnp.where(sv, t.col(cname).astype(jnp.float32), jnp.inf)
+            cols[out_name] = jax.ops.segment_min(v, pos, num_segments=cap)
+        elif fn == "max":
+            v = jnp.where(sv, t.col(cname).astype(jnp.float32), -jnp.inf)
+            cols[out_name] = jax.ops.segment_max(v, pos, num_segments=cap)
+        else:
+            raise ValueError(f"unknown aggregate {fn}")
+        cols[out_name] = jnp.where(out_valid, cols[out_name], 0.0)
+    return Table(cols, out_valid), collisions
+
+
+def op_distinct_hashed(t: Table, hc: "HashCache | None" = None,
+                       pre=None) -> Tuple[Table, jnp.ndarray]:
+    """Sort-free DISTINCT: keep each segment's minimum-index row in
+    place (no reorder).  Returns (table, collision count)."""
+    keys = t.names
+    h1u = pre[0] if pre is not None else _key_hashes(t, keys, 0, hc)
+    pos, out_valid, rep, collisions = _hash_segments(t, keys, h1u)
+    keep = t.valid & (jnp.take(rep, pos)
+                      == jnp.arange(t.capacity, dtype=jnp.int32))
+    return t.with_valid(keep), collisions
+
+
+# ---------------------------------------------------------------------------
 # Operator implementations
 
 
@@ -179,14 +304,16 @@ def op_foreach(t: Table, gens) -> Table:
     return Table(out, t.valid)
 
 
-def op_groupby(t: Table, keys, aggs, hc: "HashCache | None" = None) -> Table:
-    order, new_seg = _sort_by_keys(t, keys, hc)
+def op_groupby(t: Table, keys, aggs, hc: "HashCache | None" = None,
+               pre=None) -> Table:
+    order, new_seg = _sort_by_keys(t, keys, hc, pre=pre)
     return _segment_aggregate(t, keys, aggs, order, new_seg)
 
 
-def op_distinct(t: Table, hc: "HashCache | None" = None) -> Table:
+def op_distinct(t: Table, hc: "HashCache | None" = None,
+                pre=None) -> Table:
     keys = t.names
-    order, new_seg = _sort_by_keys(t, keys, hc)
+    order, new_seg = _sort_by_keys(t, keys, hc, pre=pre)
     return t.gather(order, new_seg)
 
 
@@ -199,17 +326,32 @@ def op_union(a: Table, b: Table) -> Table:
 
 def op_join(left: Table, right: Table, lkeys, rkeys,
             expansion: int = 1,
-            hc: "HashCache | None" = None) -> Tuple[Table, jnp.ndarray]:
+            hc: "HashCache | None" = None,
+            pre_left=None, pre_right=None) -> Tuple[Table, jnp.ndarray]:
     """Inner equi-join, sort+probe based.  Output capacity =
-    left.capacity * expansion.  Returns (table, overflow_count)."""
-    probe_w = expansion + 4  # slack for h1 ties
+    left.capacity * expansion.  ``pre_left``/``pre_right`` optionally
+    carry each side's exchange-shipped (h1,) probe-hash lane in place
+    of re-hashing the key columns (DESIGN.md §14); every match is still
+    verified against the actual key columns, and validity masks every
+    decision, so shipped hashes change nothing observable.
+    Returns (table, overflow_count)."""
+    from ..kernels import autotune
+    # window slack absorbs h1 ties among distinct right keys; every
+    # exhausted window is counted in the returned overflow, so a tuned
+    # narrower window stays auditable (the tuner rejects candidates
+    # whose measurement reports overflow)
+    probe_w = expansion + autotune.choose("join_probe", left.capacity,
+                                          "uint32", "slack", 4)
     cap_r = right.capacity
 
-    h_r = jnp.where(right.valid, _key_hashes(right, rkeys, 0, hc), _U32_MAX)
+    h_r_raw = (pre_right[0] if pre_right is not None
+               else _key_hashes(right, rkeys, 0, hc))
+    h_r = jnp.where(right.valid, h_r_raw, _U32_MAX)
     r_order = jnp.argsort(h_r, stable=True)
     h_r_sorted = jnp.take(h_r, r_order)
 
-    h_l = _key_hashes(left, lkeys, 0, hc)
+    h_l = (pre_left[0] if pre_left is not None
+           else _key_hashes(left, lkeys, 0, hc))
     if use_pallas():
         from ..kernels.hash_join.ops import probe
         # pad probe lanes to the tile multiple (extra lanes are sliced
@@ -335,7 +477,8 @@ def op_store(t: Table) -> Table:
 
 def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table],
                  mesh=None, shuffle_axis: str = "data",
-                 skew_factor: float = 4.0, props=None):
+                 skew_factor: float = 4.0, props=None,
+                 lossless: bool = False):
     """Evaluate a physical plan.  Returns (outputs, stats):
     outputs: store-name -> output Table (uncompacted; the artifact
     store compacts host-side on its write path);
@@ -346,10 +489,17 @@ def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table],
     map->shuffle->reduce path of ``dataflow/shuffle.py`` across the
     ``shuffle_axis`` devices; ``props`` (a ``core.plan.PlanProps``, same
     plan object) marks which exchanges are skipped because the input is
-    already co-partitioned (DESIGN.md §11)."""
+    already co-partitioned (DESIGN.md §11).  ``lossless=True`` is the
+    engine's overflow-retry configuration: callers pair it with
+    ``skew_factor >= n_shards`` (lossless buckets) and it selects the
+    collision-proof sort-based reduce over the hash-segmented one."""
     values: Dict[int, Table] = {}
     outputs: Dict[str, Table] = {}
     stats: Dict[int, Dict[str, jnp.ndarray]] = {}
+    # table id -> (key column names, row-aligned h1 lane): shipped hash
+    # lanes that survive an op (a join's left exchange) and can seed a
+    # downstream co-partitioned GROUPBY's reduce (DESIGN.md §14)
+    pres: Dict[int, Tuple[Tuple[str, ...], jnp.ndarray]] = {}
     # (h1, h2) key hashes are computed once per (columns, seed) within
     # this plan execution and shared across GROUPBY/DISTINCT/COGROUP/JOIN
     hc = HashCache()
@@ -386,12 +536,17 @@ def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table],
             v = op_foreach(ins[0], p["gens"])
         elif op.kind == "JOIN":
             if mesh is not None:
-                v, sh_ovf, ovf = distributed_join(
+                v, jpre, sh_ovf, ovf = distributed_join(
                     ins[0], ins[1], p["left_keys"], p["right_keys"], mesh,
                     axis=shuffle_axis, expansion=p.get("expansion", 1),
                     skew_factor=skew_factor,
                     co_left=_skip(op, 0, ins[0]),
-                    co_right=_skip(op, 1, ins[1]))
+                    co_right=_skip(op, 1, ins[1]),
+                    return_pre=True)
+                if jpre is not None:
+                    # left-side names survive the join rename rule
+                    # unchanged, so the lane keys are the left keys
+                    pres[id(v)] = (tuple(p["left_keys"]), jpre)
                 extra["shuffle_overflow"] = sh_ovf
             else:
                 v, ovf = op_join(ins[0], ins[1], p["left_keys"],
@@ -399,10 +554,14 @@ def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table],
             extra["join_overflow"] = ovf
         elif op.kind == "GROUPBY":
             if mesh is not None:
+                entry = pres.get(id(ins[0]))
+                lane = (entry[1] if entry is not None
+                        and entry[0] == tuple(p["keys"]) else None)
                 v, ovf = distributed_groupby(
                     ins[0], p["keys"], p["aggs"], mesh, axis=shuffle_axis,
                     skew_factor=skew_factor,
-                    co_partitioned=_skip(op, 0, ins[0]))
+                    co_partitioned=_skip(op, 0, ins[0]),
+                    lossless=lossless, pre_lane=lane)
                 extra["shuffle_overflow"] = ovf
             else:
                 v = op_groupby(ins[0], p["keys"], p["aggs"], hc)
@@ -413,7 +572,7 @@ def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table],
                     ins[0], ins[1], p["keys_left"], p["keys_right"],
                     p["aggs_left"], p["aggs_right"], mesh,
                     axis=shuffle_axis, skew_factor=skew_factor,
-                    co_partitioned=co)
+                    co_partitioned=co, lossless=lossless)
                 extra["shuffle_overflow"] = ovf
             else:
                 v = op_cogroup(ins[0], ins[1], p["keys_left"],
@@ -424,7 +583,8 @@ def execute_plan(plan: PhysicalPlan, datasets: Dict[str, Table],
                 v, ovf = distributed_distinct(
                     ins[0], mesh, axis=shuffle_axis,
                     skew_factor=skew_factor,
-                    co_partitioned=_skip(op, 0, ins[0]))
+                    co_partitioned=_skip(op, 0, ins[0]),
+                    lossless=lossless)
                 extra["shuffle_overflow"] = ovf
             else:
                 v = op_distinct(ins[0], hc)

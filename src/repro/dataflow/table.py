@@ -246,6 +246,59 @@ def decode_strings(arr: np.ndarray):
 
 
 # ---------------------------------------------------------------------------
+# Row packing (DESIGN.md §14): the fused exchange moves every column of
+# a table through ONE collective by byte-packing rows into a single
+# (capacity, row_bytes) uint8 buffer.  bitcast keeps the packing exact
+# (float32 round-trips bit-identically) and free of format work.
+
+
+def _col_bytes(c: jnp.ndarray) -> jnp.ndarray:
+    if c.ndim == 2:                      # fixed-width string: already bytes
+        return c
+    if c.dtype == jnp.bool_:
+        return c.astype(jnp.uint8)[:, None]
+    if c.dtype == jnp.uint8:
+        return c[:, None]
+    return jax.lax.bitcast_convert_type(c, jnp.uint8)   # (N,) -> (N, itemsize)
+
+
+def pack_rows(cols: Dict[str, jnp.ndarray], valid: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, Tuple]:
+    """Pack columns + the validity lane into one (N, B) uint8 buffer.
+    Returns (packed, layout); the layout is static (hashable) and drives
+    ``unpack_rows``.  Column order is sorted-name for determinism."""
+    parts, layout = [], []
+    for n in sorted(cols):
+        c = cols[n]
+        b = _col_bytes(c)
+        parts.append(b)
+        layout.append((n, str(c.dtype), int(b.shape[1]), c.ndim == 2))
+    parts.append(valid.astype(jnp.uint8)[:, None])
+    return jnp.concatenate(parts, axis=1), tuple(layout)
+
+
+def unpack_rows(packed: jnp.ndarray, layout: Tuple
+                ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    """Inverse of ``pack_rows``.  Zero-filled rows (unhit scatter slots)
+    unpack to zero values with valid=False."""
+    cols: Dict[str, jnp.ndarray] = {}
+    off = 0
+    for name, dtype, width, is_string in layout:
+        b = packed[:, off:off + width]
+        off += width
+        if is_string:
+            cols[name] = b
+        elif dtype == "bool":
+            cols[name] = b[:, 0].astype(jnp.bool_)
+        elif dtype == "uint8":
+            cols[name] = b[:, 0]
+        else:
+            cols[name] = jax.lax.bitcast_convert_type(b, jnp.dtype(dtype))
+    valid = packed[:, off].astype(jnp.bool_)
+    return cols, valid
+
+
+# ---------------------------------------------------------------------------
 # Hashing (uint32; two independent lanes available for sort tie-breaking)
 
 _FNV_OFFSET = np.uint32(2166136261)
@@ -280,28 +333,44 @@ def hash_columns(table: Table, names, seed: int = 0) -> jnp.ndarray:
     return h
 
 
-# Canonical seed of the *partition* hash: every component that assigns
-# rows to shards — the shard_map exchange, the artifact store's sharded
-# writer, and re-partition-on-read — must agree bit-for-bit on
-# hash(keys) % P, or "co-partitioned" artifacts would silently hold rows
-# on the wrong shard (DESIGN.md §11).
-PARTITION_SEED = 7
+def key_hash(table: Table, keys, seed: int = 0) -> jnp.ndarray:
+    """uint32 key hash mixing the key columns in the GIVEN order.
+
+    Unlike ``hash_columns`` (which sorts names so GROUPBY fingerprints
+    are order-insensitive), this hash is positional: the two sides of a
+    JOIN carry differently-named key columns, and their hashes only
+    agree if column i on the left is hashed exactly like column i on
+    the right."""
+    h = jnp.zeros(table.capacity, dtype=jnp.uint32)
+    for i, n in enumerate(keys):
+        h = _mix32(h * jnp.uint32(31) + hash_column(table.col(n), seed + i),
+                   seed)
+    return h
+
+
+def partition_finalize(h: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 fmix32 over an already-computed ``key_hash`` lane.
+
+    The partition hash is *derived* from the seed-0 key hash with a
+    handful of integer ops so the exchange pays ONE string-fold pass
+    for both its routing bits and the ``__h0__`` lane it ships; the
+    finalizer decorrelates the low routing bits from the lane the
+    reducers sort/segment by.  Every component that assigns rows to
+    shards — the shard_map exchange, the artifact store's sharded
+    writer, and re-partition-on-read — must agree bit-for-bit on
+    hash(keys) % P, or "co-partitioned" artifacts would silently hold
+    rows on the wrong shard (DESIGN.md §11)."""
+    h = h.astype(jnp.uint32)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x85EBCA6B)
+    h = (h ^ (h >> 13)) * jnp.uint32(0xC2B2AE35)
+    return h ^ (h >> 16)
 
 
 def partition_hash(table: Table, keys) -> jnp.ndarray:
-    """uint32 partition hash mixing the key columns in the GIVEN order.
-
-    Unlike ``hash_columns`` (which sorts names so GROUPBY fingerprints
-    are order-insensitive), partition hashing is positional: the two
-    sides of a JOIN carry differently-named key columns, and their
-    partition functions only agree if column i on the left is hashed
-    exactly like column i on the right."""
-    h = jnp.zeros(table.capacity, dtype=jnp.uint32)
-    for i, n in enumerate(keys):
-        h = _mix32(h * jnp.uint32(31)
-                   + hash_column(table.col(n), PARTITION_SEED + i),
-                   PARTITION_SEED)
-    return h
+    """Canonical uint32 partition hash: ``partition_finalize`` of the
+    positional seed-0 ``key_hash`` (see ``partition_finalize`` for why
+    the derivation matters)."""
+    return partition_finalize(key_hash(table, keys, seed=0))
 
 
 @partial(jax.jit, static_argnames=("keys", "n_parts"))

@@ -1,4 +1,11 @@
-"""Jit'd wrapper with impl dispatch."""
+"""Jit'd wrapper with impl dispatch + internal padding.
+
+``compact`` accepts ANY row count: the kernel wants a tile-multiple, so
+inputs are padded with masked-out rows and the output sliced back —
+padded rows never survive compaction, so results are unaffected.
+"""
+import jax.numpy as jnp
+
 from .filter_project import filter_compact
 from .ref import filter_compact_ref
 
@@ -6,6 +13,14 @@ from .ref import filter_compact_ref
 def compact(values, mask, *, impl: str = "ref", tile_n: int = 256,
             interpret: bool = True):
     if impl == "pallas":
-        return filter_compact(values, mask, tile_n=tile_n,
-                              interpret=interpret)
+        n = values.shape[0]
+        pad = (-n) % min(tile_n, n) if n else 0
+        if pad:
+            values = jnp.concatenate(
+                [values, jnp.zeros((pad,) + values.shape[1:],
+                                   values.dtype)])
+            mask = jnp.concatenate([mask, jnp.zeros((pad,), bool)])
+        out, total = filter_compact(values, mask, tile_n=tile_n,
+                                    interpret=interpret)
+        return out[:n], total
     return filter_compact_ref(values, mask)

@@ -1,4 +1,11 @@
-"""Jit'd wrapper with impl dispatch."""
+"""Jit'd wrapper with impl dispatch + internal padding.
+
+``probe`` accepts ANY probe-side row count: the kernel wants a
+tile-multiple, so the probe lane is zero-padded and the positions
+sliced back (padded lookups are discarded).
+"""
+import jax.numpy as jnp
+
 from .hash_join import join_probe
 from .ref import join_probe_ref
 
@@ -6,6 +13,12 @@ from .ref import join_probe_ref
 def probe(left_hashes, right_hashes_sorted, *, impl: str = "ref",
           tile_n: int = 256, interpret: bool = True):
     if impl == "pallas":
-        return join_probe(left_hashes, right_hashes_sorted,
-                          tile_n=tile_n, interpret=interpret)
+        n = left_hashes.shape[0]
+        pad = (-n) % min(tile_n, n) if n else 0
+        if pad:
+            left_hashes = jnp.concatenate(
+                [left_hashes, jnp.zeros((pad,), left_hashes.dtype)])
+        pos = join_probe(left_hashes, right_hashes_sorted,
+                         tile_n=tile_n, interpret=interpret)
+        return pos[:n]
     return join_probe_ref(left_hashes, right_hashes_sorted)

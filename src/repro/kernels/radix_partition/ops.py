@@ -1,12 +1,49 @@
-"""Jit'd wrapper with impl dispatch."""
-from .radix_partition import radix_partition
-from .ref import radix_partition_ref
+"""Jit'd wrappers with impl dispatch + internal padding.
+
+Both entry points accept ANY row count: inputs are padded with invalid
+rows up to the tile multiple before the kernel and sliced back after,
+so callers never have to reason about tile granularity (padded rows are
+invalid, which both kernels park/drop by construction).
+"""
+import jax.numpy as jnp
+
+from .radix_partition import partition_scatter, radix_partition
+from .ref import partition_scatter_ref, radix_partition_ref
+
+
+def _pad_invalid(hashes, valid, tile_n):
+    n = hashes.shape[0]
+    pad = (-n) % min(tile_n, n)
+    if pad == 0:
+        return hashes, valid, n
+    return (jnp.concatenate([hashes, jnp.zeros((pad,), hashes.dtype)]),
+            jnp.concatenate([valid, jnp.zeros((pad,), bool)]), n)
 
 
 def partition(hashes, valid, *, n_parts: int, impl: str = "ref",
               tile_n: int = 256, interpret: bool = True):
+    h, v, n = _pad_invalid(hashes, valid, tile_n)
     if impl == "pallas":
-        return radix_partition(hashes, valid, n_parts=n_parts,
-                               tile_n=tile_n, interpret=interpret)
-    return radix_partition_ref(hashes, valid, n_parts=n_parts,
-                               tile_n=tile_n)
+        pid, hist = radix_partition(h, v, n_parts=n_parts,
+                                    tile_n=tile_n, interpret=interpret)
+    else:
+        # the ref reshapes rows into tiles for the per-tile hist, so it
+        # needs the same invalid-padding the kernel gets
+        pid, hist = radix_partition_ref(h, v, n_parts=n_parts,
+                                        tile_n=tile_n)
+    return pid[:n], hist
+
+
+def scatter_slots(hashes, valid, *, n_parts: int, bucket: int,
+                  impl: str = "ref", tile_n: int = 256,
+                  interpret: bool = True):
+    """Fused partition + bucket-scatter slots (DESIGN.md §14).  Returns
+    (slot (N,) int32 — ``n_parts * bucket`` is the drop slot — and the
+    scalar count of valid rows that overflowed their bucket)."""
+    if impl == "pallas" and n_parts & (n_parts - 1) == 0:
+        h, v, n = _pad_invalid(hashes, valid, tile_n)
+        slot, ovf = partition_scatter(h, v, n_parts=n_parts, bucket=bucket,
+                                      tile_n=tile_n, interpret=interpret)
+        return slot[:n], ovf
+    return partition_scatter_ref(hashes, valid, n_parts=n_parts,
+                                 bucket=bucket, tile_n=tile_n)

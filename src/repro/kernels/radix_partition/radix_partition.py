@@ -16,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _radix_kernel(hash_ref, valid_ref, pid_ref, hist_ref, *, tile_n,
@@ -62,3 +63,69 @@ def radix_partition(hashes, valid, *, n_parts: int, tile_n: int = 256,
         interpret=interpret,
     )(hashes.reshape(n_tiles, tile_n), valid.reshape(n_tiles, tile_n))
     return pid.reshape(n), hist
+
+
+def _scatter_kernel(hash_ref, valid_ref, slot_ref, ovf_ref, count_ref, *,
+                    tile_n, n_parts, bucket):
+    """Fused binning + bucket-slot assignment over one tile.
+
+    The per-destination running counts live in VMEM scratch and carry
+    across the sequential grid (the accumulation pattern): tile i sees
+    the totals of tiles 0..i-1, so each row's rank is its global arrival
+    rank — identical to what a stable sort by destination would give."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+
+    h = hash_ref[0]                                  # (TN,) uint32
+    valid = valid_ref[0].astype(jnp.bool_)
+    pid = (h & jnp.uint32(n_parts - 1)).astype(jnp.int32)
+    pid = jnp.where(valid, pid, n_parts)             # park invalid
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tile_n, n_parts), 1)
+    onehot = ((pid[:, None] == iota) & valid[:, None]).astype(jnp.int32)
+    incl = jnp.cumsum(onehot, axis=0)                # per-tile running count
+    base = count_ref[0]                              # carried totals (P,)
+    # exclusive rank = carried base + in-tile count before this row;
+    # the onehot mask selects the row's own destination column
+    rank = jnp.sum((incl - onehot + base[None, :]) * onehot, axis=1)
+    keep = valid & (rank < bucket)
+    slot_ref[0] = jnp.where(keep, pid * bucket + rank, n_parts * bucket)
+    ovf_ref[0, 0] = jnp.sum((valid & ~keep).astype(jnp.int32))
+    count_ref[0] = base + incl[tile_n - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("n_parts", "bucket", "tile_n",
+                                             "interpret"))
+def partition_scatter(hashes, valid, *, n_parts: int, bucket: int,
+                      tile_n: int = 256, interpret: bool = False):
+    """hashes: (N,) uint32; valid: (N,) bool; n_parts power of two.
+    Returns (slot (N,) int32 in [0, n_parts*bucket] with n_parts*bucket
+    the drop slot, overflow () int32) — see ``partition_scatter_ref``."""
+    assert n_parts & (n_parts - 1) == 0
+    n = hashes.shape[0]
+    tile_n = min(tile_n, n)
+    assert n % tile_n == 0
+    n_tiles = n // tile_n
+
+    slot, ovf = pl.pallas_call(
+        functools.partial(_scatter_kernel, tile_n=tile_n, n_parts=n_parts,
+                          bucket=bucket),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, tile_n), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile_n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, tile_n), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, n_parts), jnp.int32)],
+        interpret=interpret,
+    )(hashes.reshape(n_tiles, tile_n), valid.reshape(n_tiles, tile_n))
+    return slot.reshape(n), jnp.sum(ovf)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for radix partitioning."""
+"""Pure-jnp oracle for radix partitioning + the fused bucket scatter."""
 import jax.numpy as jnp
 
 
@@ -11,3 +11,33 @@ def radix_partition_ref(hashes, valid, *, n_parts: int, tile_n: int = 256):
     onehot = (pid[:, None] == jnp.arange(n_parts)[None, :]).astype(jnp.int32)
     hist = onehot.reshape(n_tiles, tile_n, n_parts).sum(axis=1)
     return pid, hist
+
+
+def partition_scatter_ref(hashes, valid, *, n_parts: int, bucket: int,
+                          tile_n: int = 256):
+    """Fused binning + bucket-slot assignment (the map side of the
+    exchange, DESIGN.md §14).  For every row: destination partition
+    ``h % n_parts`` and its *arrival rank* within that partition —
+    the count of earlier valid rows bound for the same destination —
+    giving scatter slot ``pid * bucket + rank``.  Rows whose rank
+    overflows the bounded bucket (and invalid rows) get the drop slot
+    ``n_parts * bucket``.
+
+    The running-count rank equals the rank a stable sort by destination
+    would assign, so the slots are bit-identical to the former
+    argsort+searchsorted exchange — without the O(n log n) sort.
+    Returns (slot (N,) int32, overflow () int32)."""
+    if n_parts & (n_parts - 1) == 0:
+        pid = (hashes & jnp.uint32(n_parts - 1)).astype(jnp.int32)
+    else:
+        pid = (hashes % jnp.uint32(n_parts)).astype(jnp.int32)
+    onehot = ((pid[:, None] == jnp.arange(n_parts)[None, :])
+              & valid[:, None]).astype(jnp.int32)
+    incl = jnp.cumsum(onehot, axis=0)          # inclusive running counts
+    # invalid rows never need masking here: their onehot row is zero, so
+    # rank is garbage, but ``keep`` drops them before it can matter
+    rank = jnp.take_along_axis(incl, pid[:, None], axis=1)[:, 0] - 1
+    keep = valid & (rank < bucket)
+    slot = jnp.where(keep, pid * bucket + rank, n_parts * bucket)
+    overflow = jnp.sum((valid & ~keep).astype(jnp.int32))
+    return slot, overflow

@@ -1,4 +1,11 @@
-"""Jit'd wrapper with impl dispatch."""
+"""Jit'd wrapper with impl dispatch + internal padding.
+
+``segment_sum`` accepts ANY row count: the kernel wants a tile-multiple,
+so rows are padded with out-of-range segment ids, which the kernel drops
+exactly as the ref masks them.
+"""
+import jax.numpy as jnp
+
 from .ref import segment_sum_ref
 from .segment_reduce import segment_sum_sorted
 
@@ -6,6 +13,16 @@ from .segment_reduce import segment_sum_sorted
 def segment_sum(values, seg_ids, *, num_segments: int, impl: str = "ref",
                 tile_n: int = 256, interpret: bool = True):
     if impl == "pallas":
+        n = values.shape[0]
+        pad = (-n) % min(tile_n, n) if n else 0
+        if pad:
+            values = jnp.concatenate(
+                [values, jnp.zeros((pad,) + values.shape[1:],
+                                   values.dtype)])
+            # padded ids sit past num_segments, keeping the lane sorted
+            # and the rows outside every real segment
+            seg_ids = jnp.concatenate(
+                [seg_ids, jnp.full((pad,), num_segments, seg_ids.dtype)])
         return segment_sum_sorted(values, seg_ids,
                                   num_segments=num_segments,
                                   tile_n=tile_n, interpret=interpret)

@@ -71,5 +71,9 @@ def segment_sum_sorted(values, seg_ids, *, num_segments: int,
     # combine: scatter-add each tile's partial at its base offset
     out = jnp.zeros((num_segments, d), jnp.float32)
     idx = bases.reshape(n_tiles, 1) + jnp.arange(tile_n)[None, :]
+    # negative ids are out-of-range like the >= num_segments sentinel,
+    # but mode="drop" only drops high indices — it WRAPS negatives, so
+    # push them past the end explicitly
+    idx = jnp.where(idx < 0, num_segments, idx)
     out = out.at[idx.reshape(-1)].add(parts.reshape(-1, d), mode="drop")
     return out

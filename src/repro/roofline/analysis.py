@@ -27,6 +27,19 @@ ICI_BW = 50e9                # bytes/s / link
 N_CHIPS = {"16x16": 256, "2x16x16": 512}
 
 
+def predict_tile_time_s(bytes_accessed: float, flops: float = 0.0,
+                        collective_bytes: float = 0.0,
+                        dispatch_overhead_s: float = 0.0) -> float:
+    """Price one candidate kernel/exchange configuration by the same
+    three-term roofline that scores whole dry-run cells: the dominant of
+    compute, HBM, and ICI time, plus a caller-modeled fixed dispatch
+    cost (per-tile grid overhead, collective launch).  Consumed by
+    ``kernels/autotune.py`` to prune a candidate grid down to the few
+    configurations worth actually measuring."""
+    return max(flops / PEAK_FLOPS, bytes_accessed / HBM_BW,
+               collective_bytes / ICI_BW) + dispatch_overhead_s
+
+
 def model_flops(report: dict) -> float:
     """6*N*D (train) / 2*N*D (fwd-only), N = active params, D = tokens."""
     n = report["active_params"]

@@ -163,7 +163,13 @@ def _partition_layout(table: Table, keys, n_parts: int,
     if mask is None:
         mask = np.asarray(table.valid).astype(bool)
     counts = np.bincount(pid[mask], minlength=n_parts)
-    shard_cap = max(8, _pow2ceil(counts.max() if counts.size else 1))
+    m = int(counts.max()) if counts.size else 1
+    # capacity granularity of 1/8th of the pow2 octave: padding stays
+    # under 12.5% (a bare pow2 ceil doubles a 8193-row shard to 16384,
+    # and every capacity-proportional op downstream with it) while the
+    # shape-class count stays bounded for the jit cache
+    g = max(8, _pow2ceil(max(m, 1)) // 8)
+    shard_cap = max(8, -(-m // g) * g)
     return pid, counts, shard_cap
 
 

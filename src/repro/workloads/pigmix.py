@@ -20,13 +20,14 @@ N_USERS = 200
 
 
 def gen_page_views(n_rows: int, seed: int = 0,
-                   capacity: int | None = None) -> Table:
+                   capacity: int | None = None,
+                   n_users: int = N_USERS) -> Table:
     rng = np.random.default_rng(seed)
-    users = [f"user{i:04d}" for i in range(N_USERS)]
+    users = [f"user{i:04d}" for i in range(n_users)]
     terms = [f"term{i:03d}" for i in range(50)]
     return Table.from_numpy({
         "user": encode_strings([users[i] for i in
-                                rng.integers(0, N_USERS, n_rows)]),
+                                rng.integers(0, n_users, n_rows)]),
         "action": rng.integers(1, 3, n_rows).astype(np.int32),
         "timespent": rng.integers(0, 100, n_rows).astype(np.int32),
         "query_term": encode_strings([terms[i] for i in
@@ -37,13 +38,13 @@ def gen_page_views(n_rows: int, seed: int = 0,
     }, capacity=capacity or n_rows)
 
 
-def gen_users(seed: int = 1) -> Table:
+def gen_users(seed: int = 1, n_users: int = N_USERS) -> Table:
     rng = np.random.default_rng(seed)
-    names = [f"user{i:04d}" for i in range(N_USERS)]
+    names = [f"user{i:04d}" for i in range(n_users)]
     return Table.from_numpy({
         "name": encode_strings(names),
-        "phone": rng.integers(10**6, 10**7, N_USERS).astype(np.int32),
-        "zip": rng.integers(10**4, 10**5, N_USERS).astype(np.int32),
+        "phone": rng.integers(10**6, 10**7, n_users).astype(np.int32),
+        "zip": rng.integers(10**4, 10**5, n_users).astype(np.int32),
     })
 
 

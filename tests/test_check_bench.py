@@ -13,10 +13,22 @@ import check_bench  # noqa: E402
 
 def _doc(**overrides):
     base = {
+        "runs": [{
+            "label": "full", "n_rows": 1 << 15, "trials": 3,
+            "queries": {
+                "L3": {"t_plain_s": 0.4, "t_store_s": 0.41,
+                       "t_reuse_s": 0.02, "store_overhead": 1.02,
+                       "reuse_speedup": 20.0},
+                "L7": {"t_plain_s": 0.3, "t_store_s": 0.31,
+                       "t_reuse_s": 0.29, "store_overhead": 1.03,
+                       "reuse_speedup": 1.03},
+            },
+            "avg_store_overhead": 1.02, "avg_reuse_speedup": 10.5,
+        }],
         "dist_runs": [{
             "label": "full", "n_rows": 1 << 16, "n_shards": 8,
             "arms": {}, "speedup_copart_vs_blind": 2.5,
-            "shuffles_skipped": 3,
+            "mesh_vs_single": 1.2, "shuffles_skipped": 3,
         }],
         "delta_runs": [{
             "label": "full", "n_rows": 1 << 16, "trials": 1,
@@ -143,3 +155,43 @@ def test_service_same_label_regression_fails(tmp_path):
     second["goodput_scaling_4w_vs_1w"] = 1.8            # above floor,
     doc["service_runs"].append(second)                  # but a >20% drop
     assert _run(tmp_path, doc) == 1
+
+
+def test_mesh_vs_single_floor_violation_fails(tmp_path):
+    doc = _doc()
+    doc["dist_runs"][0]["mesh_vs_single"] = 0.48   # the pre-PR7 regime
+    assert _run(tmp_path, doc) == 1
+
+
+def test_mesh_vs_single_floor_exempts_small_sizes(tmp_path):
+    doc = _doc()
+    doc["dist_runs"][0]["n_rows"] = 1 << 12        # CI smoke size
+    doc["dist_runs"][0]["mesh_vs_single"] = 0.48
+    assert _run(tmp_path, doc) == 0
+
+
+def test_mesh_vs_single_missing_field_fails(tmp_path):
+    doc = _doc()
+    del doc["dist_runs"][0]["mesh_vs_single"]
+    assert _run(tmp_path, doc) == 1
+
+
+def test_query_reuse_floor_violation_fails(tmp_path):
+    doc = _doc()
+    doc["runs"][0]["queries"]["L7"]["reuse_speedup"] = 0.60  # the L7 bug
+    assert _run(tmp_path, doc) == 1
+
+
+def test_query_reuse_floor_tolerates_noise_at_unity(tmp_path):
+    doc = _doc()
+    # a declined splice re-executes: speedup 1.0 by construction, and
+    # timing noise may put the measured ratio a hair under
+    doc["runs"][0]["queries"]["L7"]["reuse_speedup"] = 0.97
+    assert _run(tmp_path, doc) == 0
+
+
+def test_query_reuse_floor_exempts_small_sizes(tmp_path):
+    doc = _doc()
+    doc["runs"][0]["n_rows"] = 1 << 12
+    doc["runs"][0]["queries"]["L7"]["reuse_speedup"] = 0.60
+    assert _run(tmp_path, doc) == 0

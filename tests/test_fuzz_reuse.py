@@ -347,6 +347,31 @@ for seed, depth in [(0, 2), (2, 2), (5, 3)]:
     got3, _ = warm_rs.run_plan(plan)
     F._assert_identical(ref["out"], got3["out"], f"mesh-warm-sem[{seed}]")
     print("seed", seed, "OK")
+
+# skew-overflow arm: skew_factor=1.0 leaves no headroom for key skew, so
+# the bounded exchange buckets overflow; the engine must COUNT the
+# overflow (JobStats audit trail) and recover losslessly via the
+# skew=n_shards retry -- still bit-identical to single-device plain.
+# partition_aware=False keeps every exchange live (no co-partitioned
+# skips), so the overflow path is actually on the line.
+ovf_hits = 0
+for seed, depth in [(0, 2), (2, 2), (5, 3)]:
+    rng = np.random.default_rng(seed)
+    plan = F.random_workflow(rng, depth)
+    ref_rs = F._fresh(seed, heuristic="off", rewrite_enabled=False,
+                      semantic=False)
+    ref, _ = ref_rs.run_plan(plan)
+    ovf_rs = F._fresh(seed, heuristic="aggressive", mesh=mesh,
+                      skew_factor=1.0, partition_aware=False)
+    got, rep = ovf_rs.run_plan(plan)
+    F._assert_identical(ref["out"], got["out"], f"mesh-overflow[{seed}]")
+    for j in rep.jobs:
+        if j.stats is not None:
+            assert j.stats.shuffle_overflow == 0 \
+                or j.stats.shuffle_retries > 0, \
+                "overflow without the lossless retry"
+            ovf_hits += int(j.stats.shuffle_overflow > 0)
+assert ovf_hits > 0, "skew-overflow path never exercised"
 print("OK")
 """
 

@@ -1,0 +1,242 @@
+"""Kernel parity wall (ISSUE 7): every ``kernels/*/ops.py`` entry point
+is property-tested against its ``ref.py`` oracle.
+
+Routing/compaction kernels (partition, scatter_slots, probe, compact,
+segment_sum over integer-valued data) must be BIT-identical between the
+Pallas path (interpret mode on CPU) and the reference: the exchange and
+the store's partition layout both assume the two agree on row placement.
+flash_attention reorders float accumulation by construction, so it gets
+a tight tolerance instead.
+
+Shapes are property-driven: hypothesis when installed, and an always-on
+seeded-PRNG sweep otherwise (the CI image does not ship hypothesis), so
+the same generators run either way.  Cases cover non-tile-multiple and
+sub-tile sizes, empty/all-invalid rows, hash-tie-heavy keys (constant
+and few-distinct hashes force bucket overflow and probe ties), and
+float32/int32 payloads.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.filter_project.ops import compact
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.hash_join.ops import probe
+from repro.kernels.radix_partition.ops import partition, scatter_slots
+from repro.kernels.segment_reduce.ops import segment_sum
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# non-tile-multiple, sub-tile, exact-tile and straddling sizes
+SIZES = [1, 7, 127, 128, 129, 333, 1024]
+TILES = [128, 256]
+
+
+def _hashes(rng, n, ties: str):
+    """uint32 hash lanes: uniform, few-distinct (tie-heavy), constant."""
+    if ties == "uniform":
+        h = rng.integers(0, 1 << 32, n, dtype=np.uint32)
+    elif ties == "few":
+        pool = rng.integers(0, 1 << 32, max(1, n // 8) or 1,
+                            dtype=np.uint32)
+        h = pool[rng.integers(0, len(pool), n)]
+    else:                                   # "const": every key ties
+        h = np.full(n, np.uint32(0xDEADBEEF))
+    return jnp.asarray(h)
+
+
+def _valid(rng, n, mode: str):
+    if mode == "none":                      # all-invalid rows
+        v = np.zeros(n, bool)
+    elif mode == "all":
+        v = np.ones(n, bool)
+    else:
+        v = rng.random(n) < 0.7
+    return jnp.asarray(v)
+
+
+# ------------------------------------------------------------ checkers
+
+
+def check_partition(seed, n, tile, ties, vmode, n_parts=8):
+    rng = np.random.default_rng(seed)
+    h, v = _hashes(rng, n, ties), _valid(rng, n, vmode)
+    pid_p, hist_p = partition(h, v, n_parts=n_parts, impl="pallas",
+                              tile_n=tile)
+    pid_r, hist_r = partition(h, v, n_parts=n_parts, impl="ref",
+                              tile_n=tile)
+    np.testing.assert_array_equal(np.asarray(pid_p), np.asarray(pid_r))
+    # hist is per-TILE: the pallas path pads to a tile multiple while the
+    # ref clamps the tile, so tile counts differ on ragged sizes — the
+    # shared contract is the per-partition totals (and exact per-tile
+    # equality whenever the shapes agree)
+    hp, hr = np.asarray(hist_p), np.asarray(hist_r)
+    np.testing.assert_array_equal(hp.sum(axis=0), hr.sum(axis=0))
+    if hp.shape == hr.shape:
+        np.testing.assert_array_equal(hp, hr)
+
+
+def check_scatter(seed, n, tile, ties, vmode, n_parts=8):
+    rng = np.random.default_rng(seed)
+    h, v = _hashes(rng, n, ties), _valid(rng, n, vmode)
+    # small bucket so tie-heavy hashes overflow; large enough that
+    # uniform cases mostly fit
+    bucket = max(2, (n // n_parts) + 2)
+    s_p, ovf_p = scatter_slots(h, v, n_parts=n_parts, bucket=bucket,
+                               impl="pallas", tile_n=tile)
+    s_r, ovf_r = scatter_slots(h, v, n_parts=n_parts, bucket=bucket,
+                               impl="ref", tile_n=tile)
+    np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_r))
+    assert int(ovf_p) == int(ovf_r)
+    # contract: valid kept rows land in their partition's bucket range,
+    # dropped rows on the overflow slot, invalid rows never kept
+    s, vm = np.asarray(s_r), np.asarray(v)
+    keep = s < n_parts * bucket
+    assert not np.any(keep & ~vm)
+    pid = np.asarray(partition(h, v, n_parts=n_parts, impl="ref")[0])
+    assert np.array_equal(s[keep] // bucket, pid[keep])
+
+
+def check_compact(seed, n, tile, vmode, dtype):
+    rng = np.random.default_rng(seed)
+    d = int(rng.integers(1, 5))
+    vals = rng.integers(-100, 100, (n, d)).astype(dtype)
+    m = _valid(rng, n, vmode)
+    out_p, tot_p = compact(jnp.asarray(vals), m, impl="pallas",
+                           tile_n=tile)
+    out_r, tot_r = compact(jnp.asarray(vals), m, impl="ref", tile_n=tile)
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_r))
+    assert int(tot_p) == int(tot_r) == int(np.asarray(m).sum())
+
+
+def check_probe(seed, n, tile, ties):
+    rng = np.random.default_rng(seed)
+    lh = _hashes(rng, n, ties)
+    rh = jnp.sort(_hashes(rng, max(1, n // 2), ties))
+    q_p = probe(lh, rh, impl="pallas", tile_n=tile)
+    q_r = probe(lh, rh, impl="ref", tile_n=tile)
+    np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_r))
+
+
+def check_segment_sum(seed, n, tile, dtype, num_segments=16):
+    rng = np.random.default_rng(seed)
+    d = int(rng.integers(1, 4))
+    # integer-valued payloads: float addition is then exact in any
+    # order, so parity can demand bit-identity
+    vals = rng.integers(-50, 50, (n, d)).astype(dtype)
+    # sorted AND dense ids (consecutive, cumsum over boundary bits) —
+    # the kernel's contract, as the engine's GROUPBY produces them; the
+    # start offset still covers negative and past-num_segments ids,
+    # which both impls must drop identically
+    start = int(rng.integers(-1, 2))
+    sid = jnp.asarray((start + np.cumsum(rng.integers(0, 2, n)))
+                      .astype(np.int32))
+    o_p = segment_sum(jnp.asarray(vals), sid, num_segments=num_segments,
+                      impl="pallas", tile_n=tile)
+    o_r = segment_sum(jnp.asarray(vals), sid, num_segments=num_segments,
+                      impl="ref", tile_n=tile)
+    np.testing.assert_array_equal(np.asarray(o_p), np.asarray(o_r))
+
+
+def check_mha(seed, sq, skv):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 2, sq, 16), np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 2, skv, 16), np.float32))
+    v = jnp.asarray(rng.standard_normal((1, 2, skv, 16), np.float32))
+    o_p = mha(q, k, v, causal=True, impl="pallas", block_q=64,
+              block_k=64, interpret=True)
+    o_r = mha(q, k, v, causal=True, impl="ref")
+    # float accumulation is reordered by the online softmax: tight
+    # tolerance, not bit-identity
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------------- always-on seeded sweep
+
+
+@pytest.mark.parametrize("ties", ["uniform", "few", "const"])
+@pytest.mark.parametrize("vmode", ["mixed", "all", "none"])
+def test_partition_and_scatter_parity_sweep(ties, vmode):
+    for i, n in enumerate(SIZES):
+        tile = TILES[i % len(TILES)]
+        check_partition(i, n, tile, ties, vmode)
+        check_scatter(100 + i, n, tile, ties, vmode)
+
+
+def test_scatter_non_pow2_parts_dispatches_to_ref():
+    rng = np.random.default_rng(0)
+    h, v = _hashes(rng, 200, "uniform"), _valid(rng, 200, "mixed")
+    s_p, o_p = scatter_slots(h, v, n_parts=6, bucket=40, impl="pallas")
+    s_r, o_r = scatter_slots(h, v, n_parts=6, bucket=40, impl="ref")
+    np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_r))
+    assert int(o_p) == int(o_r)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_compact_parity_sweep(dtype):
+    for i, n in enumerate(SIZES):
+        for vmode in ("mixed", "all", "none"):
+            check_compact(i, n, TILES[i % len(TILES)], vmode, dtype)
+
+
+@pytest.mark.parametrize("ties", ["uniform", "few", "const"])
+def test_probe_parity_sweep(ties):
+    for i, n in enumerate(SIZES):
+        check_probe(i, n, TILES[i % len(TILES)], ties)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_segment_sum_parity_sweep(dtype):
+    for i, n in enumerate(SIZES):
+        check_segment_sum(i, n, TILES[i % len(TILES)], dtype)
+
+
+def test_mha_parity_seeded():
+    # ragged sizes below the block (the kernel clamps its block to the
+    # sequence) plus exact block multiples; non-multiple sizes above the
+    # block are rejected by the kernel's precondition, and causal
+    # sq > skv (queries with zero visible keys) is outside the contract
+    for seed, (sq, skv) in enumerate([(64, 64), (37, 53), (64, 128),
+                                      (1, 64)]):
+        check_mha(seed, sq, skv)
+
+
+# ------------------------------------------------- hypothesis wrappers
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None, derandomize=True)
+    @given(seed=st.integers(0, 10**6), n=st.integers(1, 700),
+           tile=st.sampled_from(TILES),
+           ties=st.sampled_from(["uniform", "few", "const"]),
+           vmode=st.sampled_from(["mixed", "all", "none"]))
+    def test_partition_scatter_parity_fuzz(seed, n, tile, ties, vmode):
+        check_partition(seed, n, tile, ties, vmode)
+        check_scatter(seed, n, tile, ties, vmode)
+
+    @settings(max_examples=25, deadline=None, derandomize=True)
+    @given(seed=st.integers(0, 10**6), n=st.integers(1, 700),
+           tile=st.sampled_from(TILES),
+           dtype=st.sampled_from([np.float32, np.int32]),
+           vmode=st.sampled_from(["mixed", "all", "none"]))
+    def test_compact_parity_fuzz(seed, n, tile, dtype, vmode):
+        check_compact(seed, n, tile, vmode, dtype)
+
+    @settings(max_examples=25, deadline=None, derandomize=True)
+    @given(seed=st.integers(0, 10**6), n=st.integers(1, 700),
+           tile=st.sampled_from(TILES),
+           ties=st.sampled_from(["uniform", "few", "const"]))
+    def test_probe_parity_fuzz(seed, n, tile, ties):
+        check_probe(seed, n, tile, ties)
+
+    @settings(max_examples=25, deadline=None, derandomize=True)
+    @given(seed=st.integers(0, 10**6), n=st.integers(1, 700),
+           tile=st.sampled_from(TILES),
+           dtype=st.sampled_from([np.float32, np.int32]))
+    def test_segment_sum_parity_fuzz(seed, n, tile, dtype):
+        check_segment_sum(seed, n, tile, dtype)

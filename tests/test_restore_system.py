@@ -44,7 +44,15 @@ def test_whole_job_reuse_gives_same_results():
 
 
 def test_subjob_reuse_gives_same_results():
-    rs = fresh()
+    # min_splice_benefit_s=0 disarms the L7 exact-splice guard: at this
+    # toy size a streaming Project region never clears the overhead bar
+    # (see test_l7_streaming_splice_declined) and this test is about the
+    # sub-job reuse MECHANISM, not its economics
+    store = ArtifactStore()
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=2048)
+    rs = ReStore(cat, store, heuristic="aggressive",
+                 min_splice_benefit_s=0.0)
     rs.run_plan(pigmix.L3("sum"))     # stores Load+Project sub-jobs
     pv = P.project(P.load("page_views"), ["user", "estimated_revenue"])
     f = P.filter_(pv, Col("estimated_revenue") > 50.0)
@@ -109,3 +117,86 @@ def test_catalog_version_bump_prevents_stale_reuse():
     q = P.PhysicalPlan([P.store(pv, "v_out")])
     _, rep = rs.run_plan(q)
     assert not rep.jobs[0].reused_artifacts
+
+
+# ---------------------------------------------------------------------------
+# The L7 exact-splice guard (DESIGN.md §14): reusing a stored streaming
+# region (LOAD+FOREACH/PROJECT/FILTER chains) whose output is about as
+# big as its input LOSES time — the load of the artifact costs more than
+# recomputing the cheap streaming ops, the regression that put PigMix L7
+# at 0.6x reuse speedup.  The armed CostModel.should_splice declines
+# those splices; blocking regions and evidence-free entries still
+# splice unconditionally.
+
+
+def _evict_finals(rs, plan):
+    from repro.dataflow.compiler import compile_workflow
+    finals = set(compile_workflow(plan).final_outputs.values())
+    for name in finals:
+        rs.store.delete(name)
+    rs.repo._replace([e for e in rs.repo.entries
+                      if e.artifact not in finals], [], None)
+
+
+def test_l7_streaming_splice_declined():
+    """The L7 repro, end to end: with the guard armed (the engine-owned
+    default), the FOREACH splice is declined and the job re-executes
+    from the source; disarmed, the same repo splices it.  Results are
+    identical either way — the guard is pure economics."""
+    store = ArtifactStore()
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=4096)
+    rs = ReStore(cat, store, heuristic="aggressive")
+    res_cold, _ = rs.run_plan(pigmix.L7())
+
+    _evict_finals(rs, pigmix.L7())
+    armed = ReStore(cat, store, rs.repo, heuristic="off")
+    assert armed.repo.cost_model.min_splice_benefit_s > 0
+    res_a, rep_a = armed.run_plan(pigmix.L7())
+    assert all(not j.reused_artifacts for j in rep_a.jobs), \
+        "streaming splice must be declined by the armed guard"
+    assert any(j.executed for j in rep_a.jobs)
+
+    _evict_finals(rs, pigmix.L7())
+    rs.repo.cost_model.min_splice_benefit_s = 0.0
+    disarmed = ReStore(cat, store, rs.repo, heuristic="off")
+    res_d, rep_d = disarmed.run_plan(pigmix.L7())
+    assert any(j.reused_artifacts for j in rep_d.jobs), \
+        "disarmed guard must splice the stored FOREACH region"
+
+    for res in (res_a, res_d):
+        a, b = _rows(res_cold["L7_out"]), _rows(res["L7_out"])
+        for c in a:
+            assert np.allclose(a[c], b[c], atol=1e-3)
+
+
+def test_should_splice_economics():
+    """Unit-level pin of the admission rule itself."""
+    from repro.core import plan as P2
+    from repro.core.cost_model import CostModel
+    from repro.core.repository import make_entry
+
+    streaming = P2.PhysicalPlan(
+        [P2.store(P2.project(P2.load("t"), ["a"]), "s_out")])
+    blocking = P2.PhysicalPlan(
+        [P2.store(P2.groupby(P2.project(P2.load("t"), ["a"]), ["a"],
+                             {"n": ("count", "a")}), "b_out")])
+
+    cm = CostModel(min_splice_benefit_s=1e-3)
+    mb = int(2e6)        # ~1ms of load bandwidth per default CostModel
+    # streaming region that barely shrinks its input: benefit below the
+    # bar -> declined (the L7 shape)
+    assert not cm.should_splice(
+        make_entry(streaming, "a1", bytes_in=mb, bytes_out=mb - 100))
+    # the same region with a strong reduction clears the bar
+    assert cm.should_splice(
+        make_entry(streaming, "a2", bytes_in=100 * mb, bytes_out=mb))
+    # blocking regions always splice: recomputing a groupby/join is the
+    # expensive path the paper's always-reuse rule addresses
+    assert cm.should_splice(
+        make_entry(blocking, "a3", bytes_in=mb, bytes_out=mb))
+    # no bytes evidence -> no grounds to decline
+    assert cm.should_splice(make_entry(streaming, "a4"))
+    # inert at the bare-CostModel default threshold of 0
+    assert CostModel().should_splice(
+        make_entry(streaming, "a5", bytes_in=mb, bytes_out=mb))

@@ -16,8 +16,14 @@ Additionally the committed full-size entries must meet acceptance
 floors (entries below ``FLOOR_MIN_ROWS`` rows — CI smoke sizes — are
 exempt):
 
+  * ``runs`` — every per-query reuse speedup at least
+    ``MIN_QUERY_REUSE``x (with a small timing-noise tolerance: streaming
+    queries whose splice the L7 guard declines legitimately sit AT 1.0);
+    a committed query below 1x means reuse made it slower (ISSUE 7);
   * ``dist_runs`` — co-partitioned reuse at least ``MIN_COPART_SPEEDUP``x
-    faster than partition-blind reuse (ISSUE 4);
+    faster than partition-blind reuse (ISSUE 4), and the plain 8-way
+    mesh at least ``MIN_MESH_VS_SINGLE``x the single-device cold run
+    (ISSUE 7 — sharded execution must not lose to one device);
   * ``delta_runs`` — at append fractions ≤ ``DELTA_FLOOR_MAX_FRAC``,
     delta refresh at least ``MIN_DELTA_SPEEDUP``x faster than
     delete-and-recompute for the groupby and join templates (ISSUE 5);
@@ -41,6 +47,12 @@ DEFAULT_PATH = os.path.join(ROOT, "BENCH_core.json")
 
 MAX_REGRESSION = float(os.environ.get("CHECK_BENCH_MAX_REGRESSION", 0.20))
 MIN_COPART_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_COPART", 2.0))
+MIN_MESH_VS_SINGLE = float(os.environ.get("CHECK_BENCH_MIN_MESH", 1.0))
+MIN_QUERY_REUSE = float(os.environ.get("CHECK_BENCH_MIN_QUERY_REUSE", 1.0))
+# reuse-speedup floors compare medians of repeated wall times; queries
+# pinned AT the floor (declined splices re-execute, speedup == 1.0 by
+# construction) need headroom for timer noise
+QUERY_NOISE_TOL = float(os.environ.get("CHECK_BENCH_QUERY_NOISE_TOL", 0.05))
 MIN_DELTA_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_DELTA", 3.0))
 MIN_SERVICE_SCALING = float(os.environ.get("CHECK_BENCH_MIN_SERVICE", 1.5))
 DELTA_FLOOR_MAX_FRAC = 0.10      # the ISSUE 5 "≤10% append" regime
@@ -69,7 +81,8 @@ SCHEMAS = {
     "policy_runs": (("label", "n_events", "n_rows", "budgets"), None),
     "semantic_runs": (("label", "n_rows", "sweep"), _semantic_headline),
     "dist_runs": (("label", "n_rows", "n_shards", "arms",
-                   "speedup_copart_vs_blind", "shuffles_skipped"),
+                   "speedup_copart_vs_blind", "mesh_vs_single",
+                   "shuffles_skipped"),
                   lambda r: r["speedup_copart_vs_blind"]),
     "delta_runs": (("label", "n_rows", "sweep"), _delta_headline),
     "service_runs": (("label", "n_rows", "n_events", "worker_sweep",
@@ -120,17 +133,40 @@ def check(path: str) -> int:
                             f"regressed {p:.2f} -> {c:.2f} "
                             f"(> {MAX_REGRESSION:.0%} drop)")
 
-        # acceptance floor for full-size distributed entries
+        # per-query reuse floor on full-size core-bench entries (ISSUE 7)
+        if list_name == "runs":
+            bar = MIN_QUERY_REUSE * (1.0 - QUERY_NOISE_TOL)
+            for rec in entries:
+                if rec["n_rows"] < FLOOR_MIN_ROWS // 2:
+                    continue     # core bench's full size is 1<<15
+                for q, m in sorted(rec["queries"].items()):
+                    n_checked += 1
+                    s = m.get("reuse_speedup", 0.0)
+                    if s < bar:
+                        errors.append(
+                            f"runs label={rec['label']!r} query={q}: "
+                            f"reuse speedup {s:.2f} below the "
+                            f"{MIN_QUERY_REUSE:.1f}x floor (reuse made "
+                            f"it slower; {rec['n_rows']} rows)")
+
+        # acceptance floors for full-size distributed entries
         if list_name == "dist_runs":
             for rec in entries:
                 if rec["n_rows"] >= FLOOR_MIN_ROWS:
-                    n_checked += 1
+                    n_checked += 2
                     s = rec["speedup_copart_vs_blind"]
                     if s < MIN_COPART_SPEEDUP:
                         errors.append(
                             f"dist_runs label={rec['label']!r}: "
                             f"co-partitioned reuse speedup {s:.2f} below "
                             f"the {MIN_COPART_SPEEDUP:.1f}x floor "
+                            f"({rec['n_rows']} rows)")
+                    ms = rec["mesh_vs_single"]
+                    if ms < MIN_MESH_VS_SINGLE * (1.0 - QUERY_NOISE_TOL):
+                        errors.append(
+                            f"dist_runs label={rec['label']!r}: plain "
+                            f"mesh vs single-device {ms:.2f} below the "
+                            f"{MIN_MESH_VS_SINGLE:.1f}x floor "
                             f"({rec['n_rows']} rows)")
 
         # acceptance floors for delta-refresh entries (ISSUE 5)
