@@ -24,7 +24,8 @@ from benchmarks import (core_bench, delta_bench, distributed_bench,  # noqa
                         filter_sweep, heuristics, policy_bench,
                         prefix_reuse_bench, projection_sweep,
                         semantic_reuse_bench, service_bench,
-                        store_overhead, subjob_reuse, whole_job_reuse)
+                        store_overhead, subjob_reuse, tier_bench,
+                        whole_job_reuse)
 
 SUITES = {
     "core": core_bench.run,
@@ -33,6 +34,7 @@ SUITES = {
     "dist": distributed_bench.run,
     "delta": delta_bench.run,
     "service": service_bench.run,
+    "tier": tier_bench.run,
     "fig9_whole_job": whole_job_reuse.run,
     "fig10_12_subjob": subjob_reuse.run,
     "fig11_overhead": store_overhead.run,
@@ -43,7 +45,8 @@ SUITES = {
 }
 
 # suites that accept a --label (snapshots into BENCH_core.json)
-LABELLED = {"core", "policy", "semantic", "dist", "delta", "service"}
+LABELLED = {"core", "policy", "semantic", "dist", "delta", "service",
+            "tier"}
 
 
 def main() -> None:

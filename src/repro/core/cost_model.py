@@ -72,7 +72,20 @@ class CostModel:
         self.load_bw = load_bandwidth_bytes_s
         self.store_bw = store_bandwidth_bytes_s
         self.shuffle_bw = shuffle_bandwidth_bytes_s
+        # per-tier load bandwidths (DESIGN.md §15): "disk" mirrors
+        # load_bw (kept as the attribute every existing caller prices
+        # with); "host" and "remote" start at priors spanning the
+        # realistic orders of magnitude and are replaced by calibration
+        # from tier-tagged samples.  Each tier calibrates ONLY from its
+        # own samples — the satellite-3 contract that a device-cache
+        # hit (or a remote fetch) can never skew the disk estimate.
+        self.tier_bw: Dict[str, float] = {
+            "host": 8e9, "remote": 1e8, "device": 5e10}
         self.fixed_io_s = fixed_io_s
+        # fixed per-request latency of the remote tier (calibrated from
+        # request-level samples when available; the prior models an
+        # object-store round trip)
+        self.remote_latency_s = 0.02
         self.alpha = ewma_alpha
         self.halflife_s = reuse_halflife_s
         self.prior_uses = prior_uses
@@ -81,25 +94,88 @@ class CostModel:
         self.op_stats: Dict[str, OpStats] = {}
 
     # ------------------------------------------------------------- IO price
+    #: minimum sampled byte mass before a measurement replaces a prior
+    MIN_SAMPLE_BYTES = 1 << 16
+
     def calibrate_io(self, store) -> None:
         """Pull measured (bytes, seconds) transfer totals from an
-        `ArtifactStore` and update the bandwidth estimates.  Disk-read
-        samples take priority: cache/memory hits are near-free, and a
-        blended average would price cold reads at ~zero.  A pure
-        in-memory store (no disk samples) calibrates from its memory
-        samples — there, loads genuinely are that cheap.  A minimum
-        sample mass guards against one-off timing flukes."""
+        `ArtifactStore` and update the per-tier bandwidth estimates.
+        Samples are tagged by the tier that served them (DESIGN.md
+        §15), and each tier calibrates only from its own tag — a
+        blended average would price cold reads at ~zero the moment
+        cache hits dominate traffic.  The one sanctioned crossover:
+        a store with NO disk backend (``has_disk`` false) may stand its
+        memory samples in for the load bandwidth, because there loads
+        genuinely are that cheap.  Disk-backed stores must never do
+        this — a probe mix of many cache hits and a few small disk
+        reads would otherwise calibrate cold reads at memory speed and
+        skew every refresh_decision built on it.  A minimum sample mass
+        guards against one-off timing flukes."""
         io = getattr(store, "io_stats", None)
         if io is None:
             return
         s = io() if callable(io) else io
-        if s.get("load_bytes", 0) > 1 << 16 and s.get("load_s", 0.0) > 0:
-            self.load_bw = s["load_bytes"] / s["load_s"]
-        elif s.get("memload_bytes", 0) > 1 << 16 \
-                and s.get("memload_s", 0.0) > 0:
-            self.load_bw = s["memload_bytes"] / s["memload_s"]
-        if s.get("store_bytes", 0) > 1 << 16 and s.get("store_s", 0.0) > 0:
-            self.store_bw = s["store_bytes"] / s["store_s"]
+
+        def bw(prefix):
+            if (s.get(prefix + "_bytes", 0) > self.MIN_SAMPLE_BYTES
+                    and s.get(prefix + "_s", 0.0) > 0):
+                return s[prefix + "_bytes"] / s[prefix + "_s"]
+            return None
+
+        disk = bw("load")
+        if disk is not None:
+            self.load_bw = disk
+        elif not s.get("has_disk", False):
+            mem = bw("memload")
+            if mem is not None:
+                self.load_bw = mem
+        mem = bw("memload")
+        if mem is not None:
+            self.tier_bw["device"] = mem
+        host = bw("hostload")
+        if host is not None:
+            self.tier_bw["host"] = host
+        remote = bw("remoteload")
+        if remote is not None:
+            self.tier_bw["remote"] = remote
+        st = bw("store")
+        if st is not None:
+            self.store_bw = st
+
+    def tier_bandwidth(self, tier: str) -> float:
+        if tier == "disk":
+            return self.load_bw
+        return self.tier_bw.get(tier, self.load_bw)
+
+    def tier_load_cost_s(self, nbytes: int, tier: str) -> float:
+        """Price of serving ``nbytes`` from a given tier.  Remote reads
+        carry the per-request latency on top of the bandwidth term —
+        that latency, not the bytes, is what batching and prefetch
+        amortize."""
+        fixed = self.fixed_io_s
+        if tier == "remote":
+            fixed += self.remote_latency_s
+        return fixed + nbytes / max(self.tier_bandwidth(tier), 1.0)
+
+    def should_promote(self, nbytes: int, from_tier: str, to_tier: str,
+                       expected_uses: float = None) -> bool:
+        """Admission pricing for a tier transition (DESIGN.md §15):
+        copy an artifact from ``from_tier`` to the warmer ``to_tier``
+        iff the predicted read savings over its expected future uses
+        exceed the one-time migration cost (one read from the source
+        plus one write at store bandwidth).  The same inequality
+        prices demotion in reverse: a demotion is free capacity-wise
+        and only costs the write, so callers demote unless the entry
+        is about to be read again from the cold tier."""
+        if expected_uses is None:
+            expected_uses = max(self.prior_uses * 2.0, 1.0)
+        save = (self.tier_load_cost_s(nbytes, from_tier)
+                - self.tier_load_cost_s(nbytes, to_tier))
+        if save <= 0.0:
+            return False
+        migrate = (self.tier_load_cost_s(nbytes, from_tier)
+                   + self.store_cost_s(nbytes))
+        return save * expected_uses > migrate
 
     def load_cost_s(self, nbytes: int) -> float:
         return self.fixed_io_s + nbytes / max(self.load_bw, 1.0)

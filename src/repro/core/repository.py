@@ -353,7 +353,7 @@ class Repository:
 
     # ------------------------------------------------- incremental refresh
     def maintain(self, catalog, engine, store=None,
-                 mode: str = "auto") -> Dict[str, int]:
+                 mode: str = "auto", only=None) -> Dict[str, int]:
         """Incremental maintenance sweep (DESIGN.md §12): where
         ``evict_stale`` (rule R4) deletes every entry whose source
         versions moved, this refreshes append-stale entries from the
@@ -363,6 +363,10 @@ class Repository:
         arbitrates refresh-now / lazy (refresh on next probe) / delete
         (``mode="auto"``; ``"refresh"``/``"lazy"``/``"delete"`` force
         the decision — "delete" reproduces the pre-§12 behavior).
+        ``only`` (a set of artifact names) restricts the sweep to those
+        entries — the speculative prefetcher's ahead-of-arrival refresh
+        (DESIGN.md §15) targets just the artifacts it predicts the next
+        probe will touch, leaving the rest for the regular sweep.
         Returns counters {refreshed, lazy, deleted}."""
         from .delta import derive_refresh
         with self._lock:
@@ -370,6 +374,8 @@ class Repository:
             report = {"refreshed": 0, "lazy": 0, "deleted": 0}
             drop = []
             for e in list(self.entries):
+                if only is not None and e.artifact not in only:
+                    continue
                 stale = any(catalog.version(ds) != v
                             for ds, v in e.source_versions.items())
                 if not stale:

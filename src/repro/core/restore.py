@@ -177,14 +177,16 @@ class ReStore:
         return results, RunReport(reports, degraded=self._degraded,
                                   flush_failures=flush_failures)
 
-    def maintain(self, mode: str = "auto") -> Dict[str, int]:
+    def maintain(self, mode: str = "auto", only=None) -> Dict[str, int]:
         """Incremental maintenance entry point (DESIGN.md §12): refresh
         append-stale repository artifacts from their dataset deltas
         through this driver's engine; entries with no derivable delta
         plan fall back to R4 deletion.  Call after `Catalog.append`/
-        `Catalog.register` churn, where `evict_stale` used to be."""
+        `Catalog.register` churn, where `evict_stale` used to be.
+        ``only`` restricts the sweep to a set of artifact names (the
+        prefetcher's ahead-of-arrival refresh, DESIGN.md §15)."""
         return self.repo.maintain(self.catalog, self.engine, self.store,
-                                  mode=mode)
+                                  mode=mode, only=only)
 
     # ------------------------------------------------------------------
     def _degrade(self, e: ArtifactError) -> None:

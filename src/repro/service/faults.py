@@ -1,14 +1,25 @@
 """Seeded fault injection for the artifact store (DESIGN.md §13).
 
-The store calls ``injector.on(point, name, path=...)`` at its four IO
+The store calls ``injector.on(point, name, path=...)`` at its IO
 choke points:
 
   ``read``       top of every disk load attempt;
   ``write``      before an artifact's data files are written;
   ``publish``    after the tmp dir is fully written, before the atomic
                  rename — a crash here leaves an orphaned ``.tmp-*``;
-  ``published``  after the rename, with ``path`` = the final dir — the
-                 only point where the injector may corrupt real bytes.
+  ``published``  after the rename, with ``path`` = the final dir — a
+                 point where the injector may corrupt real bytes.
+
+The remote object tier (DESIGN.md §15) adds three more:
+
+  ``remote_read``       before a remote blob fetch;
+  ``remote_write``      before the blob upload of a demotion — a crash
+                        here leaves the disk copy authoritative;
+  ``remote_published``  after the atomic remote publish, BEFORE the
+                        local delete that commits the demotion, with
+                        ``path`` = the blob file — a crash here leaves
+                        both copies (reopen reconciles to the remote),
+                        and corruptions land on the published blob.
 
 A ``FaultSchedule`` decides, from a seed, which calls fault and how.
 Determinism is the contract: the same seed produces the same fault
@@ -109,14 +120,15 @@ class FaultInjector:
             kind = self.schedule.draw(point)
             if kind is None:
                 return
-            # a corruption can only land on published bytes; a raise
-            # after publish would be attributed to a write that in fact
-            # succeeded — both are no-ops, decided (and NOT counted)
-            # atomically with the draw so the budget stays exact
-            if kind in CORRUPT_KINDS and (point != "published"
-                                          or path is None):
+            # a corruption can only land on published bytes (local dir
+            # or remote blob); a raise after publish would be attributed
+            # to a write that in fact succeeded — both are no-ops,
+            # decided (and NOT counted) atomically with the draw so the
+            # budget stays exact
+            published = point in ("published", "remote_published")
+            if kind in CORRUPT_KINDS and (not published or path is None):
                 return
-            if kind in RAISE_KINDS and point == "published":
+            if kind in RAISE_KINDS and published:
                 return
             self.injected[kind] = self.injected.get(kind, 0) + 1
         if kind in CORRUPT_KINDS:
@@ -132,6 +144,12 @@ class FaultInjector:
     # ------------------------------------------------------- corruption
     def _corrupt(self, kind: str, path: str) -> None:
         rng = random.Random(self.schedule.seed ^ 0x5EED)
+        if os.path.isfile(path):
+            # remote tier: ``path`` is the published blob file itself.
+            # "manifest" garbles the JSON header region (first bytes),
+            # the others damage the body like their npz counterparts.
+            self._corrupt_file(kind, path, rng)
+            return
         if kind == "manifest":
             mpath = os.path.join(path, "manifest.json")
             try:
@@ -159,6 +177,32 @@ class FaultInjector:
                 if kind == "truncate":
                     f.truncate(rng.randrange(1, size))
                 else:                       # flip one byte
+                    i = rng.randrange(size)
+                    f.seek(i)
+                    b = f.read(1)
+                    f.seek(i)
+                    f.write(bytes([b[0] ^ 0xFF]))
+        except OSError:
+            pass
+
+    @staticmethod
+    def _corrupt_file(kind: str, path: str, rng: random.Random) -> None:
+        try:
+            size = os.path.getsize(path)
+            if size < 16:
+                return
+            with open(path, "r+b") as f:
+                if kind == "truncate":
+                    f.truncate(rng.randrange(1, size))
+                elif kind == "manifest":
+                    # damage the self-describing header: any byte in the
+                    # first 64 makes the JSON (or magic) unreadable
+                    i = rng.randrange(min(64, size))
+                    f.seek(i)
+                    b = f.read(1)
+                    f.seek(i)
+                    f.write(bytes([b[0] ^ 0xFF]))
+                else:                       # flip one byte anywhere
                     i = rng.randrange(size)
                     f.seek(i)
                     b = f.read(1)

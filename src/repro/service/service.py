@@ -104,6 +104,8 @@ class ReStoreService:
                  retry_cap_s: float = 0.25,
                  journal=None,
                  maintain_interval_s: Optional[float] = None,
+                 prefetch_interval_s: Optional[float] = None,
+                 prefetch_k: int = 4,
                  job_overhead_s: float = 0.0,
                  **driver_kwargs):
         self.catalog = catalog
@@ -161,6 +163,25 @@ class ReStoreService:
                 target=self._maintain_loop, args=(float(maintain_interval_s),),
                 name="restore-maintainer", daemon=True)
             self._maintain_thread.start()
+        # speculative prefetcher (DESIGN.md §15): mines the store's read
+        # log on a background cadence beside the maintenance loop and
+        # warms predicted-hot artifacts; its ahead-of-arrival refresh
+        # reuses maintain_now restricted to the predicted names
+        self.prefetcher = None
+        self._prefetch_stop = threading.Event()
+        self._prefetch_thread = None
+        if prefetch_interval_s is not None:
+            from ..store.prefetch import SpeculativePrefetcher
+            self.prefetcher = SpeculativePrefetcher(
+                store, k=prefetch_k,
+                maintainer=lambda names: self.repo.maintain(
+                    self.catalog, self._drivers[0].engine, self.store,
+                    only=names))
+            self._prefetch_thread = threading.Thread(
+                target=self._prefetch_loop,
+                args=(float(prefetch_interval_s),),
+                name="restore-prefetcher", daemon=True)
+            self._prefetch_thread.start()
 
     # ------------------------------------------------------------ submit
     def submit(self, plan: PhysicalPlan, tenant: str = "default",
@@ -354,6 +375,20 @@ class ReStoreService:
         return self.repo.maintain(self.catalog, self._drivers[0].engine,
                                   self.store, mode=mode)
 
+    def _prefetch_loop(self, interval_s: float) -> None:
+        while not self._prefetch_stop.wait(interval_s):
+            try:
+                self.prefetch_now()
+            except Exception:
+                pass                    # speculation must not die either
+
+    def prefetch_now(self) -> list:
+        """One prefetch cycle: drain the read log, warm the predicted
+        top-k.  Safe to call with no prefetcher configured (no-op)."""
+        if self.prefetcher is None:
+            return []
+        return self.prefetcher.prefetch()
+
     # ------------------------------------------------------------- admin
     def stats(self) -> dict:
         with self._cv:
@@ -364,6 +399,8 @@ class ReStoreService:
                                  for k, v in self._tenant_stats.items()}
         out["store"] = dict(self.store.stats)
         out["quarantined"] = self.store.stats["quarantined"]
+        if self.prefetcher is not None:
+            out["prefetch"] = self.prefetcher.stats()
         return out
 
     def stop(self, drain: bool = True, timeout: Optional[float] = None):
@@ -389,6 +426,9 @@ class ReStoreService:
         if self._maintain_thread is not None:
             self._maintain_stop.set()
             self._maintain_thread.join(timeout=5)
+        if self._prefetch_thread is not None:
+            self._prefetch_stop.set()
+            self._prefetch_thread.join(timeout=5)
         for w in self._workers:
             w.join(timeout=10)
         flush_err = None

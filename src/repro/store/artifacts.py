@@ -208,7 +208,15 @@ class DeviceCache:
 
     Thread-safe: the write-behind flusher swaps in the compacted version
     of an artifact after publishing it, concurrently with reader
-    ``get``s on the engine thread."""
+    ``get``s on the engine thread.
+
+    ``on_evict`` (optional callable ``(name, table, nbytes)``) is
+    invoked for every entry squeezed out by byte pressure — the store
+    demotes those to the pinned-host tier (DESIGN.md §15) and prunes
+    derived-view metadata.  It fires AFTER the cache lock is released
+    (callbacks touch other locks) and only for pressure evictions:
+    explicit ``drop``/``drop_prefix`` mean the data is stale or deleted,
+    which must not demote."""
 
     def __init__(self, max_bytes: int):
         self.max_bytes = max_bytes
@@ -218,6 +226,20 @@ class DeviceCache:
         self.total_bytes = 0
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.on_evict = None
+
+    @property
+    def bytes_used(self) -> int:
+        return self.total_bytes
+
+    def recount(self) -> int:
+        """Independent recount of the byte ledger from the entries
+        themselves.  The accounting audits assert
+        ``total_bytes == recount()`` after mutation storms — a drifted
+        ledger silently mis-sizes every eviction decision."""
+        with self._lock:
+            return sum(nb for _t, nb in self._entries.values())
 
     def get(self, name: str) -> Optional[Table]:
         with self._lock:
@@ -229,34 +251,61 @@ class DeviceCache:
             self.hits += 1
             return ent[0]
 
-    def _put_locked(self, name: str, table: Table, nbytes: int):
+    def _put_locked(self, name: str, table: Table, nbytes: int) -> list:
+        """Insert/replace under the lock.  Returns the entries evicted
+        by byte pressure so the caller can run ``on_evict`` outside the
+        lock.  A replaced entry's bytes are subtracted before the new
+        size is added — an append that grows an artifact through put()
+        charges exactly the delta, never both versions."""
+        evicted = []
         if name in self._entries:
             self.total_bytes -= self._entries.pop(name)[1]
-        # an artifact larger than the whole cache is not cached at all
+        # an artifact larger than the whole cache is not cached at all —
+        # but it still displaces nothing, so it is reported as one
+        # eviction of itself (the host tier may hold what device cannot)
         if nbytes > self.max_bytes:
-            return
+            self.evictions += 1
+            return [(name, table, nbytes)]
         self._entries[name] = (table, nbytes)
         self._entries.move_to_end(name)
         self.total_bytes += nbytes
         while (self.total_bytes > self.max_bytes
                and len(self._entries) > 1):
-            _, (_t, nb) = self._entries.popitem(last=False)
+            k, (t, nb) = self._entries.popitem(last=False)
             self.total_bytes -= nb
+            self.evictions += 1
+            evicted.append((k, t, nb))
+        return evicted
+
+    def _notify(self, evicted: list) -> None:
+        cb = self.on_evict
+        if cb is None:
+            return
+        for name, table, nb in evicted:
+            try:
+                cb(name, table, nb)
+            except Exception:
+                pass        # a demotion failure must never break a put
 
     def put(self, name: str, table: Table, nbytes: int):
         with self._lock:
-            self._put_locked(name, table, nbytes)
+            evicted = self._put_locked(name, table, nbytes)
+        self._notify(evicted)
 
     def swap_if(self, name: str, expected: Optional[Table],
                 table: Table, nbytes: int):
         """Atomically insert ``table`` only if the current entry is
-        ``expected`` (or absent): the flusher uses this so its compacted
-        version can never clobber a newer put that raced past it."""
+        ``expected``: the flusher uses this so its compacted version can
+        never clobber a newer put that raced past it.  An entry the LRU
+        already evicted is NOT resurrected — re-inserting it would evict
+        recently-used entries to make room for one nobody asked for
+        (it is on disk now; the next get re-caches it on demand)."""
         with self._lock:
             ent = self._entries.get(name)
-            if ent is not None and ent[0] is not expected:
+            if ent is None or ent[0] is not expected:
                 return
-            self._put_locked(name, table, nbytes)
+            evicted = self._put_locked(name, table, nbytes)
+        self._notify(evicted)
 
     def drop(self, name: str):
         with self._lock:
@@ -448,47 +497,87 @@ class _WriteBehind:
                 self._cv.notify_all()
 
 
+# Derived re-partitioned views kept per base artifact: repeated probes
+# with distinct n_parts (mesh resizes) must not accumulate views without
+# bound — each is a full-size copy competing with real artifacts for
+# device bytes, and its metadata used to leak even after the cache
+# evicted the view.
+DEFAULT_MAX_DERIVED_VIEWS = 4
+
+
 class ArtifactStore:
     def __init__(self, root: Optional[str] = None,
                  cache_bytes: int = DEFAULT_CACHE_BYTES,
                  queue_depth: int = DEFAULT_QUEUE_DEPTH,
                  write_behind: bool = True,
                  fault_injector=None,
-                 tmp_gc_age_s: float = DEFAULT_TMP_GC_AGE_S):
+                 tmp_gc_age_s: float = DEFAULT_TMP_GC_AGE_S,
+                 host_bytes: int = 0,
+                 remote=None,
+                 cost_model=None,
+                 max_derived_views: int = DEFAULT_MAX_DERIVED_VIEWS):
         self.root = root
         self.mem: Dict[str, Table] = {}
         self.meta: Dict[str, dict] = {}
         self.aliases: Dict[str, str] = {}
-        # service.faults.FaultInjector (or None): called at the four IO
-        # choke points ("read"/"write"/"publish"/"published") so the
-        # fault suites can model torn writes, crashes and flaky IO
-        # without monkeypatching store internals (DESIGN.md §13)
+        # service.faults.FaultInjector (or None): called at the IO choke
+        # points ("read"/"write"/"publish"/"published" on the disk tier,
+        # "remote_read"/"remote_write"/"remote_published" on the remote
+        # tier) so the fault suites can model torn writes, crashes and
+        # flaky IO without monkeypatching store internals (DESIGN.md §13)
         self.fault_injector = fault_injector
         self.tmp_gc_age_s = float(tmp_gc_age_s)
         # robustness counters (fault suites + service stats assert these)
         self.stats = {"quarantined": 0, "read_retries": 0,
-                      "write_retries": 0, "tmp_gc": 0, "corrupt_on_open": 0}
+                      "write_retries": 0, "tmp_gc": 0, "corrupt_on_open": 0,
+                      "demotions": 0, "promotions": 0, "host_demotions": 0,
+                      "remote_reconciled": 0}
         # guards compound metadata transitions (put's record-then-submit,
-        # delete's cancel-then-unlink, alias rewrites) against concurrent
-        # service workers.  The flusher thread must NEVER take this lock:
-        # delete() holds it while waiting out an in-flight write.
+        # delete's cancel-then-unlink, alias rewrites, append's
+        # read-merge-write) against concurrent service workers.  The
+        # flusher thread must NEVER take this lock: delete() holds it
+        # while waiting out an in-flight write.
         self._lock = threading.RLock()
         # measured transfer samples (bytes moved, seconds on the caller's
-        # clock) — the repository cost model calibrates its load/store
-        # bandwidth estimates from these (DESIGN.md §9).  put() samples
-        # only the synchronous (on-critical-path) portion: with
+        # clock) — the repository cost model calibrates its PER-TIER
+        # bandwidth estimates from these (DESIGN.md §9/§15).  put()
+        # samples only the synchronous (on-critical-path) portion: with
         # write-behind that is exactly what materialization costs a job.
-        # Loads are sampled per tier: disk reads under load_*, device-
-        # cache/memory hits under memload_* — blending them would let a
-        # few microsecond cache hits inflate the bandwidth estimate and
-        # price cold reads at ~zero.
+        # Loads are tagged by the tier that served them: disk reads under
+        # load_*, device-cache/memory hits under memload_*, pinned-host
+        # promotions under hostload_*, remote fetches under remoteload_*.
+        # Blending tiers would let a few microsecond cache hits inflate
+        # the bandwidth estimate and price cold reads at ~zero (or a
+        # remote fetch drag the disk estimate to ~nothing).
         self._io = {"load_bytes": 0, "load_s": 0.0,
                     "memload_bytes": 0, "memload_s": 0.0,
+                    "hostload_bytes": 0, "hostload_s": 0.0,
+                    "remoteload_bytes": 0, "remoteload_s": 0.0,
                     "store_bytes": 0, "store_s": 0.0}
         self.cache = DeviceCache(cache_bytes)
+        self.cache.on_evict = self._on_device_evict
+        # pinned-host tier: numpy payloads demoted from device (§15)
+        if host_bytes > 0:
+            from .tiers import HostCache
+            self.host = HostCache(host_bytes)
+        else:
+            self.host = None
+        # remote object-store tier (tiers.RemoteObjectStore or None)
+        self.remote = remote
+        # duck-typed CostModel for admission/demotion pricing; optional —
+        # passed in by the driver/service, never imported (store must not
+        # depend on core)
+        self.cost_model = cost_model
+        self.max_derived_views = int(max_derived_views)
+        # recent read log (name, tier) — the speculative prefetcher
+        # mines this for popularity; deque ops are atomic under the GIL
+        self.read_log: "collections.deque" = collections.deque(maxlen=1024)
         # effective partitioning of cached re-partitioned views
         # (keyed by the derived "<name>#repart..." cache names)
         self._repart_meta: Dict[str, dict] = {}
+        # insertion order of live derived views per base artifact, the
+        # bound's eviction order (oldest view goes first)
+        self._derived_order: Dict[str, list] = {}
         self._wb = _WriteBehind(self, queue_depth) if write_behind else None
         if root:
             os.makedirs(root, exist_ok=True)
@@ -501,6 +590,8 @@ class ArtifactStore:
                     # loaded: reap it now rather than advertise it
                     self.stats["corrupt_on_open"] += 1
                     shutil.rmtree(self._path(name), ignore_errors=True)
+        if self.remote is not None:
+            self._reconcile_remote()
 
     def _resolve(self, name: str) -> str:
         seen = set()
@@ -668,12 +759,353 @@ class ArtifactStore:
         name = self._resolve(name)
         if name in self.mem or name in self.cache or name in self.meta:
             return True
-        return bool(self.root) and os.path.exists(
-            os.path.join(self._path(name), "manifest.json"))
+        if self.host is not None and name in self.host:
+            return True
+        if bool(self.root) and os.path.exists(
+                os.path.join(self._path(name), "manifest.json")):
+            return True
+        return self.remote is not None and self.remote.exists(
+            self._remote_key(name))
 
     def io_stats(self) -> dict:
-        """Measured transfer totals for cost-model calibration."""
-        return dict(self._io)
+        """Measured transfer totals for cost-model calibration.
+        ``has_disk`` tells the calibrator whether memory samples may
+        stand in for the load bandwidth (pure in-memory store) or must
+        not (disk-backed store whose cache hits would otherwise be
+        blended into the cold-read estimate)."""
+        out = dict(self._io)
+        out["has_disk"] = bool(self.root)
+        return out
+
+    # ------------------------------------------------------------ tiers
+    def _remote_key(self, name: str) -> str:
+        return _encode_name(name)
+
+    def _on_device_evict(self, name: str, table: Table, nbytes: int):
+        """Pressure-eviction hook from the device cache: derived views
+        just drop their metadata (they are rebuildable); real artifacts
+        demote their columns to the pinned-host tier so the next get is
+        a host→device transfer, not a disk read (DESIGN.md §15)."""
+        if "#repart" in name:
+            self._repart_meta.pop(name, None)
+            base = name.split("#repart", 1)[0]
+            order = self._derived_order.get(base)
+            if order and name in order:
+                order.remove(name)
+            return
+        if self.host is None or name not in self.meta:
+            return
+        if self.cost_model is not None and not self._admit_host(name, nbytes):
+            return
+        payload = {n: np.asarray(c) for n, c in table.columns.items()}
+        payload["__valid__"] = np.asarray(table.valid)
+        self.host.put(name, payload)
+        self.stats["host_demotions"] += 1
+
+    def _admit_host(self, name: str, nbytes: int) -> bool:
+        """Price host admission with the attached cost model: demote
+        only when re-reading from the serving tier below (disk or
+        remote) would cost more than the host round-trip saves.  With
+        no model attached, always admit (the host tier is a cache —
+        wrong answers cost time, never correctness)."""
+        below = "remote" if (self.remote is not None
+                             and self.remote.exists(self._remote_key(name))
+                             and not (self.root and os.path.exists(
+                                 os.path.join(self._path(name),
+                                              "manifest.json")))) else "disk"
+        try:
+            return bool(self.cost_model.should_promote(nbytes, below, "host"))
+        except Exception:
+            return True
+
+    def residency(self, name: str) -> Optional[str]:
+        """The warmest tier currently able to serve ``name``:
+        "device" / "host" / "memory" / "pending" / "disk" / "remote",
+        or None when the artifact does not exist anywhere."""
+        name = self._resolve(name)
+        if name in self.cache:
+            return "device"
+        if self.host is not None and name in self.host:
+            return "host"
+        if name in self.mem:
+            return "memory"
+        if self._wb is not None and self._wb.pending(name) is not None:
+            return "pending"
+        if self.root and os.path.exists(
+                os.path.join(self._path(name), "manifest.json")):
+            return "disk"
+        if self.remote is not None and self.remote.exists(
+                self._remote_key(name)):
+            return "remote"
+        return None
+
+    def authoritative_tier(self, name: str) -> Optional[str]:
+        """The durable tier that OWNS the artifact's bytes ("disk",
+        "remote", "memory", or "pending" while a write-behind flush is
+        in flight).  The tier-transition property suite asserts this is
+        always exactly one of disk/remote for flushed artifacts —
+        device/host copies are caches, never owners."""
+        name = self._resolve(name)
+        on_disk = bool(self.root) and os.path.exists(
+            os.path.join(self._path(name), "manifest.json"))
+        on_remote = self.remote is not None and self.remote.exists(
+            self._remote_key(name))
+        if on_disk and on_remote:
+            return "conflict"        # only reachable mid-crash; reopen heals
+        if on_disk:
+            return "disk"
+        if on_remote:
+            return "remote"
+        if name in self.mem:
+            return "memory"
+        if self._wb is not None and self._wb.pending(name) is not None:
+            return "pending"
+        return None
+
+    def _reconcile_remote(self) -> None:
+        """Open-time reconciliation of the disk/remote ownership
+        invariant after a crash mid-transition (DESIGN.md §15).  Rule:
+        a verified remote copy wins — a crash between remote publish
+        and local delete was a *demotion about to commit*, so the lower
+        tier's copy becomes authoritative (the satellite contract); an
+        unverifiable remote blob is garbage from a torn upload and is
+        deleted, leaving the disk copy authoritative.  Remote-only
+        artifacts are indexed via one batched header fetch, so a cold
+        open pays a single round-trip, not one per artifact."""
+        self.remote.gc_tmp()
+        keys = self.remote.keys()
+        if not keys:
+            return
+        from .tiers import verify_blob
+        heads = self.remote.head_many(keys)
+        for key in keys:
+            name = _decode_name(key)
+            on_disk = bool(self.root) and os.path.exists(
+                os.path.join(self._path(name), "manifest.json"))
+            if on_disk:
+                try:
+                    ok = verify_blob(self.remote.get_object(key))
+                except KeyError:
+                    continue
+                if ok:
+                    shutil.rmtree(self._path(name), ignore_errors=True)
+                    self.meta.pop(name, None)
+                else:
+                    self.remote.delete(key)
+                    continue
+                self.stats["remote_reconciled"] += 1
+            head = heads.get(key)
+            if head is None:
+                # unreadable header: torn blob with no disk copy either
+                # way — if disk survived we already kept it above;
+                # otherwise the artifact is lost and must not advertise
+                if not (self.root and os.path.exists(
+                        os.path.join(self._path(name), "manifest.json"))):
+                    self.remote.delete(key)
+                    self.stats["corrupt_on_open"] += 1
+                continue
+            m = dict(head["manifest"])
+            m["tier"] = "remote"
+            self.meta[name] = m
+
+    def demote_to_remote(self, name: str) -> dict:
+        """Move a disk-resident artifact to the remote tier: package
+        its data files column-compressed into one blob, publish it
+        atomically, THEN remove the local copy.  Crash windows resolve
+        at reopen via ``_reconcile_remote`` — before remote publish the
+        disk copy is untouched; after it, the remote copy is
+        authoritative.  Returns the updated meta."""
+        from .tiers import encode_artifact_blob, table_files_to_payloads
+        name = self._resolve(name)
+        with self._lock:
+            self.flush()                 # the disk copy must be complete
+            m = self.meta.get(name)
+            if m is None or not self.root or not os.path.exists(
+                    os.path.join(self._path(name), "manifest.json")):
+                raise ArtifactMissingError(name)
+            if self.remote is None:
+                raise ArtifactError(name, "store has no remote tier")
+            part = m.get("partitioning")
+            files = ([f"shard_{p:05d}.npz" for p in range(part["n_parts"])]
+                     if part is not None else ["data.npz"])
+            manifest = self._read_manifest(name)
+            payloads = table_files_to_payloads(self._path(name), files)
+            blob = encode_artifact_blob(manifest, payloads)
+            key = self._remote_key(name)
+            self._fault("remote_write", name)
+            blob_path = self.remote.put_object(key, blob)
+            # the commit point: a crash BEFORE this fault leaves both
+            # copies (reopen completes the demotion); the local delete
+            # below finishes it in-process
+            self._fault("remote_published", name, path=blob_path)
+            shutil.rmtree(self._path(name), ignore_errors=True)
+            m = dict(manifest)
+            m["tier"] = "remote"
+            self.meta[name] = m
+            # the device/host copies remain valid caches of the same
+            # bytes; drop nothing
+            self.stats["demotions"] += 1
+            return m
+
+    def promote_from_remote(self, name: str) -> dict:
+        """Rehydrate a remote artifact onto local disk (atomic publish,
+        fresh checksums — npz serialization is not byte-stable, values
+        are), then delete the remote copy so exactly one durable tier
+        owns it.  A crash between local publish and remote delete
+        leaves both; reopen's verified-remote-wins rule re-demotes,
+        which is safe (never lossy) and retried on next access."""
+        name = self._resolve(name)
+        with self._lock:
+            if self.remote is None:
+                raise ArtifactError(name, "store has no remote tier")
+            if not self.root:
+                raise ArtifactError(name, "store has no disk tier")
+            key = self._remote_key(name)
+            manifest, files = self._fetch_remote(name, key)
+            final = self._path(name)
+            tmp = tempfile.mkdtemp(dir=self.root, prefix=".tmp-")
+            try:
+                checks = {}
+                for fn, cols in sorted(files.items()):
+                    data = _npz_bytes(cols)
+                    checks[fn] = zlib.crc32(data)
+                    with open(os.path.join(tmp, fn), "wb") as f:
+                        f.write(data)
+                manifest = dict(manifest)
+                manifest["checksums"] = checks
+                manifest.pop("tier", None)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                self._fault("publish", name, path=tmp)
+                self._publish(tmp, final)
+            except SimulatedCrash:
+                raise
+            except Exception:
+                shutil.rmtree(tmp, ignore_errors=True)
+                raise
+            self._fault("published", name, path=final)
+            self.remote.delete(key)
+            self.meta[name] = manifest
+            self.stats["promotions"] += 1
+            return manifest
+
+    def _fetch_remote(self, name: str, key: str):
+        """Fetch + decode one remote blob (fault-injectable; checksum
+        damage quarantines like the disk tier's)."""
+        from .tiers import decode_artifact_blob
+        self._fault("remote_read", name)
+        try:
+            blob = self.remote.get_object(key)
+        except KeyError:
+            raise ArtifactMissingError(name)
+        try:
+            return decode_artifact_blob(blob)
+        except ValueError as e:
+            raise CorruptArtifactError(name, f"remote blob: {e}")
+
+    def _table_from_payloads(self, manifest: dict, files: dict) -> Table:
+        import jax.numpy as jnp
+        part = manifest.get("partitioning")
+        order = ([f"shard_{p:05d}.npz" for p in range(part["n_parts"])]
+                 if part is not None else sorted(files))
+        cols: Dict[str, list] = {}
+        valids = []
+        for fn in order:
+            z = files[fn]
+            valids.append(z["__valid__"])
+            for n, a in z.items():
+                if n != "__valid__":
+                    cols.setdefault(n, []).append(a)
+        return Table({n: jnp.asarray(np.concatenate(bs))
+                      for n, bs in cols.items()},
+                     jnp.asarray(np.concatenate(valids)))
+
+    def _load_remote(self, name: str) -> Table:
+        key = self._remote_key(name)
+        manifest, files = self._fetch_remote(name, key)
+        m = dict(manifest)
+        m["tier"] = "remote"
+        self.meta.setdefault(name, m)
+        t = self._table_from_payloads(manifest, files)
+        # priced promotion: rehydrate to disk when the model predicts
+        # future reads make the (cheaper) disk tier worth the write
+        if (self.cost_model is not None and self.root):
+            try:
+                if self.cost_model.should_promote(
+                        m.get("nbytes", t.nbytes()), "remote", "disk"):
+                    self.promote_from_remote(name)
+            except (ArtifactError, OSError):
+                pass        # promotion is an optimization, never required
+        return t
+
+    def prewarm(self, names) -> list:
+        """Warm artifacts into the device (and host) caches ahead of a
+        predicted probe — the speculative prefetcher's workhorse.
+        Remote-resident artifacts are fetched with ONE batched request;
+        authoritative tiers are untouched (warming is a cache fill, not
+        a migration).  Returns the names actually warmed."""
+        from .tiers import decode_artifact_blob
+        warmed = []
+        remote_batch = []
+        for name in names:
+            name = self._resolve(name)
+            r = self.residency(name)
+            if r in (None, "device"):
+                continue
+            if r == "remote":
+                remote_batch.append(name)
+                continue
+            try:
+                self.get(name)
+                warmed.append(name)
+            except ArtifactError:
+                continue
+        if remote_batch and self.remote is not None:
+            blobs = self.remote.get_many(
+                [self._remote_key(n) for n in remote_batch])
+            for name in remote_batch:
+                blob = blobs.get(self._remote_key(name))
+                if blob is None:
+                    continue
+                try:
+                    manifest, files = decode_artifact_blob(blob)
+                except ValueError:
+                    continue
+                t = self._table_from_payloads(manifest, files)
+                m = dict(manifest)
+                m["tier"] = "remote"
+                self.meta.setdefault(name, m)
+                self.cache.put(name, t, t.nbytes())
+                warmed.append(name)
+        return warmed
+
+    def drop_caches(self) -> int:
+        """Release every cached (non-authoritative) copy: device
+        entries, derived views (plus their metadata), and the pinned
+        host tier.  Durable tiers are untouched — the next ``get``
+        reloads from memory/disk/remote.  Models external memory
+        pressure (other tenants claiming the accelerator between this
+        stream's bursts); the tier benchmark uses it as the working-set
+        flush that separates tenant bursts.  Returns entries dropped."""
+        with self._lock:
+            with self.cache._lock:
+                names = list(self.cache._entries)
+            n = len(names)
+            for k in names:
+                self.cache.drop(k)
+                if "#repart" in k:
+                    self._repart_meta.pop(k, None)
+                    order = self._derived_order.get(
+                        k.split("#repart", 1)[0])
+                    if order and k in order:
+                        order.remove(k)
+            if self.host is not None:
+                with self.host._lock:
+                    hnames = list(self.host._entries)
+                n += len(hnames)
+                for k in hnames:
+                    self.host.drop(k)
+        return n
 
     def put(self, name: str, table: Table,
             partitioning: Optional[dict] = None) -> dict:
@@ -771,25 +1203,55 @@ class ArtifactStore:
         return meta
 
     def get(self, name: str) -> Table:
+        """Serve ``name`` from the warmest tier holding it — device →
+        pinned host → memory backend → pending write → disk → remote —
+        promoting into the device cache on the way up and tagging the
+        IO sample with the serving tier (DESIGN.md §15)."""
         t_start = time.perf_counter()
         name = self._resolve(name)
         hit = self.cache.get(name)
         if hit is not None:
             self._sample_load(name, t_start, tier="memload")
             return hit
+        if self.host is not None:
+            payload = self.host.get(name)
+            if payload is not None:
+                import jax.numpy as jnp
+                cols = {n: jnp.asarray(a) for n, a in payload.items()
+                        if n != "__valid__"}
+                t = Table(cols, jnp.asarray(payload["__valid__"]))
+                self.cache.put(name, t, t.nbytes())
+                self._sample_load(name, t_start, tier="hostload")
+                return t
         if name in self.mem:
             self._sample_load(name, t_start, tier="memload")
             return self.mem[name]
-        if not self.root:
+        if not self.root and self.remote is None:
             raise ArtifactMissingError(name)
         if self._wb is not None:
             pend = self._wb.pending(name)
             if pend is not None:         # evicted from cache, not yet on disk
                 return pend
-        t = self._load_disk_retry(name)
-        self.cache.put(name, t, t.nbytes())
-        self._sample_load(name, t_start, tier="load")
-        return t
+        if self.root and os.path.exists(
+                os.path.join(self._path(name), "manifest.json")):
+            t = self._load_disk_retry(name)
+            self.cache.put(name, t, t.nbytes())
+            self._sample_load(name, t_start, tier="load")
+            return t
+        if self.remote is not None and self.remote.exists(
+                self._remote_key(name)):
+            t = self._load_remote(name)
+            self.cache.put(name, t, t.nbytes())
+            self._sample_load(name, t_start, tier="remoteload")
+            return t
+        if self.root:
+            # preserve the disk path's missing/corrupt classification
+            # (and its retry ladder) for artifacts nothing else holds
+            t = self._load_disk_retry(name)
+            self.cache.put(name, t, t.nbytes())
+            self._sample_load(name, t_start, tier="load")
+            return t
+        raise ArtifactMissingError(name)
 
     def _load_disk_retry(self, name: str) -> Table:
         """Disk load with capped-backoff retries over transient OSErrors
@@ -878,6 +1340,30 @@ class ArtifactStore:
         for k in [k for k in self._repart_meta
                   if k.startswith(name + "#repart")]:
             del self._repart_meta[k]
+        self._derived_order.pop(name, None)
+
+    def _register_derived(self, name: str, ck: str, part: dict,
+                          table: Table) -> None:
+        """Record one derived re-partitioned view, bounded to
+        ``max_derived_views`` live views per base artifact (oldest view
+        evicted first).  Each view is a full-size copy of the artifact:
+        probes cycling through distinct mesh sizes used to accumulate
+        one copy per size, and the metadata leaked even after the
+        device cache evicted the view's data."""
+        with self._lock:
+            order = self._derived_order.setdefault(name, [])
+            # prune entries whose data the device cache already evicted
+            # (the eviction hook cleared their metadata)
+            order[:] = [k for k in order if k in self._repart_meta]
+            if ck in order:
+                order.remove(ck)
+            while len(order) >= max(self.max_derived_views, 1):
+                old = order.pop(0)
+                self._repart_meta.pop(old, None)
+                self.cache.drop(old)
+            self._repart_meta[ck] = part
+            order.append(ck)
+        self.cache.put(ck, table, table.nbytes())
 
     def column_names(self, name: str) -> Tuple[str, ...]:
         """Column names of a stored artifact WITHOUT materializing it:
@@ -932,7 +1418,7 @@ class ArtifactStore:
             return self.get(name), stored
         ck = f"{name}#repart{n_parts}:{','.join(keys)}"
         hit = self.cache.get(ck)
-        if hit is not None:
+        if hit is not None and ck in self._repart_meta:
             return hit, self._repart_meta[ck]
         t = self.get(name)
         pid, _counts, shard_cap = _partition_layout(t, keys, n_parts)
@@ -949,8 +1435,7 @@ class ArtifactStore:
         part = {"keys": keys, "n_parts": int(n_parts), "scheme": "hash_mod",
                 "shard_capacity": int(shard_cap),
                 "shard_rows": [int(c) for c in counts]}
-        self._repart_meta[ck] = part
-        self.cache.put(ck, t2, t2.nbytes())
+        self._register_derived(name, ck, part, t2)
         return t2, part
 
     def _sample_load(self, name: str, t_start: float, tier: str):
@@ -958,6 +1443,8 @@ class ArtifactStore:
         if m is not None:
             self._io[tier + "_bytes"] += m["nbytes"]
             self._io[tier + "_s"] += time.perf_counter() - t_start
+        if "#repart" not in name:
+            self.read_log.append((name, tier))
 
     # ------------------------------------------------------------- refresh
     def append(self, name: str, delta: Table) -> dict:
@@ -974,16 +1461,22 @@ class ArtifactStore:
         value — an in-place refresh must never leave a stale view
         servable."""
         name = self._resolve(name)
-        if self.partitioning(name) is not None:
-            return self.merge_shards(name, delta)
-        old = self.get(name)
-        if set(old.names) != set(delta.names):
-            raise ValueError(f"append({name!r}): schema mismatch")
-        import jax.numpy as jnp
-        cols = {n: jnp.concatenate([old.col(n), delta.col(n)], axis=0)
-                for n in old.names}
-        valid = jnp.concatenate([old.valid, delta.valid])
-        return self.put(name, Table(cols, valid))
+        # the read-merge-write must be atomic against a concurrent
+        # append/merge of the same artifact (service workers share one
+        # store): interleaved get→merge→put loses whichever delta
+        # merged first.  RLock: put() retakes it reentrantly; the
+        # flusher never takes it, so write-behind backpressure drains.
+        with self._lock:
+            if self.partitioning(name) is not None:
+                return self.merge_shards(name, delta)
+            old = self.get(name)
+            if set(old.names) != set(delta.names):
+                raise ValueError(f"append({name!r}): schema mismatch")
+            import jax.numpy as jnp
+            cols = {n: jnp.concatenate([old.col(n), delta.col(n)], axis=0)
+                    for n in old.names}
+            valid = jnp.concatenate([old.valid, delta.valid])
+            return self.put(name, Table(cols, valid))
 
     def merge_shards(self, name: str, delta: Table, merge_fn=None) -> dict:
         """Shard-local refresh of a partitioned artifact: each ``delta``
@@ -998,6 +1491,14 @@ class ArtifactStore:
         partition property, so the layout validation in `put` re-checks
         the claim."""
         name = self._resolve(name)
+        self._lock.acquire()     # same atomicity contract as append()
+        try:
+            return self._merge_shards_locked(name, delta, merge_fn)
+        finally:
+            self._lock.release()
+
+    def _merge_shards_locked(self, name: str, delta: Table,
+                             merge_fn=None) -> dict:
         part = self.partitioning(name)
         if part is None:
             raise ValueError(
@@ -1067,12 +1568,16 @@ class ArtifactStore:
             self.mem.pop(name, None)
             self.meta.pop(name, None)
             self.cache.drop(name)
+            if self.host is not None:
+                self.host.drop(name)
             # derived re-partitioned views of the artifact are stale too
             self._drop_derived(name)
             if self.root:
                 p = self._path(name)
                 if os.path.exists(p):
                     shutil.rmtree(p, ignore_errors=True)
+            if self.remote is not None:
+                self.remote.delete(self._remote_key(name))
 
     def quarantine(self, name: str):
         """Remove a damaged/missing artifact everywhere and count it.
@@ -1090,6 +1595,15 @@ class ArtifactStore:
         recovery uses this to reconcile entries against what actually
         survived on disk."""
         name = self._resolve(name)
+        if self.remote is not None and not (self.root and os.path.exists(
+                os.path.join(self._path(name), "manifest.json"))):
+            key = self._remote_key(name)
+            if self.remote.exists(key):
+                from .tiers import verify_blob
+                try:
+                    return verify_blob(self.remote.get_object(key))
+                except KeyError:
+                    return False
         if not self.root:
             return name in self.mem
         try:

@@ -94,6 +94,13 @@ class StreamConfig:
     append_every: int = 0
     append_frac: float = 0.10
     maintain: str = "auto"
+    # speculative prefetch (DESIGN.md §15): mine the store's read log
+    # for zipfian recurrence, warm the predicted top-k between events
+    # (off the timed window, like a background service cadence), and on
+    # append churn delta-refresh the predicted-hot artifacts ahead of
+    # the next probe instead of inside it
+    prefetch: bool = False
+    prefetch_k: int = 4
 
 
 @dataclasses.dataclass
@@ -119,6 +126,9 @@ class StreamResult:
     evictions: int
     rejections: int
     refreshes: int = 0            # delta-refreshed entries (§12)
+    prefetch_hits: int = 0        # warmed artifacts actually probed (§15)
+    prefetched: int = 0           # warm attempts
+    refreshed_ahead: int = 0      # delta-refreshes run pre-arrival (§15)
 
     @property
     def n_reused_total(self) -> int:
@@ -188,6 +198,14 @@ def run_stream(mode: str, cfg: StreamConfig,
     shared_rs = None
     if mode != "off":
         shared_rs = _make_restore(mode, catalog, store, budget_bytes)
+    prefetcher = None
+    if cfg.prefetch and shared_rs is not None:
+        from ..store.prefetch import SpeculativePrefetcher
+        prefetcher = SpeculativePrefetcher(
+            store, k=cfg.prefetch_k,
+            maintainer=(None if cfg.maintain == "delete" else
+                        lambda names: shared_rs.maintain(
+                            mode=cfg.maintain, only=names)))
 
     events: List[StreamEvent] = []
     cum: List[float] = []
@@ -213,6 +231,12 @@ def run_stream(mode: str, cfg: StreamConfig,
             if shared_rs is not None:
                 if cfg.maintain == "delete":
                     shared_rs.repo.evict_stale(catalog)
+                elif prefetcher is not None:
+                    # ahead-of-arrival: refresh the predicted-hot
+                    # entries first (and re-warm them), then sweep the
+                    # rest through the regular path
+                    prefetcher.observe_append("page_views")
+                    shared_rs.maintain(mode=cfg.maintain)
                 else:
                     shared_rs.maintain(mode=cfg.maintain)
         name, build = templates[tidx]
@@ -231,11 +255,19 @@ def run_stream(mode: str, cfg: StreamConfig,
         events.append(StreamEvent(i, tenant, name, wall,
                                   report.n_executed, report.n_reused))
         peak_bytes = max(peak_bytes, rs.store.total_bytes())
+        if prefetcher is not None:
+            # between events = the background cadence: consume the read
+            # log and warm the predicted-next artifacts off the clock
+            prefetcher.prefetch()
 
     repo = shared_rs.repo if shared_rs is not None else Repository()
+    pstats = prefetcher.stats() if prefetcher is not None else {}
     return StreamResult(
         mode=mode, budget_bytes=budget_bytes, events=events,
         cum_wall_s=cum, total_wall_s=total, peak_store_bytes=peak_bytes,
         repo_entries=len(repo), repo_bytes=repo.total_stored_bytes(),
         evictions=repo.evictions, rejections=repo.rejections,
-        refreshes=repo.refreshes)
+        refreshes=repo.refreshes,
+        prefetch_hits=pstats.get("hits", 0),
+        prefetched=pstats.get("prefetched", 0),
+        refreshed_ahead=pstats.get("refreshed_ahead", 0))

@@ -4,10 +4,14 @@ Covers the storage-hierarchy contracts from DESIGN.md §3: LRU eviction at
 the byte bound, ``flush()`` as the durability barrier, crash safety (an
 artifact is fully published or absent, never torn), alias resolution
 through the cache, the injective name encoding, and manifest/data
-capacity agreement.
+capacity agreement.  Plus the ISSUE 8 accounting sweep: byte-exact
+ledger under append/merge mutation storms, atomic read-merge-write
+under concurrent appends, and swap_if never resurrecting an evicted
+entry.
 """
 import json
 import os
+import threading
 
 import numpy as np
 import pytest
@@ -192,6 +196,107 @@ def test_synchronous_mode_still_supported(tmp_path):
     assert os.path.exists(os.path.join(store._path("x"), "data.npz"))
     store.flush()                        # no-op, must not hang
     store.close()
+
+
+# ------------------------------------- accounting under mutation (ISSUE 8)
+
+
+def test_append_byte_accounting_stays_exact_under_pressure(tmp_path):
+    """Repeated in-place appends against a tight budget: the ledger
+    must equal an independent recount after every merge, every recorded
+    entry size must equal its live table's bytes (eviction ordering is
+    priced on post-merge sizes), and the bound must hold."""
+    t0 = _table(64)
+    store = ArtifactStore(root=str(tmp_path / "a"),
+                          cache_bytes=6 * t0.nbytes())
+    store.put("x", t0)
+    for i in range(6):
+        store.append("x", _table(64, seed=i + 1))
+        store.put(f"filler{i}", _table(64, seed=100 + i))  # pressure
+        c = store.cache
+        assert c.total_bytes == c.recount(), \
+            f"ledger drifted after append {i}"
+        with c._lock:
+            entries = list(c._entries.items())
+        for k, (tab, nb) in entries:
+            assert nb == tab.nbytes(), \
+                f"{k}: recorded {nb} != live table {tab.nbytes()}"
+        assert c.total_bytes <= c.max_bytes
+    # the appended artifact's cached copy is the merged value
+    got = store.get("x")
+    assert int(np.asarray(got.num_valid())) == 7 * 64
+    store.close()
+
+
+def test_concurrent_appends_merge_both_deltas(tmp_path):
+    """Two racing appends of the same artifact: the read-merge-write
+    must be atomic.  Pre-fix, thread A read the pre-B value, merged its
+    own delta and put — silently erasing B's committed delta."""
+    store = ArtifactStore(root=str(tmp_path / "a"))
+    store.put("x", Table.from_numpy({"a": np.array([0], np.int64)}))
+    a_entered = threading.Event()
+    b_done = threading.Event()
+    real_get = store.get
+
+    def slow_get(name, *args, **kw):
+        t = real_get(name, *args, **kw)
+        if (threading.current_thread().name == "appender-a"
+                and not a_entered.is_set()):
+            a_entered.set()
+            b_done.wait(timeout=0.5)   # pre-fix: B commits in this gap
+        return t
+
+    store.get = slow_get
+
+    def run_a():
+        store.append("x", Table.from_numpy({"a": np.array([1], np.int64)}))
+
+    def run_b():
+        a_entered.wait(timeout=2.0)
+        store.append("x", Table.from_numpy({"a": np.array([2], np.int64)}))
+        b_done.set()
+
+    ta = threading.Thread(target=run_a, name="appender-a")
+    tb = threading.Thread(target=run_b, name="appender-b")
+    ta.start()
+    tb.start()
+    ta.join(timeout=10)
+    tb.join(timeout=10)
+    assert not ta.is_alive() and not tb.is_alive()
+    store.get = real_get
+    rows = sorted(store.get("x").to_numpy()["a"].tolist())
+    assert rows == [0, 1, 2], f"a concurrent append was lost: {rows}"
+    store.close()
+
+
+def test_swap_if_does_not_resurrect_evicted_entry():
+    """The flusher publishes a compacted table via swap_if after the
+    LRU already evicted the entry: re-inserting would evict
+    recently-used entries for one nobody asked for, and double-count
+    its bytes against the budget."""
+    t = _table(64)
+    nb = t.nbytes()
+    cache = DeviceCache(max_bytes=2 * nb)
+    cache.put("a", t, nb)
+    cache.put("b", _table(64, seed=1), nb)
+    cache.put("c", _table(64, seed=2), nb)     # evicts "a"
+    assert "a" not in cache
+    cache.swap_if("a", t, _table(64, seed=3), nb)
+    assert "a" not in cache, "evicted entry must not be resurrected"
+    assert "b" in cache and "c" in cache
+    assert cache.total_bytes == cache.recount() == 2 * nb
+
+
+def test_oversized_put_reports_eviction_and_keeps_ledger_clean():
+    t = _table(64)
+    cache = DeviceCache(max_bytes=10)
+    seen = []
+    cache.on_evict = lambda name, tab, nb: seen.append((name, nb))
+    cache.put("big", t, t.nbytes())
+    assert "big" not in cache and cache.total_bytes == 0
+    assert seen == [("big", t.nbytes())], \
+        "oversized artifacts must still offer themselves for demotion"
+    assert cache.recount() == 0
 
 
 # ------------------------------------------------- naming & manifest fixes

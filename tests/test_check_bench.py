@@ -50,6 +50,12 @@ def _doc(**overrides):
             "goodput_scaling_4w_vs_1w": 1.8,
             "singleflight_hits": 21, "dup_executions": 0,
         }],
+        "tier_runs": [{
+            "label": "full", "n_rows": 1 << 16, "n_artifacts": 24,
+            "probes": 120, "t_off_s": 1.9, "t_on_s": 1.3,
+            "speedup_prefetch": 1.46, "prefetch_hit_rate": 0.94,
+            "cold_start_s": 0.25, "identical": True,
+        }],
     }
     base.update(overrides)
     return base
@@ -195,3 +201,47 @@ def test_query_reuse_floor_exempts_small_sizes(tmp_path):
     doc["runs"][0]["n_rows"] = 1 << 12
     doc["runs"][0]["queries"]["L7"]["reuse_speedup"] = 0.60
     assert _run(tmp_path, doc) == 0
+
+
+# --------------------------------------------------- tier_runs (ISSUE 8)
+
+
+def test_tier_prefetch_floor_violation_fails(tmp_path):
+    doc = _doc()
+    doc["tier_runs"][0]["speedup_prefetch"] = 1.1       # < 1.3 at full
+    assert _run(tmp_path, doc) == 1
+
+
+def test_tier_prefetch_floor_exempts_small_sizes(tmp_path):
+    doc = _doc()
+    doc["tier_runs"][0]["n_rows"] = 1 << 12             # CI smoke size
+    doc["tier_runs"][0]["speedup_prefetch"] = 1.1
+    assert _run(tmp_path, doc) == 0
+
+
+def test_tier_bit_identity_gates_at_any_size(tmp_path):
+    doc = _doc()
+    doc["tier_runs"][0]["n_rows"] = 1 << 12             # even CI smoke
+    doc["tier_runs"][0]["identical"] = False
+    assert _run(tmp_path, doc) == 1
+
+
+def test_tier_cold_start_must_complete(tmp_path):
+    doc = _doc()
+    doc["tier_runs"][0]["cold_start_s"] = None
+    assert _run(tmp_path, doc) == 1
+
+
+def test_tier_missing_field_fails(tmp_path):
+    doc = _doc()
+    del doc["tier_runs"][0]["prefetch_hit_rate"]
+    assert _run(tmp_path, doc) == 1
+
+
+def test_tier_same_label_regression_fails(tmp_path):
+    doc = _doc()
+    second = json.loads(json.dumps(doc["tier_runs"][0]))
+    doc["tier_runs"][0]["speedup_prefetch"] = 2.5
+    second["speedup_prefetch"] = 1.5                    # above floor,
+    doc["tier_runs"].append(second)                     # but a >20% drop
+    assert _run(tmp_path, doc) == 1

@@ -125,6 +125,102 @@ def test_sigkill_mid_publish_recovers_clean(tmp_path):
     assert results_identical(baseline, got)
 
 
+# ------------------------------------- SIGKILL mid-demotion (DESIGN.md §15)
+
+_DEMOTE_CHILD = r"""
+import sys, time
+import numpy as np
+from repro.dataflow.table import Table
+from repro.store.artifacts import ArtifactStore
+from repro.store.tiers import RemoteObjectStore
+
+root, remote_root, marker = sys.argv[1], sys.argv[2], sys.argv[3]
+
+
+class StallAfterRemotePublish:
+    # blob published to the remote tier, local delete not yet issued —
+    # a SIGKILL here leaves BOTH durable copies
+    def on(self, point, name, path=None):
+        if point == "remote_published":
+            import os
+            with open(marker + ".tmp", "w") as f:
+                f.write(name)
+            os.replace(marker + ".tmp", marker)
+            time.sleep(600)
+
+
+store = ArtifactStore(root=root,
+                      remote=RemoteObjectStore(remote_root),
+                      write_behind=False,
+                      fault_injector=StallAfterRemotePublish())
+rng = np.random.default_rng(0)
+t = Table.from_numpy({"k": rng.integers(0, 99, 512).astype(np.int64),
+                      "v": rng.random(512).astype(np.float32)})
+store.put("victim", t)
+print("PUT", flush=True)
+store.demote_to_remote("victim")   # stalls mid-demotion; parent SIGKILLs
+"""
+
+
+def _crc_table(t):
+    import zlib
+
+    import numpy as np
+    d = t.to_numpy()
+    acc = 0
+    for c in sorted(d):
+        acc = zlib.crc32(np.ascontiguousarray(d[c]).tobytes(),
+                         zlib.crc32(c.encode(), acc))
+    return acc
+
+
+def test_sigkill_mid_demotion_lower_tier_wins(tmp_path):
+    """ISSUE 8 satellite: a kill between the remote publish and the
+    local delete leaves both copies on disk — reopen must resolve
+    ownership to the LOWER tier (verified remote wins) and serve the
+    exact bytes."""
+    root = str(tmp_path / "store")
+    remote_root = str(tmp_path / "remote")
+    marker = str(tmp_path / "mid_demote")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _DEMOTE_CHILD, root, remote_root, marker],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+    deadline = time.time() + 300
+    while not os.path.exists(marker):
+        if proc.poll() is not None:
+            _, err = proc.communicate()
+            raise AssertionError(
+                f"child died before the kill point:\n{err.decode()}")
+        assert time.time() < deadline, "child never reached mid-demotion"
+        time.sleep(0.01)
+    os.kill(proc.pid, signal.SIGKILL)
+    proc.wait(timeout=60)
+
+    from repro.store.artifacts import _encode_name
+    from repro.store.tiers import RemoteObjectStore
+    # the kill really landed mid-transition: both durable copies exist
+    assert os.path.exists(os.path.join(root, _encode_name("victim"),
+                                       "manifest.json"))
+    remote = RemoteObjectStore(remote_root)
+    assert remote.exists(_encode_name("victim"))
+
+    store = ArtifactStore(root=root, remote=remote, write_behind=False)
+    assert store.stats["remote_reconciled"] == 1
+    assert store.authoritative_tier("victim") == "remote"
+    assert not os.path.exists(os.path.join(root, _encode_name("victim"),
+                                           "manifest.json"))
+    import numpy as np
+    rng = np.random.default_rng(0)
+    from repro.dataflow.table import Table
+    expect = Table.from_numpy(
+        {"k": rng.integers(0, 99, 512).astype(np.int64),
+         "v": rng.random(512).astype(np.float32)})
+    assert _crc_table(store.get("victim")) == _crc_table(expect)
+    store.close()
+
+
 # ------------------------------------------------- journal unit behavior
 
 

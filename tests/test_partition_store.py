@@ -167,6 +167,79 @@ def test_memory_backend_partitioned_roundtrip():
     s.close()
 
 
+def test_derived_views_are_bounded_per_artifact():
+    """ISSUE 8: probes cycling through distinct mesh sizes used to
+    accumulate one full-size derived view (plus metadata) per size,
+    unboundedly.  At most ``max_derived_views`` live views may exist
+    per base artifact, oldest evicted first."""
+    t = make_table(seed=11)
+    s = ArtifactStore(root=tempfile.mkdtemp(prefix="part_store_"))
+    s.put("a", t)
+    for p in (2, 4, 8, 16, 32, 64, 128, 256, 512):
+        s.get_partitioned("a", ["k"], p)
+    live = [k for k in s._repart_meta if k.startswith("a#repart")]
+    assert len(live) <= s.max_derived_views, \
+        f"unbounded derived-view accumulation: {len(live)} views"
+    # the survivors are the most recent P values
+    assert {int(k.split("#repart")[1].split(":")[0]) for k in live} \
+        == {64, 128, 256, 512}
+    assert s.cache.total_bytes == s.cache.recount()
+    s.close()
+
+
+def test_repartition_roundtrip_after_append_serves_merged_rows():
+    """ISSUE 8: P=4 -> P=8 -> P=4 after an in-place append.  Every view
+    served after the append must contain the merged rows — a
+    pre-append snapshot view is a silent wrong answer — and returning
+    to an already-seen P must rebuild, not resurrect."""
+    t = make_table(n=160, seed=12)
+    s = ArtifactStore(root=tempfile.mkdtemp(prefix="part_store_"))
+    s.put("a", t)
+    tp, _ = block_partitioned(s, "a", ["k"], 4)
+    s.put("art", tp, partitioning={"keys": ["k"], "n_parts": 4})
+    v4a, _ = s.get_partitioned("art", ["k"], 4)   # stored property path
+    v8a, part8a = s.get_partitioned("art", ["k"], 8)
+    delta = make_table(n=40, seed=13)
+    s.append("art", delta)
+
+    from repro.dataflow.table import concat_tables
+    merged = concat_tables([t, delta])
+    v8b, part8b = s.get_partitioned("art", ["k"], 8)
+    assert v8b is not v8a, "stale pre-append view served"
+    assert_rows_equal(merged, v8b)
+    assert_block_layout(v8b, part8b)
+    v4b, part4b = s.get_partitioned("art", ["k"], 4)
+    assert_rows_equal(merged, v4b)
+    v8c, _ = s.get_partitioned("art", ["k"], 8)   # back again: still merged
+    assert_rows_equal(merged, v8c)
+    assert s.cache.total_bytes == s.cache.recount()
+    s.close()
+
+
+def test_derived_view_metadata_pruned_on_cache_eviction():
+    """A derived view squeezed out of the device cache by byte pressure
+    must not leave metadata behind (the stale-hit guard would otherwise
+    keep a dangling entry forever, and the hit path could pair fresh
+    metadata with missing data)."""
+    t = make_table(n=400, seed=14)
+    s = ArtifactStore(root=tempfile.mkdtemp(prefix="part_store_"),
+                      cache_bytes=3 * t.nbytes())
+    s.put("a", t)
+    s.get_partitioned("a", ["k"], 8)
+    ck = [k for k in s._repart_meta if k.startswith("a#repart")][0]
+    # pressure: unrelated puts evict the view from the device cache
+    for i in range(4):
+        s.put(f"f{i}", make_table(n=400, seed=20 + i))
+    assert ck not in s.cache
+    assert ck not in s._repart_meta, \
+        "evicted view's metadata leaked"
+    # and the next request rebuilds correctly
+    v, part = s.get_partitioned("a", ["k"], 8)
+    assert_rows_equal(t, v)
+    assert_block_layout(v, part)
+    s.close()
+
+
 def test_partitioning_dataclass_covers_and_aligns():
     p = Partitioning(("a",), 8)
     assert p.covers(("a", "b"), 8)

@@ -245,6 +245,74 @@ def test_calibrate_io_prefers_disk_over_cache_hits(tmp_path):
     store.close()
 
 
+def test_calibrate_io_disk_backed_never_blends_memory_speed(tmp_path):
+    """ISSUE 8: a disk-backed store whose probe mix is many cache hits
+    plus a few tiny disk reads (below the sample-mass floor) must keep
+    its prior load bandwidth, NOT fall back to memory-speed samples —
+    pre-fix calibrate_io blended the tiers and priced cold reads at
+    ~zero, so refresh_decision always chose 'load'."""
+    store = ArtifactStore(root=str(tmp_path))
+    small = Table.from_numpy({"a": np.zeros(64, dtype=np.int64)})
+    store.put("tiny", small)
+    store.flush()
+    store.cache.drop("tiny")
+    store.get("tiny")                   # disk read below MIN_SAMPLE_BYTES
+    big = Table.from_numpy({"a": np.zeros(1 << 16, dtype=np.int64)})
+    store.put("hot", big)
+    for _ in range(20):
+        store.get("hot")                # cache hits: huge memload mass
+    io = store.io_stats()
+    assert io["has_disk"]
+    assert io["memload_bytes"] > CostModel.MIN_SAMPLE_BYTES
+    assert io["load_bytes"] <= CostModel.MIN_SAMPLE_BYTES
+    cm = CostModel(load_bandwidth_bytes_s=123.0)
+    cm.calibrate_io(store)
+    assert cm.load_bw == 123.0, \
+        "disk-backed store calibrated cold loads from cache-hit samples"
+    # the device tier still calibrates from those same samples
+    assert cm.tier_bw["device"] == pytest.approx(
+        io["memload_bytes"] / io["memload_s"])
+    store.close()
+
+
+def test_calibrate_io_separates_tier_bandwidths():
+    """Mixed traffic across host and remote tiers must produce distinct
+    per-tier bandwidths — no blending into one 'load' number."""
+    samples = {
+        "has_disk": True,
+        "load_bytes": 1 << 20, "load_s": 1.0,        # disk:   ~1 MB/s
+        "memload_bytes": 1 << 24, "memload_s": 0.1,  # device: fast
+        "hostload_bytes": 1 << 22, "hostload_s": 1.0,
+        "remoteload_bytes": 1 << 20, "remoteload_s": 4.0,
+        "store_bytes": 1 << 20, "store_s": 2.0,
+    }
+
+    class FakeStore:
+        io_stats = samples
+    cm = CostModel()
+    cm.calibrate_io(FakeStore())
+    assert cm.load_bw == pytest.approx((1 << 20) / 1.0)
+    assert cm.tier_bw["device"] == pytest.approx((1 << 24) / 0.1)
+    assert cm.tier_bw["host"] == pytest.approx((1 << 22) / 1.0)
+    assert cm.tier_bw["remote"] == pytest.approx((1 << 20) / 4.0)
+    assert cm.store_bw == pytest.approx((1 << 20) / 2.0)
+    # pricing reflects the separation: remote adds latency on top of bw
+    assert cm.tier_load_cost_s(1 << 20, "remote") \
+        > cm.tier_load_cost_s(1 << 20, "disk") \
+        > cm.tier_load_cost_s(1 << 20, "device")
+
+
+def test_calibrate_io_legacy_stats_keep_memload_fallback():
+    """A stats dict that predates the tier tags (no ``has_disk`` key)
+    is a memory-backed store by construction: memload samples may
+    stand in for the load bandwidth there."""
+    class Legacy:
+        io_stats = {"memload_bytes": 1 << 20, "memload_s": 0.5}
+    cm = CostModel(load_bandwidth_bytes_s=123.0)
+    cm.calibrate_io(Legacy())
+    assert cm.load_bw == pytest.approx((1 << 20) / 0.5)
+
+
 # ------------------------------------------------- executor cost attribution
 
 def test_attribute_op_costs_sums_to_wall_on_single_sink():

@@ -348,3 +348,51 @@ def test_stats_shape():
         assert st["per_tenant"]["t0"]["completed"] == 1
     finally:
         svc.stop()
+
+
+# --------------------------------------------- speculative prefetch (§15)
+
+
+def test_prefetch_loop_warms_repeated_reads(tmp_path):
+    svc = _service(tmp_path, n_workers=1, prefetch_interval_s=0.02,
+                   prefetch_k=4)
+    try:
+        for _ in range(3):
+            svc.run(pigmix.L3("sum"), timeout=120)
+        _wait(lambda: svc.stats()["prefetch"]["observed"] > 0)
+        st = svc.stats()["prefetch"]
+        for k in ("hits", "observed", "prefetched", "hit_rate",
+                  "predictions", "refreshed_ahead"):
+            assert k in st
+        assert st["predictions"], "repeated reads must rank something"
+        warmed = svc.prefetch_now()
+        assert isinstance(warmed, list)
+    finally:
+        svc.stop()
+
+
+def test_prefetch_disabled_by_default():
+    svc = _service(n_workers=1)
+    try:
+        assert svc.prefetcher is None
+        assert svc.prefetch_now() == []
+        assert "prefetch" not in svc.stats()
+    finally:
+        svc.stop()
+
+
+def test_stream_reports_prefetch_counters():
+    from repro.workloads.stream import StreamConfig, run_stream
+    cfg = StreamConfig(n_events=10, n_tenants=2, n_rows=512,
+                       append_every=4, seed=5, prefetch=True,
+                       prefetch_k=4)
+    res = run_stream("keep", cfg)
+    assert res.prefetch_hits > 0, "zipfian replay predictions must land"
+    assert res.refreshed_ahead > 0, \
+        "append churn must refresh hot artifacts ahead of arrival"
+    # prefetch must never change results: same stream without it
+    base = run_stream("keep", StreamConfig(n_events=10, n_tenants=2,
+                                           n_rows=512, append_every=4,
+                                           seed=5))
+    assert len(base.events) == len(res.events)
+    assert base.n_reused_total == res.n_reused_total

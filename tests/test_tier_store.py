@@ -1,0 +1,446 @@
+"""Tiered artifact store (DESIGN.md §15): the device → host → disk →
+remote hierarchy, the single-authoritative-tier invariant, bit-exact
+promotion/demotion round-trips (including the cold-tier columnar
+codec), crash windows inside a demotion, the remote object store's
+batched operations, and the speculative prefetcher's signal mining.
+"""
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.dataflow.table import Table
+from repro.service.faults import FaultInjector, FaultSchedule
+from repro.store.artifacts import (ArtifactStore, CorruptArtifactError,
+                                   SimulatedCrash)
+from repro.store.prefetch import SpeculativePrefetcher
+from repro.store.tiers import (HostCache, RemoteObjectStore,
+                               decode_artifact_blob, encode_artifact_blob,
+                               verify_blob)
+from repro.train.compression import decode_array, encode_array
+
+DTYPES = (np.int32, np.int64, np.uint8, np.float32, np.float64)
+
+
+def _table(n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    cols = {f"c_{dt.__name__}": rng.integers(0, 100, n).astype(dt)
+            for dt in DTYPES}
+    return Table.from_numpy(cols)
+
+
+def _crc(t: Table) -> int:
+    d = t.to_numpy()
+    acc = 0
+    for c in sorted(d):
+        acc = zlib.crc32(np.ascontiguousarray(d[c]).tobytes(),
+                         zlib.crc32(c.encode(), acc))
+    return acc
+
+
+def _tiered_store(tmp_path, latency_s=0.0, **kw):
+    remote = RemoteObjectStore(str(tmp_path / "remote"),
+                               latency_s=latency_s)
+    return ArtifactStore(root=str(tmp_path / "store"), remote=remote,
+                         write_behind=False, **kw), remote
+
+
+# ----------------------------------------------------- lossless codec
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_codec_roundtrip_bit_exact(dt):
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 255, 1000).astype(dt)
+    b = decode_array(encode_array(a))
+    assert b.dtype == a.dtype and np.array_equal(a, b)
+
+
+def test_codec_roundtrip_empty_and_noncontiguous():
+    assert decode_array(encode_array(np.empty(0, np.float32))).size == 0
+    a = np.arange(100, dtype=np.int64)[::2]          # non-contiguous view
+    assert np.array_equal(decode_array(encode_array(a)), a)
+
+
+def test_blob_roundtrip_and_corruption_detected():
+    manifest = {"name": "x", "nbytes": 123}
+    files = {"data.npz": {"a": np.arange(256, dtype=np.int64),
+                          "__valid__": np.ones(256, dtype=bool)}}
+    blob = encode_artifact_blob(manifest, files)
+    m2, f2 = decode_artifact_blob(blob)
+    assert m2 == manifest
+    assert np.array_equal(f2["data.npz"]["a"], files["data.npz"]["a"])
+    assert verify_blob(blob)
+    # flip one payload byte -> checksum mismatch
+    body = bytearray(blob)
+    body[-10] ^= 0xFF
+    with pytest.raises(ValueError):
+        decode_artifact_blob(bytes(body))
+    # truncate -> structural damage
+    with pytest.raises(ValueError):
+        decode_artifact_blob(blob[:len(blob) - 7])
+    assert not verify_blob(blob[:8])
+
+
+# ------------------------------------------------------- host tier LRU
+
+
+def test_host_cache_lru_eviction_and_accounting():
+    h = HostCache(max_bytes=3000)
+    pay = lambda i: {"a": np.full(100, i, dtype=np.int64)}  # 800 B each
+    for i in range(4):
+        h.put(f"p{i}", pay(i))
+    assert "p0" not in h and "p1" in h            # oldest evicted first
+    assert h.total_bytes == h.recount() <= 3000
+    h.get("p1")                                    # touch: now most recent
+    h.put("p4", pay(4))
+    assert "p1" in h and "p2" not in h
+    # overwrite replaces, never double-counts
+    h.put("p4", pay(5))
+    assert h.total_bytes == h.recount()
+    # oversized payloads are not cacheable and never corrupt the ledger
+    h.put("huge", {"a": np.zeros(1000, dtype=np.int64)})
+    assert "huge" not in h
+    assert h.total_bytes == h.recount()
+
+
+# ------------------------------------------------ remote object store
+
+
+def test_remote_batched_ops_charge_one_request(tmp_path):
+    r = RemoteObjectStore(str(tmp_path))
+    blobs = {f"k{i}": encode_artifact_blob(
+        {"name": f"k{i}"}, {"d": {"a": np.arange(i + 1, dtype=np.int32)}})
+        for i in range(5)}
+    for k, b in blobs.items():
+        r.put_object(k, b)
+    base = r.stats["requests"]
+    got = r.get_many(list(blobs) + ["missing"])
+    assert r.stats["requests"] == base + 1        # ONE round-trip
+    assert sorted(got) == sorted(blobs)
+    assert all(got[k] == blobs[k] for k in blobs)
+    heads = r.head_many(list(blobs))
+    assert r.stats["requests"] == base + 2
+    assert all(heads[k]["manifest"]["name"] == k for k in blobs)
+    with pytest.raises(KeyError):
+        r.get_object("missing")
+    assert r.keys() == sorted(blobs)
+    # orphaned tmp uploads (a killed demotion) are reaped, not listed
+    open(os.path.join(str(tmp_path), ".tmp-orphan"), "wb").close()
+    assert r.keys() == sorted(blobs)
+    assert r.gc_tmp() == 1
+
+
+# ------------------------------------------- residency / authoritative
+
+
+def test_residency_ladder_and_single_authoritative_tier(tmp_path):
+    s, remote = _tiered_store(tmp_path, host_bytes=1 << 20)
+    t = _table(seed=1)
+    ref = _crc(t)
+    s.put("a", t)
+    assert s.residency("a") == "device"
+    assert s.authoritative_tier("a") == "disk"     # write-through
+    s.demote_to_remote("a")
+    assert s.authoritative_tier("a") == "remote"
+    assert not os.path.exists(os.path.join(s._path("a"), "manifest.json"))
+    assert s.residency("a") == "device"            # cache copy still valid
+    s.cache.drop("a")
+    s.host.drop("a")
+    assert s.residency("a") == "remote"
+    assert _crc(s.get("a")) == ref                 # cold remote read
+    s.promote_from_remote("a")
+    assert s.authoritative_tier("a") == "disk"
+    assert not remote.exists(s._remote_key("a"))   # exactly one owner
+    assert _crc(s.get("a")) == ref
+    s.close()
+
+
+def test_promote_demote_promote_bit_identical(tmp_path):
+    """Two full round-trips through the compressed remote tier must be
+    bit-exact for every column dtype."""
+    s, _ = _tiered_store(tmp_path)
+    t = _table(n=500, seed=2)
+    ref = _crc(t)
+    s.put("a", t)
+    for _ in range(2):
+        s.demote_to_remote("a")
+        s.cache.drop("a")
+        got = s.get("a")                           # serves from remote
+        assert _crc(got) == ref
+        s.promote_from_remote("a")
+        s.cache.drop("a")
+        assert _crc(s.get("a")) == ref             # serves from disk
+    s.close()
+
+
+def test_partitioned_artifact_survives_remote_roundtrip(tmp_path):
+    s, _ = _tiered_store(tmp_path)
+    t = _table(n=240, seed=3)
+    s.put("base", t)
+    tp, _part = s.get_partitioned("base", ["c_int32"], 4)
+    s.put("a", tp, partitioning={"keys": ["c_int32"], "n_parts": 4})
+    ref = _crc(s.get("a"))
+    s.demote_to_remote("a")
+    s.cache.drop("a")
+    s.drop_caches()
+    assert _crc(s.get("a")) == ref
+    s.promote_from_remote("a")
+    assert s.partitioning("a")["n_parts"] == 4     # property survives
+    s.close()
+
+
+def test_random_population_has_exactly_one_durable_owner(tmp_path):
+    """Property sweep: random sizes and random demotion choices — after
+    any sequence, every artifact has exactly one durable tier and reads
+    bit-identically from it."""
+    rng = np.random.default_rng(7)
+    s, remote = _tiered_store(tmp_path, host_bytes=1 << 18,
+                              cache_bytes=1 << 18)
+    refs = {}
+    for i in range(12):
+        t = _table(n=int(rng.integers(16, 400)), seed=100 + i)
+        s.put(f"art{i}", t)
+        refs[f"art{i}"] = _crc(t)
+    demoted = [n for n in refs if rng.random() < 0.5]
+    for n in demoted:
+        s.demote_to_remote(n)
+    s.drop_caches()
+    for n, ref in refs.items():
+        tier = s.authoritative_tier(n)
+        assert tier == ("remote" if n in demoted else "disk"), n
+        on_disk = os.path.exists(os.path.join(s._path(n), "manifest.json"))
+        on_remote = remote.exists(s._remote_key(n))
+        assert on_disk != on_remote, f"{n}: not exactly one durable copy"
+        assert _crc(s.get(n)) == ref, n
+    s.close()
+
+
+def test_device_eviction_demotes_to_host_and_serves_back(tmp_path):
+    t = _table(n=256, seed=4)
+    nb = t.nbytes()
+    s = ArtifactStore(root=str(tmp_path / "store"), cache_bytes=2 * nb,
+                      host_bytes=16 * nb, write_behind=False)
+    names = [f"a{i}" for i in range(4)]
+    refs = {}
+    for i, n in enumerate(names):
+        tt = _table(n=256, seed=10 + i)
+        refs[n] = _crc(tt)
+        s.put(n, tt)
+    assert s.residency("a0") == "host"             # squeezed out of device
+    before = dict(s.io_stats())
+    assert _crc(s.get("a0")) == refs["a0"]
+    after = s.io_stats()
+    assert after["hostload_bytes"] > before["hostload_bytes"], \
+        "host-served read must be sampled under its own tier tag"
+    assert s.residency("a0") == "device"           # promoted back up
+    s.close()
+
+
+def test_corrupt_remote_blob_raises_corrupt_error(tmp_path):
+    s, remote = _tiered_store(tmp_path)
+    s.put("a", _table(seed=5))
+    s.demote_to_remote("a")
+    s.drop_caches()
+    p = remote.path(s._remote_key("a"))
+    with open(p, "r+b") as f:                      # flip a payload byte
+        f.seek(-5, os.SEEK_END)
+        b = f.read(1)
+        f.seek(-5, os.SEEK_END)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(CorruptArtifactError):
+        s.get("a")
+    s.close()
+
+
+def test_prewarm_batches_remote_and_fills_device(tmp_path):
+    s, remote = _tiered_store(tmp_path)
+    refs = {}
+    for i in range(3):
+        t = _table(seed=20 + i)
+        refs[f"a{i}"] = _crc(t)
+        s.put(f"a{i}", t)
+        s.demote_to_remote(f"a{i}")
+    s.drop_caches()
+    base = remote.stats["requests"]
+    warmed = s.prewarm(list(refs) + ["missing"])
+    assert sorted(warmed) == sorted(refs)
+    assert remote.stats["requests"] == base + 1    # ONE batched fetch
+    for n in refs:
+        assert s.residency(n) == "device"
+        assert s.authoritative_tier(n) == "remote"  # warm, not migrate
+        assert _crc(s.get(n)) == refs[n]
+    s.close()
+
+
+# --------------------------------------------- crash windows (ISSUE 8)
+
+
+def _armed_injector(point):
+    inj = FaultInjector(FaultSchedule(seed=0, rates={}, max_faults=0))
+    inj.arm(point)
+    return inj
+
+
+def test_crash_before_remote_upload_leaves_disk_authoritative(tmp_path):
+    remote = RemoteObjectStore(str(tmp_path / "remote"))
+    inj = _armed_injector("remote_write")
+    s = ArtifactStore(root=str(tmp_path / "store"), remote=remote,
+                      write_behind=False, fault_injector=inj)
+    t = _table(seed=6)
+    ref = _crc(t)
+    s.put("a", t)
+    with pytest.raises(SimulatedCrash):
+        s.demote_to_remote("a")
+    # reopen: the upload never happened, disk still owns the bytes
+    s2 = ArtifactStore(root=str(tmp_path / "store"), remote=remote,
+                       write_behind=False)
+    assert s2.authoritative_tier("a") == "disk"
+    assert not remote.exists(s2._remote_key("a"))
+    assert _crc(s2.get("a")) == ref
+    s2.close()
+
+
+def test_crash_after_remote_publish_reconciles_to_remote(tmp_path):
+    """The satellite contract: a kill AFTER the remote publish but
+    BEFORE the local delete leaves both copies; reopen must resolve to
+    the LOWER tier (verified remote wins) with the bytes intact."""
+    remote = RemoteObjectStore(str(tmp_path / "remote"))
+    inj = _armed_injector("remote_published")
+    s = ArtifactStore(root=str(tmp_path / "store"), remote=remote,
+                      write_behind=False, fault_injector=inj)
+    t = _table(seed=7)
+    ref = _crc(t)
+    s.put("a", t)
+    with pytest.raises(SimulatedCrash):
+        s.demote_to_remote("a")
+    # mid-crash state: both durable copies exist
+    assert os.path.exists(os.path.join(s._path("a"), "manifest.json"))
+    assert remote.exists(s._remote_key("a"))
+
+    s2 = ArtifactStore(root=str(tmp_path / "store"), remote=remote,
+                       write_behind=False)
+    assert s2.stats["remote_reconciled"] == 1
+    assert s2.authoritative_tier("a") == "remote"
+    assert not os.path.exists(os.path.join(s2._path("a"), "manifest.json"))
+    assert _crc(s2.get("a")) == ref
+    s2.close()
+
+
+def test_torn_remote_blob_on_reopen_keeps_disk_copy(tmp_path):
+    """The dual of verified-remote-wins: an UNVERIFIABLE remote blob is
+    torn-upload garbage — reopen deletes it and the disk copy stays
+    authoritative."""
+    remote = RemoteObjectStore(str(tmp_path / "remote"))
+    inj = _armed_injector("remote_published")
+    s = ArtifactStore(root=str(tmp_path / "store"), remote=remote,
+                      write_behind=False, fault_injector=inj)
+    t = _table(seed=8)
+    ref = _crc(t)
+    s.put("a", t)
+    with pytest.raises(SimulatedCrash):
+        s.demote_to_remote("a")
+    p = remote.path(s._remote_key("a"))
+    with open(p, "r+b") as f:
+        f.truncate(os.path.getsize(p) // 2)        # torn upload
+    s2 = ArtifactStore(root=str(tmp_path / "store"), remote=remote,
+                       write_behind=False)
+    assert s2.authoritative_tier("a") == "disk"
+    assert not remote.exists(s2._remote_key("a"))
+    assert _crc(s2.get("a")) == ref
+    s2.close()
+
+
+def test_fault_points_cover_remote_reads(tmp_path):
+    s, remote = _tiered_store(tmp_path)
+    s.put("a", _table(seed=9))
+    s.demote_to_remote("a")
+    s.drop_caches()
+    s.fault_injector = _armed_injector("remote_read")
+    with pytest.raises(SimulatedCrash):
+        s.get("a")
+    s.fault_injector = None
+    assert s.get("a") is not None                  # recoverable afterwards
+    s.close()
+
+
+# ------------------------------------------------ speculative prefetch
+
+
+class _LogOnlyStore:
+    """Minimal store stub: a read_log plus a prewarm that records."""
+
+    def __init__(self):
+        import collections
+        self.read_log = collections.deque()
+        self.prewarmed = []
+
+    def prewarm(self, names):
+        self.prewarmed.append(list(names))
+        return list(names)
+
+
+def test_prefetcher_ranks_by_decayed_popularity():
+    st = _LogOnlyStore()
+    pf = SpeculativePrefetcher(st, k=2, decay=0.5)
+    for name in ["a", "a", "b", "a", "c", "a"]:
+        st.read_log.append((name, "disk"))
+    pf.poll()
+    assert pf.predict()[0] == "a"
+    # drift: a goes quiet, c dominates -> decay forgets a
+    for _ in range(10):
+        st.read_log.append(("c", "disk"))
+    pf.poll()
+    assert pf.predict()[0] == "c"
+    assert pf.observed == 16
+
+
+def test_prefetcher_accounts_hits_against_warmed_set():
+    st = _LogOnlyStore()
+    pf = SpeculativePrefetcher(st, k=1)
+    st.read_log.append(("hot", "disk"))
+    assert pf.prefetch() == ["hot"]
+    assert pf.prefetched == 1
+    st.read_log.append(("hot", "device"))          # prediction came true
+    pf.poll()
+    assert pf.hits == 1 and pf.hit_rate == 1.0
+    # an unprobed warm entry counts against precision
+    pf.prefetch()
+    assert pf.hit_rate == pytest.approx(0.5)
+
+
+def test_observe_append_refreshes_hot_set_ahead_of_arrival():
+    st = _LogOnlyStore()
+    calls = []
+
+    def maintainer(names):
+        calls.append(set(names))
+        return {"refreshed": len(names)}
+
+    pf = SpeculativePrefetcher(st, k=2, maintainer=maintainer)
+    for name in ["x", "x", "y"]:
+        st.read_log.append((name, "disk"))
+    pf.observe_append("ds")
+    assert calls == [{"x", "y"}]
+    assert pf.refreshed_ahead == 2
+    assert st.prewarmed[-1] == ["x", "y"]          # re-warmed after refresh
+    # cadence EWMA needs two appends for a gap
+    pf.observe_append("ds")
+    assert pf.appends == 2 and pf.append_gap is not None
+    st_stats = pf.stats()
+    assert st_stats["appends"] == 2
+    assert st_stats["predictions"][0] == "x"
+
+
+def test_observe_append_tolerates_maintainer_failure():
+    st = _LogOnlyStore()
+
+    def broken(names):
+        raise RuntimeError("refresh blew up")
+
+    pf = SpeculativePrefetcher(st, k=1, maintainer=broken)
+    st.read_log.append(("x", "disk"))
+    assert pf.observe_append("ds") == {}           # swallowed, not fatal
+    assert pf.refreshed_ahead == 0
+    assert st.prewarmed                            # warming still happened

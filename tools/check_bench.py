@@ -32,7 +32,12 @@ exempt):
   * ``service_runs`` — 4-worker goodput at least ``MIN_SERVICE_SCALING``x
     the 1-worker goodput at full size (ISSUE 6); every entry of ANY
     size must record ``dup_executions == 0`` (the singleflight
-    invariant) and at least one singleflight hit.
+    invariant) and at least one singleflight hit;
+  * ``tier_runs`` — speculative prefetch at least
+    ``MIN_PREFETCH_SPEEDUP``x faster than demand paging at full size
+    (ISSUE 8); every entry of ANY size must record ``identical: true``
+    (both arms returned bit-identical tables) and a finite, positive
+    ``cold_start_s`` (the cold start from the remote tier completed).
 
 Usage: python tools/check_bench.py [path]   (exit 0 = all checks pass)
 """
@@ -55,6 +60,7 @@ MIN_QUERY_REUSE = float(os.environ.get("CHECK_BENCH_MIN_QUERY_REUSE", 1.0))
 QUERY_NOISE_TOL = float(os.environ.get("CHECK_BENCH_QUERY_NOISE_TOL", 0.05))
 MIN_DELTA_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_DELTA", 3.0))
 MIN_SERVICE_SCALING = float(os.environ.get("CHECK_BENCH_MIN_SERVICE", 1.5))
+MIN_PREFETCH_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_PREFETCH", 1.3))
 DELTA_FLOOR_MAX_FRAC = 0.10      # the ISSUE 5 "≤10% append" regime
 DELTA_FLOOR_TEMPLATES = ("groupby", "join")
 FLOOR_MIN_ROWS = 1 << 16         # full-size entries only
@@ -89,6 +95,10 @@ SCHEMAS = {
                       "goodput_scaling_4w_vs_1w", "singleflight_hits",
                       "dup_executions"),
                      lambda r: r["goodput_scaling_4w_vs_1w"]),
+    "tier_runs": (("label", "n_rows", "n_artifacts", "probes",
+                   "speedup_prefetch", "prefetch_hit_rate",
+                   "cold_start_s", "identical"),
+                  lambda r: r["speedup_prefetch"]),
 }
 
 
@@ -214,6 +224,30 @@ def check(path: str) -> int:
                             f"service_runs label={rec['label']!r}: "
                             f"4w/1w goodput scaling {s:.2f} below the "
                             f"{MIN_SERVICE_SCALING:.1f}x floor "
+                            f"({rec['n_rows']} rows)")
+
+        # acceptance floors for tiered-store entries (ISSUE 8)
+        if list_name == "tier_runs":
+            for rec in entries:
+                n_checked += 2
+                if not rec.get("identical", False):
+                    errors.append(
+                        f"tier_runs label={rec['label']!r}: prefetch "
+                        f"and demand-paging arms not bit-identical")
+                cold = rec.get("cold_start_s")
+                if not (isinstance(cold, (int, float)) and cold > 0):
+                    errors.append(
+                        f"tier_runs label={rec['label']!r}: cold start "
+                        f"from the remote tier did not complete "
+                        f"(cold_start_s={cold!r})")
+                if rec["n_rows"] >= FLOOR_MIN_ROWS:
+                    n_checked += 1
+                    s = rec["speedup_prefetch"]
+                    if s < MIN_PREFETCH_SPEEDUP:
+                        errors.append(
+                            f"tier_runs label={rec['label']!r}: prefetch "
+                            f"speedup {s:.2f} below the "
+                            f"{MIN_PREFETCH_SPEEDUP:.1f}x floor "
                             f"({rec['n_rows']} rows)")
 
     if errors:
