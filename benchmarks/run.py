@@ -21,11 +21,11 @@ sys.path.insert(0, _ROOT)
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 from benchmarks import (core_bench, delta_bench, distributed_bench,  # noqa
-                        filter_sweep, heuristics, policy_bench,
-                        prefix_reuse_bench, projection_sweep,
-                        semantic_reuse_bench, service_bench,
-                        store_overhead, subjob_reuse, tier_bench,
-                        whole_job_reuse)
+                        filter_sweep, heuristics, mqo_bench,
+                        policy_bench, prefix_reuse_bench,
+                        projection_sweep, semantic_reuse_bench,
+                        service_bench, store_overhead, subjob_reuse,
+                        tier_bench, whole_job_reuse)
 
 SUITES = {
     "core": core_bench.run,
@@ -35,6 +35,7 @@ SUITES = {
     "delta": delta_bench.run,
     "service": service_bench.run,
     "tier": tier_bench.run,
+    "mqo": mqo_bench.run,
     "fig9_whole_job": whole_job_reuse.run,
     "fig10_12_subjob": subjob_reuse.run,
     "fig11_overhead": store_overhead.run,
@@ -46,7 +47,7 @@ SUITES = {
 
 # suites that accept a --label (snapshots into BENCH_core.json)
 LABELLED = {"core", "policy", "semantic", "dist", "delta", "service",
-            "tier"}
+            "tier", "mqo"}
 
 
 def main() -> None:

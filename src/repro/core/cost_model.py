@@ -92,6 +92,13 @@ class CostModel:
         self.max_expected_uses = max_expected_uses
         self.min_splice_benefit_s = min_splice_benefit_s
         self.op_stats: Dict[str, OpStats] = {}
+        # Batch-optimizer materialization hints (DESIGN.md §16): key
+        # (structural fingerprint OR artifact name) -> number of queries
+        # in the current batch *known* to consume that sub-job.  Unlike
+        # op_stats these are facts about queued work, not history — they
+        # override the seen-once admission gate and floor the
+        # expected-uses estimate while a batch is in flight.
+        self.known_uses: Dict[str, float] = {}
 
     # ------------------------------------------------------------- IO price
     #: minimum sampled byte mass before a measurement replaces a prior
@@ -257,8 +264,16 @@ class CostModel:
         blocking region (JOIN/GROUPBY/DISTINCT/COGROUP) amortizes
         super-linear recompute and always splices — and only with
         bytes evidence on the entry; absent either, the paper's
-        always-reuse rule stands.  Inert at the default threshold 0."""
+        always-reuse rule stands.  Inert at the default threshold 0.
+
+        A known-uses hint (batch optimizer, §16) also always splices:
+        the batch deliberately materialized that artifact for queries
+        queued *right now*, so declining would re-execute a sub-plan
+        the shared prefix just paid to store — exactly the duplicate
+        execution ``dup_executions`` gates at zero."""
         if self.min_splice_benefit_s <= 0.0:
+            return True
+        if self.known_uses_for(getattr(entry, "artifact", None)) > 0.0:
             return True
         kinds = {op.kind for op in entry.plan.topo()}
         if not kinds <= STREAMING_KINDS:
@@ -275,20 +290,48 @@ class CostModel:
         return min(self.max_expected_uses,
                    (past_uses + self.prior_uses) * decay)
 
+    # ---------------------------------------------- known-uses hints (§16)
+
+    def set_known_uses(self, hints: Dict[str, float]) -> None:
+        """Install batch-optimizer hints: key (structural fingerprint or
+        artifact name) -> queries known to consume it.  Max-merged so
+        overlapping batches never lower an existing hint."""
+        for k, v in hints.items():
+            self.known_uses[k] = max(self.known_uses.get(k, 0.0), float(v))
+
+    def clear_known_uses(self, keys=None) -> None:
+        """Drop hints when their batch retires (all, or just ``keys``)."""
+        if keys is None:
+            self.known_uses.clear()
+        else:
+            for k in keys:
+                self.known_uses.pop(k, None)
+
+    def known_uses_for(self, *keys: Optional[str]) -> float:
+        """Max hint across any of the given keys (0.0 when unhinted)."""
+        return max((self.known_uses.get(k, 0.0) for k in keys if k),
+                   default=0.0)
+
     def should_materialize(self, struct_fp: str,
-                           now: Optional[float] = None) -> bool:
+                           now: Optional[float] = None,
+                           artifact: Optional[str] = None) -> bool:
         """Sub-job admission: materialize only when the predicted benefit
         (savings × expected reuses) exceeds the store cost.  Operators
         never observed before are NOT materialized — the first execution
         collects their statistics, the second pays the store only if
-        history says it recurs and saves time."""
+        history says it recurs and saves time.  Exception: a known-uses
+        hint (batch optimizer, §16) is a fact, not an estimate — a
+        hinted sub-job is admitted on first sight because consumers are
+        already queued behind it."""
+        hint = self.known_uses_for(struct_fp, artifact)
         st = self.op_stats.get(struct_fp)
         if st is None or st.times_seen < 1:
-            return False
+            return hint > 0.0
         savings = self.savings_per_reuse_s(st.producer_cost_s, st.bytes_out)
         if savings <= 0.0:
             return False
-        uses = self.expected_future_uses(st.times_seen, st.last_seen, now)
+        uses = max(self.expected_future_uses(st.times_seen, st.last_seen,
+                                             now), hint)
         return savings * uses > self.store_cost_s(st.bytes_out)
 
     def refresh_cost_s(self, entry, delta_fraction: float) -> float:

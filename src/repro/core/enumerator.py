@@ -63,7 +63,12 @@ def enumerate_subjobs(exec_plan: PhysicalPlan, origin: Dict[int, Operator],
     pre-rewrite form), which names the candidate artifacts.  In
     ``"cost"`` mode a ``cost_model`` is required: an operator is
     materialized only if ``cost_model.should_materialize`` approves its
-    structural fingerprint (predicted benefit > store cost)."""
+    structural fingerprint (predicted benefit > store cost).
+
+    Batch-optimizer known-uses hints (DESIGN.md §16) extend the reach of
+    any non-"off" heuristic: an operator whose fingerprint or artifact
+    name is hinted is materialized even when its kind falls outside the
+    heuristic's set, because queued queries are known to consume it."""
     kinds = HEURISTICS[heuristic]
     use_cost = heuristic == "cost"
     if use_cost and cost_model is None:
@@ -76,13 +81,19 @@ def enumerate_subjobs(exec_plan: PhysicalPlan, origin: Dict[int, Operator],
     sinks = list(exec_plan.sinks)
     candidates: List[Candidate] = []
     for op in exec_plan.topo():
-        if op.kind not in kinds:
-            continue
         orig = origin.get(id(op))
         if orig is None:
             continue
+        hinted = (cost_model is not None and kinds
+                  and op.kind in ALL_OPS
+                  and cost_model.known_uses_for(
+                      struct_fps[id(orig)],
+                      art_name(orig_fps[id(orig)])) > 0.0)
+        if op.kind not in kinds and not hinted:
+            continue
         if use_cost and not cost_model.should_materialize(
-                struct_fps[id(orig)]):
+                struct_fps[id(orig)],
+                artifact=art_name(orig_fps[id(orig)])):
             continue
         name = art_name(orig_fps[id(orig)])
         if name in existing:

@@ -158,6 +158,18 @@ class Repository:
             if self.journal is not None:
                 self.journal.record_unpin(artifacts)
 
+    # ------------------------------------------- known-uses hints (§16)
+    def set_known_uses(self, hints) -> None:
+        """Install batch-optimizer materialization hints (key: structural
+        fingerprint or artifact name -> queries known to consume it) on
+        the cost model this repository admits/evicts by."""
+        with self._lock:
+            self.cost_model.set_known_uses(hints)
+
+    def clear_known_uses(self, keys=None) -> None:
+        with self._lock:
+            self.cost_model.clear_known_uses(keys)
+
     # ------------------------------------------------------------- insert
     def add(self, entry: RepositoryEntry) -> bool:
         """Apply keep-rules R1/R2 and the byte-budget admission policy,

@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+from ..dataflow.builder import as_plan
 from ..dataflow.compiler import Job, Workflow, compile_workflow
 from ..dataflow.executor import Engine, JobStats
 from ..store.artifacts import (ArtifactError, ArtifactFlushError,
@@ -127,8 +128,25 @@ class ReStore:
         self._degraded = 0
 
     # ------------------------------------------------------------------
+    def run(self, query):
+        """Unified submission surface (DESIGN.md §16): accept either a
+        ``PhysicalPlan`` or a Pig-style ``dataflow.builder.Dataflow``
+        (lowered via its ``build()``), compile to a workflow and run it.
+        Returns ``(results, RunReport)``."""
+        return self.run_workflow(compile_workflow(as_plan(query)))
+
     def run_plan(self, plan: PhysicalPlan):
-        return self.run_workflow(compile_workflow(plan))
+        """Deprecated alias for :meth:`run` (pre-§16 signature; kept so
+        existing call sites migrate incrementally)."""
+        return self.run(plan)
+
+    def run_batch(self, queries, semantic: bool = True):
+        """Run a batch of queries through the multi-query optimizer
+        (DESIGN.md §16): shared sub-plans execute once, then each query
+        runs against the materialized shared work.  Returns a
+        :class:`repro.core.mqo.BatchResult`."""
+        from .mqo import run_batch
+        return run_batch(self, queries, semantic=semantic)
 
     def run_workflow(self, wf: Workflow):
         # job-boundary artifacts are loaded by downstream jobs of THIS
@@ -319,7 +337,13 @@ class ReStore:
                 exec_time_s=stats.wall_s,
                 producer_cost_s=stats.op_cost_s.get(c.exec_op_uid,
                                                     stats.wall_s),
-                history_uses=op_hist.times_seen if op_hist else 0.0,
+                # seed admission with observed recurrence OR the batch
+                # optimizer's known consumer count (§16), whichever is
+                # stronger — known uses are facts about queued queries
+                history_uses=max(
+                    op_hist.times_seen if op_hist else 0.0,
+                    self.repo.cost_model.known_uses_for(
+                        c.struct_fp, c.artifact)),
                 source_versions=versions,
                 # partition property of the candidate's output under
                 # mesh execution — what future rewrites splice in as a

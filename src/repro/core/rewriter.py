@@ -125,7 +125,8 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
                  use_algorithm1: bool = False,
                  semantic: bool = True,
                  max_rewrites: int = 64,
-                 n_shards: Optional[int] = None) -> RewriteResult:
+                 n_shards: Optional[int] = None,
+                 record: bool = True) -> RewriteResult:
     """Rewrite ``plan`` against the repository until no entry matches.
 
     Each round scans ``repo.ordered()`` (the paper's partial order, so
@@ -140,7 +141,14 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
     eviction, the cost model's expected-reuse statistics (DESIGN.md §9),
     and the repository's exact/semantic hit counters.  Returns the
     rewritten plan, the entries applied (in order), and the
-    rewritten-op -> original-op map the sub-job enumerator needs."""
+    rewritten-op -> original-op map the sub-job enumerator needs.
+
+    ``record=False`` makes the scan a pure *planning probe*: no
+    ``record_use`` credit is issued.  The batch optimizer (DESIGN.md
+    §16) probes candidate shared sub-plans to see what is already
+    materialized; those probes are not reuse hits, and crediting them
+    would inflate recency/hit-count and the expected-uses estimate the
+    repository evicts by."""
     origin: Dict[int, Operator] = {id(op): op for op in plan.topo()}
     used: List[RepositoryEntry] = []
     n_semantic = 0
@@ -189,7 +197,8 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
             plan, origin, comp_ids = _replace_tracking(
                 plan, anchor, new_load, origin, comp_ids)
             used.append(entry)
-            repo.record_use(entry, saved_s=max(saved, 0.0))
+            if record:
+                repo.record_use(entry, saved_s=max(saved, 0.0))
             continue
         if semantic and not use_algorithm1:
             sem = None
@@ -228,8 +237,9 @@ def rewrite_plan(plan: PhysicalPlan, repo: Repository,
                 comp_ids.add(id(comp))
                 used.append(entry)
                 n_semantic += 1
-                repo.record_use(entry, saved_s=max(saved, 0.0),
-                                kind="semantic")
+                if record:
+                    repo.record_use(entry, saved_s=max(saved, 0.0),
+                                    kind="semantic")
                 continue
         break
     return RewriteResult(plan, used, origin, n_semantic, comp_ids)

@@ -34,9 +34,11 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+from ..core.mqo import optimize_batch
 from ..core.plan import PhysicalPlan, plan_signature
 from ..core.repository import Repository
 from ..core.restore import ReStore
+from ..dataflow.builder import as_plan
 from ..store.artifacts import ArtifactError, Catalog, TransientStoreError
 
 
@@ -148,6 +150,7 @@ class ReStoreService:
             "submitted": 0, "completed": 0, "failed": 0, "rejected": 0,
             "retries": 0, "timeouts": 0, "singleflight_hits": 0,
             "dup_executions": 0, "degraded": 0, "flush_failures": 0,
+            "batches": 0, "batch_shared_subplans": 0,
         }
         self._tenant_stats: Dict[str, Dict[str, int]] = {}
         self._workers = [
@@ -184,12 +187,15 @@ class ReStoreService:
             self._prefetch_thread.start()
 
     # ------------------------------------------------------------ submit
-    def submit(self, plan: PhysicalPlan, tenant: str = "default",
+    def submit(self, plan, tenant: str = "default",
                block: bool = True, timeout: Optional[float] = None,
                deadline_s: Optional[float] = None) -> Ticket:
-        """Enqueue a workflow; returns a Ticket immediately.  With the
-        queue full: ``block=True`` waits (``timeout`` bounds it) for
-        space, else raises ServiceOverloaded."""
+        """Enqueue a workflow — a ``PhysicalPlan`` or a Pig-style
+        builder (``dataflow.builder.Dataflow``, lowered on entry);
+        returns a Ticket immediately.  With the queue full:
+        ``block=True`` waits (``timeout`` bounds it) for space, else
+        raises ServiceOverloaded."""
+        plan = as_plan(plan)
         key = plan_signature(plan)
         deadline = time.time() + timeout if timeout is not None else None
         with self._cv:
@@ -228,10 +234,73 @@ class ReStoreService:
             self._cv.notify_all()
             return t
 
-    def run(self, plan: PhysicalPlan, tenant: str = "default",
+    def run(self, plan, tenant: str = "default",
             timeout: Optional[float] = None):
-        """Convenience: submit and wait."""
+        """Convenience: submit (plan or builder) and wait."""
         return self.submit(plan, tenant).result(timeout)
+
+    def submit_batch(self, queries, tenants=None, tenant: str = "default",
+                     semantic: bool = True,
+                     timeout: Optional[float] = None) -> List[Ticket]:
+        """Drain a batch through the multi-query optimizer (DESIGN.md
+        §16) and fan results out to per-query tickets.
+
+        The batch window extends singleflight from identical-plan to
+        shared-subplan granularity: ``optimize_batch`` finds sub-plans
+        common to several queued queries (exactly or by subsumption),
+        the shared prefix is submitted once and awaited, and only then
+        are the per-query tickets enqueued — their rewrites splice the
+        freshly materialized shared artifacts, so a sub-job consumed by
+        five queries executes once no matter which workers pick them up.
+
+        Known-uses hints and pins are installed for the batch's
+        lifetime (a background waiter releases them when the last
+        ticket settles).  A shared-prefix failure degrades gracefully:
+        the queries still run, each recomputing cold.  ``queries`` may
+        mix plans and builders; ``tenants`` (optional, same length)
+        attributes each ticket, else all go to ``tenant``."""
+        plans = [as_plan(q) for q in queries]
+        if tenants is None:
+            tenants = [tenant] * len(plans)
+        if len(tenants) != len(plans):
+            raise ValueError("tenants must match queries 1:1")
+        bp = optimize_batch(plans, repo=self.repo, semantic=semantic)
+        with self._cv:
+            self._stats["batches"] += 1
+            self._stats["batch_shared_subplans"] += len(bp.shared)
+        released = threading.Event()
+        self.repo.set_known_uses(bp.known_uses)
+        self.repo.pin(bp.boundary_artifacts)
+
+        def _release():
+            if released.is_set():
+                return
+            released.set()
+            self.repo.unpin(bp.boundary_artifacts)
+            self.repo.clear_known_uses(bp.known_uses)
+            self.repo.rebalance()
+
+        try:
+            if bp.shared_plan is not None:
+                try:
+                    self.submit(bp.shared_plan,
+                                tenant="_batch").result(timeout)
+                except Exception:
+                    pass        # degraded: queries recompute cold
+            tickets = [self.submit(p, tenant=t)
+                       for p, t in zip(plans, tenants)]
+        except BaseException:
+            _release()
+            raise
+
+        def _waiter():
+            for t in tickets:
+                t._ev.wait()
+            _release()
+
+        threading.Thread(target=_waiter, name="restore-batch-waiter",
+                         daemon=True).start()
+        return tickets
 
     def _tenant(self, tenant: str) -> Dict[str, int]:
         st = self._tenant_stats.get(tenant)

@@ -5,6 +5,12 @@ and the §7.5 synthetic table (Table 2 field cardinalities); queries
 L2-L8 and L11 are expressed over the engine's operator set the same way
 Pig compiles them.  Scaled to CPU sizes; the paper's 15 GB/150 GB contrast
 becomes a small/large row-count contrast.
+
+The queries are written in the Pig-style builder DSL
+(``dataflow.builder``, DESIGN.md §16) — the paper's actual interface.
+The original hand-built ``core.plan`` constructors are retained below
+as ``LEGACY`` so ``tests/test_builder.py`` can pin that both notations
+compile to fingerprint-identical plans.
 """
 from __future__ import annotations
 
@@ -13,6 +19,7 @@ from typing import Dict
 import numpy as np
 
 from ..core import plan as P
+from ..dataflow.builder import Dataflow, col
 from ..dataflow.expr import Cast, Col, Const
 from ..dataflow.table import Table, encode_strings
 
@@ -64,20 +71,118 @@ def register_all(catalog, n_rows: int = 1 << 15, seed: int = 0):
 
 
 # ---------------------------------------------------------------------------
-# Queries.  Each returns a PhysicalPlan; Pig's FOREACH..GENERATE maps to
-# PROJECT/FOREACH, (CO)GROUP..FOREACH agg to GROUPBY/COGROUP.
+# Queries, in the Pig-style builder DSL.  Each returns a PhysicalPlan;
+# Pig's FOREACH..GENERATE maps to project/foreach, (CO)GROUP..FOREACH agg
+# to group_by/cogroup.
 
 
 def L2() -> P.PhysicalPlan:
     """Join page_views projection with power_users names."""
+    pv = Dataflow.load("page_views").project("user", "estimated_revenue")
+    pu = Dataflow.load("power_users").project("name")
+    return (pv.join(pu, left_on="user", right_on="name")
+            .store("L2_out").build())
+
+
+def L3(agg: str = "sum") -> P.PhysicalPlan:
+    """Join then group-by user with revenue aggregate (paper Q2)."""
+    pv = Dataflow.load("page_views").project("user", "estimated_revenue")
+    u = Dataflow.load("users").project("name")
+    return (pv.join(u, left_on="user", right_on="name")
+            .group_by("user", total=(agg, "estimated_revenue"))
+            .store(f"L3_{agg}_out").build())
+
+
+def L4() -> P.PhysicalPlan:
+    """Distinct aggregate: count distinct actions per user."""
+    return (Dataflow.load("page_views").project("user", "action")
+            .distinct()
+            .group_by("user", n_actions=("count", "action"))
+            .store("L4_out").build())
+
+
+def L5() -> P.PhysicalPlan:
+    """Join pv with full users table (wide build side)."""
+    pv = Dataflow.load("page_views").project("user", "timespent")
+    u = Dataflow.load("users").project("name", "phone", "zip")
+    return (pv.join(u, left_on="user", right_on="name")
+            .store("L5_out").build())
+
+
+def L6() -> P.PhysicalPlan:
+    """Group on a wide key with a large-cardinality aggregate."""
+    return (Dataflow.load("page_views")
+            .project("user", "query_term", "timespent")
+            .group_by("user", "query_term",
+                      total_time=("sum", "timespent"))
+            .store("L6_out").build())
+
+
+def L7() -> P.PhysicalPlan:
+    """Morning/afternoon conditional sums (Pig's nested FOREACH)."""
+    return (Dataflow.load("page_views")
+            .foreach(user=col("user"),
+                     morning=Cast((col("timestamp") < 12), "int32")
+                     * col("timespent"),
+                     afternoon=Cast((col("timestamp") >= 12), "int32")
+                     * col("timespent"))
+            .group_by("user", m=("sum", "morning"),
+                      a=("sum", "afternoon"))
+            .store("L7_out").build())
+
+
+def L8() -> P.PhysicalPlan:
+    """Group-ALL: whole-table aggregate."""
+    return (Dataflow.load("page_views")
+            .foreach(all=Const(1), timespent=col("timespent"),
+                     estimated_revenue=col("estimated_revenue"))
+            .group_by("all", t=("sum", "timespent"),
+                      r=("mean", "estimated_revenue"))
+            .store("L8_out").build())
+
+
+def L11(second: str = "power_users") -> P.PhysicalPlan:
+    """Union of user columns, deduplicated (3-job workflow: two map
+    pipelines + distinct)."""
+    a = Dataflow.load("page_views").project("user").distinct()
+    b = Dataflow.load(second).project("name").foreach(user=col("name"))
+    return a.union(b).distinct().store(f"L11_{second}_out").build()
+
+
+def L3F() -> P.PhysicalPlan:
+    """L3 with a post-aggregation FOREACH (Pig keeps GROUP and the
+    aggregating FOREACH separate, so the GROUP output is mid-reducer —
+    exactly the case where the Aggressive Heuristic stores more than the
+    Conservative one)."""
+    pv = Dataflow.load("page_views").project("user", "estimated_revenue")
+    u = Dataflow.load("users").project("name")
+    return (pv.join(u, left_on="user", right_on="name")
+            .group_by("user", total=("sum", "estimated_revenue"),
+                      cnt=("count", "estimated_revenue"))
+            .foreach(user=col("user"),
+                     avg_rev=col("total") / col("cnt"))
+            .store("L3F_out").build())
+
+
+QUERIES = {"L2": L2, "L3": L3, "L3F": L3F, "L4": L4, "L5": L5, "L6": L6,
+           "L7": L7, "L8": L8, "L11": L11}
+
+
+# ---------------------------------------------------------------------------
+# Legacy hand-built constructors (the pre-DSL notation).  Kept verbatim:
+# tests/test_builder.py asserts each DSL template above compiles to a
+# plan fingerprint-identical to its legacy twin, which is what makes the
+# DSL a pure notation change (fingerprints are the reuse currency).
+
+
+def _legacy_L2() -> P.PhysicalPlan:
     pv = P.project(P.load("page_views"), ["user", "estimated_revenue"])
     pu = P.project(P.load("power_users"), ["name"])
     j = P.join(pv, pu, ["user"], ["name"])
     return P.PhysicalPlan([P.store(j, "L2_out")])
 
 
-def L3(agg: str = "sum") -> P.PhysicalPlan:
-    """Join then group-by user with revenue aggregate (paper Q2)."""
+def _legacy_L3(agg: str = "sum") -> P.PhysicalPlan:
     pv = P.project(P.load("page_views"), ["user", "estimated_revenue"])
     u = P.project(P.load("users"), ["name"])
     j = P.join(pv, u, ["user"], ["name"])
@@ -86,24 +191,21 @@ def L3(agg: str = "sum") -> P.PhysicalPlan:
     return P.PhysicalPlan([P.store(g, f"L3_{agg}_out")])
 
 
-def L4() -> P.PhysicalPlan:
-    """Distinct aggregate: count distinct actions per user."""
+def _legacy_L4() -> P.PhysicalPlan:
     pv = P.project(P.load("page_views"), ["user", "action"])
     d = P.distinct(pv)
     g = P.groupby(d, ["user"], {"n_actions": ("count", "action")})
     return P.PhysicalPlan([P.store(g, "L4_out")])
 
 
-def L5() -> P.PhysicalPlan:
-    """Join pv with full users table (wide build side)."""
+def _legacy_L5() -> P.PhysicalPlan:
     pv = P.project(P.load("page_views"), ["user", "timespent"])
     u = P.project(P.load("users"), ["name", "phone", "zip"])
     j = P.join(pv, u, ["user"], ["name"])
     return P.PhysicalPlan([P.store(j, "L5_out")])
 
 
-def L6() -> P.PhysicalPlan:
-    """Group on a wide key with a large-cardinality aggregate."""
+def _legacy_L6() -> P.PhysicalPlan:
     pv = P.project(P.load("page_views"),
                    ["user", "query_term", "timespent"])
     g = P.groupby(pv, ["user", "query_term"],
@@ -111,8 +213,7 @@ def L6() -> P.PhysicalPlan:
     return P.PhysicalPlan([P.store(g, "L6_out")])
 
 
-def L7() -> P.PhysicalPlan:
-    """Morning/afternoon conditional sums (Pig's nested FOREACH)."""
+def _legacy_L7() -> P.PhysicalPlan:
     pv = P.load("page_views")
     f = P.foreach(pv, {
         "user": Col("user"),
@@ -126,8 +227,7 @@ def L7() -> P.PhysicalPlan:
     return P.PhysicalPlan([P.store(g, "L7_out")])
 
 
-def L8() -> P.PhysicalPlan:
-    """Group-ALL: whole-table aggregate."""
+def _legacy_L8() -> P.PhysicalPlan:
     pv = P.foreach(P.load("page_views"),
                    {"all": Const(1), "timespent": Col("timespent"),
                     "estimated_revenue": Col("estimated_revenue")})
@@ -136,9 +236,7 @@ def L8() -> P.PhysicalPlan:
     return P.PhysicalPlan([P.store(g, "L8_out")])
 
 
-def L11(second: str = "power_users") -> P.PhysicalPlan:
-    """Union of user columns, deduplicated (3-job workflow: two map
-    pipelines + distinct)."""
+def _legacy_L11(second: str = "power_users") -> P.PhysicalPlan:
     a = P.distinct(P.project(P.load("page_views"), ["user"]))
     b = P.foreach(P.project(P.load(second), ["name"]),
                   {"user": Col("name")})
@@ -147,11 +245,7 @@ def L11(second: str = "power_users") -> P.PhysicalPlan:
     return P.PhysicalPlan([P.store(d, f"L11_{second}_out")])
 
 
-def L3F() -> P.PhysicalPlan:
-    """L3 with a post-aggregation FOREACH (Pig keeps GROUP and the
-    aggregating FOREACH separate, so the GROUP output is mid-reducer —
-    exactly the case where the Aggressive Heuristic stores more than the
-    Conservative one)."""
+def _legacy_L3F() -> P.PhysicalPlan:
     pv = P.project(P.load("page_views"), ["user", "estimated_revenue"])
     u = P.project(P.load("users"), ["name"])
     j = P.join(pv, u, ["user"], ["name"])
@@ -162,8 +256,9 @@ def L3F() -> P.PhysicalPlan:
     return P.PhysicalPlan([P.store(f, "L3F_out")])
 
 
-QUERIES = {"L2": L2, "L3": L3, "L3F": L3F, "L4": L4, "L5": L5, "L6": L6,
-           "L7": L7, "L8": L8, "L11": L11}
+LEGACY = {"L2": _legacy_L2, "L3": _legacy_L3, "L3F": _legacy_L3F,
+          "L4": _legacy_L4, "L5": _legacy_L5, "L6": _legacy_L6,
+          "L7": _legacy_L7, "L8": _legacy_L8, "L11": _legacy_L11}
 
 
 # ---------------------------------------------------------------------------
@@ -191,13 +286,27 @@ def gen_synth(n_rows: int, seed: int = 3,
 def QP(n_fields: int) -> P.PhysicalPlan:
     """Project field1..fieldN -> group -> count (paper QP template)."""
     fields = [f"field{i}" for i in range(1, n_fields + 1)]
+    return (Dataflow.load("synth").project(fields)
+            .group_by(fields, cnt=("count", fields[0]))
+            .store(f"QP{n_fields}_out").build())
+
+
+def QF(field: str) -> P.PhysicalPlan:
+    """Filter by equality on fieldi -> group by field1 -> count."""
+    return (Dataflow.load("synth").filter(col(field) == 0)
+            .project("field1", field)
+            .group_by("field1", cnt=("count", field))
+            .store(f"QF_{field}_out").build())
+
+
+def _legacy_QP(n_fields: int) -> P.PhysicalPlan:
+    fields = [f"field{i}" for i in range(1, n_fields + 1)]
     pr = P.project(P.load("synth"), fields)
     g = P.groupby(pr, fields, {"cnt": ("count", fields[0])})
     return P.PhysicalPlan([P.store(g, f"QP{n_fields}_out")])
 
 
-def QF(field: str) -> P.PhysicalPlan:
-    """Filter by equality on fieldi -> group by field1 -> count."""
+def _legacy_QF(field: str) -> P.PhysicalPlan:
     f = P.filter_(P.load("synth"), Col(field) == 0)
     pr = P.project(f, ["field1", field])
     g = P.groupby(pr, ["field1"], {"cnt": ("count", field)})

@@ -23,7 +23,11 @@ Modes (the policy arms compared by `benchmarks/policy_bench.py`):
   * ``"lru"``  — store everything, byte-budgeted repository with
     recency-only (least-recently-used) eviction;
   * ``"cost"`` — cost-model-driven materialization + benefit-per-byte
-    budgeted repository.
+    budgeted repository;
+  * ``"mqo"``  — cost arm + multi-query batching (DESIGN.md §16):
+    events are drained in windows of ``batch_size`` through
+    ``core.mqo.run_batch``, so sub-plans shared by queries arriving in
+    the same window execute once with known-uses admission hints.
 """
 from __future__ import annotations
 
@@ -101,6 +105,9 @@ class StreamConfig:
     # the next probe instead of inside it
     prefetch: bool = False
     prefetch_k: int = 4
+    # multi-query batching (DESIGN.md §16): window size for mode="mqo"
+    # (0 falls back to per-event execution even in mqo mode)
+    batch_size: int = 0
 
 
 @dataclasses.dataclass
@@ -129,6 +136,9 @@ class StreamResult:
     prefetch_hits: int = 0        # warmed artifacts actually probed (§15)
     prefetched: int = 0           # warm attempts
     refreshed_ahead: int = 0      # delta-refreshes run pre-arrival (§15)
+    batches: int = 0              # MQO windows drained (§16)
+    mqo_shared_wall_s: float = 0.0   # time spent in shared prefixes
+    mqo_dup_executions: int = 0      # shared sub-plans run twice (audit)
 
     @property
     def n_reused_total(self) -> int:
@@ -172,7 +182,7 @@ def _make_restore(mode: str, catalog: Catalog, store: ArtifactStore,
     elif mode == "lru":
         repo = Repository(budget_bytes=budget_bytes, policy="lru")
         heuristic = "none"
-    elif mode == "cost":
+    elif mode in ("cost", "mqo"):
         repo = Repository(budget_bytes=budget_bytes, policy="cost")
         heuristic = "cost"
     else:
@@ -211,7 +221,11 @@ def run_stream(mode: str, cfg: StreamConfig,
     cum: List[float] = []
     total = 0.0
     peak_bytes = 0
-    for i, (tenant, tidx) in enumerate(schedule):
+    n_batches = 0
+    mqo_shared_wall = 0.0
+    mqo_dups = 0
+
+    def _churn(i: int) -> None:
         if cfg.churn_every and i > 0 and i % cfg.churn_every == 0:
             # dataset-version churn: the hot table is re-ingested; every
             # artifact derived from the old version is stale (rule R4)
@@ -239,26 +253,61 @@ def run_stream(mode: str, cfg: StreamConfig,
                     shared_rs.maintain(mode=cfg.maintain)
                 else:
                     shared_rs.maintain(mode=cfg.maintain)
-        name, build = templates[tidx]
-        plan = rebind_load_versions(
-            build(), {ds: catalog.version(ds) for ds in DATASETS})
-        if mode == "off":
-            rs = ReStore(catalog, ArtifactStore(cache_bytes=cfg.cache_bytes),
-                         heuristic="off", rewrite_enabled=False,
-                         measure_exec=True, repeats=1)
-        else:
-            rs = shared_rs
-        _, report = rs.run_plan(plan)
-        wall = report.total_wall_s
-        total += wall
-        cum.append(total)
-        events.append(StreamEvent(i, tenant, name, wall,
-                                  report.n_executed, report.n_reused))
-        peak_bytes = max(peak_bytes, rs.store.total_bytes())
-        if prefetcher is not None:
-            # between events = the background cadence: consume the read
-            # log and warm the predicted-next artifacts off the clock
-            prefetcher.prefetch()
+
+    def _bind(tidx: int) -> P.PhysicalPlan:
+        return rebind_load_versions(
+            templates[tidx][1](),
+            {ds: catalog.version(ds) for ds in DATASETS})
+
+    if mode == "mqo" and cfg.batch_size > 1:
+        # windowed draining (DESIGN.md §16): churn is applied at each
+        # event's index as it is *drained*, then the whole window runs
+        # through the batch optimizer; the shared prefix's wall is
+        # spread evenly across the window's events
+        from ..core.mqo import run_batch
+        for w0 in range(0, len(schedule), cfg.batch_size):
+            window = list(enumerate(schedule))[w0:w0 + cfg.batch_size]
+            for i, _ in window:
+                _churn(i)
+            plans = [_bind(tidx) for _, (_, tidx) in window]
+            br = run_batch(shared_rs, plans)
+            n_batches += 1
+            mqo_shared_wall += br.shared_wall_s
+            mqo_dups += br.dup_executions
+            spread = br.shared_wall_s / max(len(window), 1)
+            for (i, (tenant, tidx)), report in zip(window, br.reports):
+                wall = report.total_wall_s + spread
+                total += wall
+                cum.append(total)
+                events.append(StreamEvent(i, tenant, templates[tidx][0],
+                                          wall, report.n_executed,
+                                          report.n_reused))
+            peak_bytes = max(peak_bytes, shared_rs.store.total_bytes())
+            if prefetcher is not None:
+                prefetcher.prefetch()
+    else:
+        for i, (tenant, tidx) in enumerate(schedule):
+            _churn(i)
+            plan = _bind(tidx)
+            if mode == "off":
+                rs = ReStore(catalog,
+                             ArtifactStore(cache_bytes=cfg.cache_bytes),
+                             heuristic="off", rewrite_enabled=False,
+                             measure_exec=True, repeats=1)
+            else:
+                rs = shared_rs
+            _, report = rs.run_plan(plan)
+            wall = report.total_wall_s
+            total += wall
+            cum.append(total)
+            events.append(StreamEvent(i, tenant, templates[tidx][0], wall,
+                                      report.n_executed, report.n_reused))
+            peak_bytes = max(peak_bytes, rs.store.total_bytes())
+            if prefetcher is not None:
+                # between events = the background cadence: consume the
+                # read log and warm the predicted-next artifacts off
+                # the clock
+                prefetcher.prefetch()
 
     repo = shared_rs.repo if shared_rs is not None else Repository()
     pstats = prefetcher.stats() if prefetcher is not None else {}
@@ -270,4 +319,6 @@ def run_stream(mode: str, cfg: StreamConfig,
         refreshes=repo.refreshes,
         prefetch_hits=pstats.get("hits", 0),
         prefetched=pstats.get("prefetched", 0),
-        refreshed_ahead=pstats.get("refreshed_ahead", 0))
+        refreshed_ahead=pstats.get("refreshed_ahead", 0),
+        batches=n_batches, mqo_shared_wall_s=mqo_shared_wall,
+        mqo_dup_executions=mqo_dups)

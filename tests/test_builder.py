@@ -1,0 +1,192 @@
+"""Pig-style builder DSL (DESIGN.md §16): the front-end must be a pure
+notation change — plans built through ``dataflow.builder`` must be
+fingerprint-identical to hand-built ``core.plan`` wiring (fingerprints
+are the reuse currency: repository keys, singleflight keys, MQO sharing
+keys), and execute to bit-identical results."""
+import numpy as np
+import pytest
+
+from repro.core import plan as P
+from repro.core.restore import ReStore
+from repro.dataflow.builder import Dataflow, as_plan, col
+from repro.dataflow.expr import Col
+from repro.dataflow.physical import execute_plan
+from repro.store.artifacts import ArtifactStore, Catalog
+from repro.workloads import pigmix
+
+N_ROWS = 512
+
+
+def _fps(plan):
+    return set(plan.fingerprints().values())
+
+
+# --------------------------------------------------- PigMix equivalence
+
+
+@pytest.mark.parametrize("name", sorted(pigmix.QUERIES))
+def test_pigmix_dsl_matches_legacy(name):
+    assert _fps(pigmix.QUERIES[name]()) == _fps(pigmix.LEGACY[name]())
+
+
+def test_pigmix_parametrized_variants_match_legacy():
+    for agg in ("sum", "mean", "count"):
+        assert _fps(pigmix.L3(agg)) == _fps(pigmix._legacy_L3(agg))
+    for second in ("power_users", "users"):
+        assert _fps(pigmix.L11(second)) == _fps(pigmix._legacy_L11(second))
+    for n in (2, 3, 5):
+        assert _fps(pigmix.QP(n)) == _fps(pigmix._legacy_QP(n))
+    for field in sorted(pigmix.FILTER_FIELDS):
+        assert _fps(pigmix.QF(field)) == _fps(pigmix._legacy_QF(field))
+
+
+def test_pigmix_dsl_signature_matches_legacy():
+    # fingerprint identity must extend to the signature the repository
+    # and the service singleflight key by
+    for name in sorted(pigmix.QUERIES):
+        assert (P.plan_signature(pigmix.QUERIES[name]())
+                == P.plan_signature(pigmix.LEGACY[name]()))
+
+
+# --------------------------------------- random-program property sweep
+
+NUMERIC = ["action", "timespent", "timestamp"]
+
+
+def _random_pair(rng):
+    """One random builder program and its hand-built twin."""
+    flow = Dataflow.load("page_views")
+    op = P.load("page_views")
+    cur = ["user", "action", "timespent", "timestamp"]
+    for _ in range(int(rng.integers(1, 4))):
+        kind = rng.choice(["filter", "project", "distinct", "foreach"])
+        numeric = [c for c in cur if c in NUMERIC]
+        if kind == "filter" and numeric:
+            c = str(rng.choice(numeric))
+            thr = int(rng.integers(0, 50))
+            flow = flow.filter(col(c) > thr)
+            op = P.filter_(op, Col(c) > thr)
+        elif kind == "project" and len(cur) > 1:
+            k = int(rng.integers(1, len(cur)))
+            sel = sorted(rng.choice(cur, size=k, replace=False).tolist())
+            flow = flow.project(*sel)
+            op = P.project(op, sel)
+            cur = sel
+        elif kind == "foreach" and numeric:
+            c = str(rng.choice(numeric))
+            gens = {"k": Col(c) * 2, "v": Col(c)}
+            flow = flow.foreach(k=col(c) * 2, v=col(c))
+            op = P.foreach(op, gens)
+            cur = ["k", "v"]
+        else:
+            flow = flow.distinct()
+            op = P.distinct(op)
+    numeric = [c for c in cur if c in NUMERIC or c in ("k", "v")]
+    if rng.random() < 0.5 and numeric:
+        key = cur[0]
+        val = numeric[-1]
+        flow = flow.group_by(key, n=("count", val))
+        op = P.groupby(op, [key], {"n": ("count", val)})
+    return (flow.store("out").build(),
+            P.PhysicalPlan([P.store(op, "out")]))
+
+
+def test_random_programs_fingerprint_identical():
+    # seeded always-on sweep (no hypothesis in the container)
+    for seed in range(60):
+        rng = np.random.default_rng(seed)
+        built, hand = _random_pair(rng)
+        assert _fps(built) == _fps(hand), f"seed {seed}"
+        assert P.plan_signature(built) == P.plan_signature(hand)
+
+
+def test_random_programs_execute_bit_identical():
+    datasets = {"page_views": pigmix.gen_page_views(N_ROWS)}
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        built, hand = _random_pair(rng)
+        out_b, _ = execute_plan(built, datasets)
+        out_h, _ = execute_plan(hand, datasets)
+        assert set(out_b) == set(out_h)
+        for k in out_b:
+            a, b = out_b[k].to_numpy(), out_h[k].to_numpy()
+            assert set(a) == set(b)
+            for c in a:
+                assert np.array_equal(a[c], b[c]), (seed, k, c)
+
+
+# ------------------------------------------------- DSL surface details
+
+
+def test_dag_fanout_shares_the_operator():
+    scan = Dataflow.load("page_views").project("user", "timespent")
+    plan = (scan.group_by("user", t=("sum", "timespent")).store("a")
+            .build(scan.distinct().store("b")))
+    assert len(plan.sinks) == 2
+    # one physical PROJECT feeds both sinks
+    assert sum(1 for o in plan.topo() if o.kind == "PROJECT") == 1
+
+
+def test_build_without_store_raises():
+    with pytest.raises(ValueError, match="store"):
+        Dataflow.load("page_views").distinct().build()
+
+
+def test_group_by_rejects_bad_agg():
+    with pytest.raises(ValueError, match="agg fn"):
+        Dataflow.load("x").group_by("u", n=("median", "v"))
+    with pytest.raises(TypeError, match="tuple"):
+        Dataflow.load("x").group_by("u", n="count")
+
+
+def test_join_key_validation():
+    a, b = Dataflow.load("x"), Dataflow.load("y")
+    with pytest.raises(TypeError, match="key columns"):
+        a.join(b)
+    with pytest.raises(TypeError, match="not both"):
+        a.join(b, on="k", left_on="k", right_on="k")
+    j = a.join(b, on="k")
+    assert j.op.params["left_keys"] == ("k",)
+    assert j.op.params["right_keys"] == ("k",)
+
+
+def test_filter_rejects_non_expr():
+    with pytest.raises(TypeError, match="Expr"):
+        Dataflow.load("x").filter(True)
+
+
+def test_as_plan_coercion():
+    plan = pigmix.L2()
+    assert as_plan(plan) is plan
+    flow = Dataflow.load("page_views").project("user").store("o")
+    assert _fps(as_plan(flow)) == _fps(flow.build())
+    with pytest.raises(TypeError):
+        as_plan("not a plan")
+
+
+# -------------------------------------------- unified submission surface
+
+
+def _driver(n_rows=N_ROWS, **kw):
+    store = ArtifactStore()
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=n_rows)
+    return ReStore(cat, store, **kw)
+
+
+def test_restore_run_accepts_builder_and_plan():
+    rs = _driver()
+    flow = (Dataflow.load("page_views").project("user", "timespent")
+            .group_by("user", t=("sum", "timespent")).store("o"))
+    out_flow, _ = rs.run(flow)
+    cold = _driver()
+    out_plan, _ = cold.run(flow.build())
+    a, b = out_flow["o"].to_numpy(), out_plan["o"].to_numpy()
+    for c in a:
+        assert np.array_equal(a[c], b[c])
+
+
+def test_run_plan_alias_still_works():
+    rs = _driver()
+    res, rep = rs.run_plan(pigmix.L2())
+    assert "L2_out" in res and rep.n_executed >= 1

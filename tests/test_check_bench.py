@@ -56,6 +56,15 @@ def _doc(**overrides):
             "speedup_prefetch": 1.46, "prefetch_hit_rate": 0.94,
             "cold_start_s": 0.25, "identical": True,
         }],
+        "mqo_runs": [{
+            "label": "full", "n_rows": 1 << 15, "n_queries": 7,
+            "n_tenants": 3, "trials": 3, "t_noreuse_s": 2.4,
+            "t_sequential_s": 1.9, "t_batched_s": 1.0,
+            "speedup_batched_vs_sequential": 1.9,
+            "speedup_batched_vs_noreuse": 2.4,
+            "shared_subplans": 3, "semantic_subplans": 1,
+            "dup_executions": 0, "identical": True,
+        }],
     }
     base.update(overrides)
     return base
@@ -244,4 +253,55 @@ def test_tier_same_label_regression_fails(tmp_path):
     doc["tier_runs"][0]["speedup_prefetch"] = 2.5
     second["speedup_prefetch"] = 1.5                    # above floor,
     doc["tier_runs"].append(second)                     # but a >20% drop
+    assert _run(tmp_path, doc) == 1
+
+
+# ---------------------------------------------------- mqo_runs (ISSUE 9)
+
+
+def test_mqo_speedup_floor_violation_fails(tmp_path):
+    doc = _doc()
+    doc["mqo_runs"][0]["speedup_batched_vs_sequential"] = 1.2  # < 1.5
+    assert _run(tmp_path, doc) == 1
+
+
+def test_mqo_speedup_floor_exempts_small_sizes(tmp_path):
+    doc = _doc()
+    doc["mqo_runs"][0]["n_rows"] = 1 << 12              # CI smoke size
+    doc["mqo_runs"][0]["speedup_batched_vs_sequential"] = 1.2
+    assert _run(tmp_path, doc) == 0
+
+
+def test_mqo_bit_identity_gates_at_any_size(tmp_path):
+    doc = _doc()
+    doc["mqo_runs"][0]["n_rows"] = 1 << 12              # even CI smoke
+    doc["mqo_runs"][0]["identical"] = False
+    assert _run(tmp_path, doc) == 1
+
+
+def test_mqo_dup_executions_gate_at_any_size(tmp_path):
+    doc = _doc()
+    doc["mqo_runs"][0]["n_rows"] = 1 << 12              # even CI smoke
+    doc["mqo_runs"][0]["dup_executions"] = 2
+    assert _run(tmp_path, doc) == 1
+
+
+def test_mqo_requires_shared_subplans(tmp_path):
+    doc = _doc()
+    doc["mqo_runs"][0]["shared_subplans"] = 0
+    assert _run(tmp_path, doc) == 1
+
+
+def test_mqo_missing_field_fails(tmp_path):
+    doc = _doc()
+    del doc["mqo_runs"][0]["t_batched_s"]
+    assert _run(tmp_path, doc) == 1
+
+
+def test_mqo_same_label_regression_fails(tmp_path):
+    doc = _doc()
+    second = json.loads(json.dumps(doc["mqo_runs"][0]))
+    doc["mqo_runs"][0]["speedup_batched_vs_sequential"] = 2.5
+    second["speedup_batched_vs_sequential"] = 1.8       # above floor,
+    doc["mqo_runs"].append(second)                      # but a >20% drop
     assert _run(tmp_path, doc) == 1

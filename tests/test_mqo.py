@@ -1,0 +1,262 @@
+"""Multi-query batch optimizer (DESIGN.md §16): shared sub-plans execute
+exactly once per batch, batched results are bit-identical to sequential
+per-query execution, planning probes never masquerade as reuse hits, and
+known-uses hints override the seen-once admission gate."""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.core.mqo import count_dup_executions, optimize_batch, run_batch
+from repro.core.restore import ReStore
+from repro.core.rewriter import rewrite_plan
+from repro.dataflow.builder import Dataflow, col
+from repro.dataflow.compiler import compile_workflow
+from repro.service.service import ReStoreService
+from repro.store.artifacts import ArtifactStore, Catalog
+from repro.workloads import pigmix
+from repro.workloads.stream import StreamConfig, run_stream
+
+N_ROWS = 1024
+
+
+def _driver(heuristic="cost", n_rows=N_ROWS):
+    store = ArtifactStore()
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=n_rows)
+    return ReStore(cat, store, heuristic=heuristic)
+
+
+def _canon(table):
+    d = table.to_numpy()
+
+    def key(a):
+        return (np.ascontiguousarray(a).view(f"S{a.shape[1]}").ravel()
+                if a.ndim == 2 else a)
+
+    order = np.lexsort(tuple(key(d[c]) for c in sorted(d, reverse=True)))
+    return {c: d[c][order] for c in sorted(d)}
+
+
+def _assert_identical(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        ca, cb = _canon(a[k]), _canon(b[k])
+        assert set(ca) == set(cb)
+        for c in ca:
+            assert np.array_equal(ca[c], cb[c]), (k, c)
+
+
+def _scan_variant(thresh, name):
+    return (Dataflow.load("page_views")
+            .filter(col("timespent") > thresh)
+            .group_by("user", n=("count", "timespent"))
+            .store(name).build())
+
+
+BATCH = [pigmix.L3("sum"), pigmix.L3F(), pigmix.L2(),
+         _scan_variant(10, "v10"), _scan_variant(60, "v60")]
+
+
+# ------------------------------------------------------------- planning
+
+
+def test_optimize_batch_finds_exact_maximal_shared():
+    bp = optimize_batch([pigmix.L3("sum"), pigmix.L3F(), pigmix.L2()])
+    by_kind = {s.kind: s for s in bp.shared}
+    # L3/L3F share the whole join; L2 shares only the pv projection
+    assert by_kind["JOIN"].n_consumers == 2
+    assert by_kind["PROJECT"].n_consumers == 3
+    assert len(bp.shared) == 2
+    assert bp.shared_plan is not None
+    assert set(bp.known_uses) >= bp.boundary_artifacts
+
+
+def test_optimize_batch_semantic_covering():
+    bp = optimize_batch([_scan_variant(10, "a"), _scan_variant(50, "b"),
+                         _scan_variant(80, "c")])
+    sem = [s for s in bp.shared if s.semantic]
+    assert len(sem) == 1
+    # the weakest predicate (>10) covers all three variants
+    assert sem[0].kind == "FILTER"
+    assert sem[0].n_consumers == 3
+
+
+def test_optimize_batch_no_overlap_shares_nothing():
+    bp = optimize_batch([pigmix.L6(), pigmix.L8()])
+    assert bp.shared == []
+    assert bp.shared_plan is None
+    assert bp.known_uses == {}
+
+
+def test_optimize_batch_accepts_builders():
+    flow = (Dataflow.load("page_views").project("user", "timespent")
+            .store("x"))
+    bp = optimize_batch([flow, flow.build()])
+    assert len(bp.shared) == 1
+    assert bp.shared[0].n_consumers == 2
+
+
+def test_optimize_batch_drops_already_stored_from_prefix():
+    rs = _driver()
+    rs.run(pigmix.L3("sum"))   # materializes the join boundary
+    bp = optimize_batch([pigmix.L3("sum"), pigmix.L3F()], repo=rs.repo)
+    join = [s for s in bp.shared if s.kind == "JOIN"]
+    assert join and join[0].already_stored
+    live = ([] if bp.shared_plan is None else
+            [s.params["name"] for s in bp.shared_plan.sinks])
+    assert join[0].plan.sinks[0].params["name"] not in live
+
+
+def test_planning_probe_does_not_credit_record_use():
+    rs = _driver(heuristic="aggressive")
+    rs.run(pigmix.L3("sum"))
+    entries = rs.repo.ordered()
+    assert entries
+    before = {e.artifact: e.use_count for e in entries}
+    wf = compile_workflow(pigmix.L3("sum"))
+    for job in wf.jobs:
+        rewrite_plan(job.plan, rs.repo, record=False)
+    after = {e.artifact: e.use_count for e in rs.repo.ordered()}
+    assert after == before, "planning probes must not credit record_use"
+    # the default (execution-time) path still credits
+    for job in wf.jobs:
+        rewrite_plan(job.plan, rs.repo)
+    assert any(after[a] < e.use_count for a, e in
+               {e.artifact: e for e in rs.repo.ordered()}.items())
+
+
+def test_known_uses_hint_admits_never_seen_subjob():
+    cm = CostModel()
+    fp = "deadbeef" * 8
+    assert not cm.should_materialize(fp)
+    cm.set_known_uses({fp: 3.0})
+    assert cm.should_materialize(fp)
+    assert cm.should_materialize("other" * 8, artifact=fp)
+    cm.clear_known_uses([fp])
+    assert not cm.should_materialize(fp)
+    # max-merge: a second batch never lowers an existing hint
+    cm.set_known_uses({"k": 5.0})
+    cm.set_known_uses({"k": 2.0})
+    assert cm.known_uses_for("k") == 5.0
+    cm.clear_known_uses()
+    assert cm.known_uses == {}
+
+
+# ------------------------------------------------------------ execution
+
+
+def test_batch_bit_identical_to_sequential_with_zero_dups():
+    br = run_batch(_driver(), BATCH)
+    assert br.dup_executions == 0
+    assert len(br.batch.shared) >= 1
+    seq = _driver()
+    for q, bres in zip(BATCH, br.results):
+        sres, _ = seq.run(q)
+        _assert_identical(bres, sres)
+
+
+def test_shared_subplan_executed_exactly_once():
+    rs = _driver()
+    br = run_batch(rs, BATCH)
+    assert br.shared_report is not None
+    # shared prefix ran; each query's overlapping job reused it
+    assert br.shared_report.n_executed >= 1
+    assert count_dup_executions(br.batch, br.reports) == 0
+    # every shared artifact exists and is a repository entry
+    for s in br.batch.shared:
+        assert rs.store.exists(s.artifact)
+        assert any(e.artifact == s.artifact for e in rs.repo.ordered())
+
+
+def test_count_dup_executions_flags_unshielded_recompute():
+    # a driver that never reuses recomputes every shared sub-plan —
+    # the audit must see that, not just the happy path
+    bp = optimize_batch([pigmix.L3("sum"), pigmix.L3F()])
+    store = ArtifactStore()
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=256)
+    rs = ReStore(cat, store, heuristic="off", rewrite_enabled=False)
+    reports = [rs.run(p)[1] for p in bp.plans]
+    assert count_dup_executions(bp, reports) >= 1
+
+
+def test_batch_releases_hints_and_pins():
+    rs = _driver()
+    run_batch(rs, BATCH)
+    assert rs.repo.cost_model.known_uses == {}
+    assert not rs.repo.pinned
+
+
+def test_semantic_variants_compensate_from_covering_chain():
+    rs = _driver()
+    variants = [_scan_variant(10, "a"), _scan_variant(50, "b"),
+                _scan_variant(80, "c")]
+    br = run_batch(rs, variants)
+    assert br.dup_executions == 0
+    n_sem = sum(j.n_semantic for rep in br.reports for j in rep.jobs)
+    assert n_sem >= 2, "stricter variants must splice the covering chain"
+    seq = _driver()
+    for q, bres in zip(variants, br.results):
+        sres, _ = seq.run(q)
+        _assert_identical(bres, sres)
+
+
+def test_run_batch_via_driver_convenience():
+    br = _driver().run_batch([pigmix.L3("sum"), pigmix.L3F()])
+    assert br.dup_executions == 0
+    assert {"L3_sum_out"} <= set(br.results[0])
+
+
+# -------------------------------------------------------------- service
+
+
+def test_submit_batch_fans_out_tickets():
+    rs_store = ArtifactStore()
+    cat = Catalog(rs_store)
+    pigmix.register_all(cat, n_rows=N_ROWS)
+    svc = ReStoreService(cat, rs_store, n_workers=2, heuristic="cost")
+    try:
+        tickets = svc.submit_batch(
+            BATCH, tenants=["a", "b", "c", "a", "b"])
+        results = [t.result(120) for t in tickets]
+        st = svc.stats()
+        assert st["batches"] == 1
+        assert st["batch_shared_subplans"] >= 1
+        assert st["dup_executions"] == 0
+    finally:
+        svc.stop()
+    seq = _driver()
+    for q, (bres, _rep) in zip(BATCH, results):
+        sres, _ = seq.run(q)
+        _assert_identical(bres, sres)
+
+
+def test_submit_batch_accepts_builders_and_tenant_mismatch_raises():
+    store = ArtifactStore()
+    cat = Catalog(store)
+    pigmix.register_all(cat, n_rows=256)
+    svc = ReStoreService(cat, store, n_workers=1, heuristic="cost")
+    try:
+        with pytest.raises(ValueError, match="1:1"):
+            svc.submit_batch([pigmix.L2()], tenants=["a", "b"])
+        flow = (Dataflow.load("page_views").project("user")
+                .distinct().store("u"))
+        (res, _), = [t.result(60) for t in
+                     svc.submit_batch([flow])]
+        assert "u" in res
+    finally:
+        svc.stop()
+
+
+# --------------------------------------------------------------- stream
+
+
+def test_stream_mqo_mode_batches_without_dups():
+    cfg = StreamConfig(n_events=8, n_rows=512, batch_size=4)
+    r = run_stream("mqo", cfg)
+    assert r.batches == 2
+    assert r.mqo_dup_executions == 0
+    assert len(r.events) == 8
+    # a window's events see at least as much reuse as sequential cost
+    r_cost = run_stream("cost", StreamConfig(n_events=8, n_rows=512))
+    assert r.n_reused_total >= r_cost.n_reused_total

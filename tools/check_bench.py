@@ -37,7 +37,14 @@ exempt):
     ``MIN_PREFETCH_SPEEDUP``x faster than demand paging at full size
     (ISSUE 8); every entry of ANY size must record ``identical: true``
     (both arms returned bit-identical tables) and a finite, positive
-    ``cold_start_s`` (the cold start from the remote tier completed).
+    ``cold_start_s`` (the cold start from the remote tier completed);
+  * ``mqo_runs`` — batched execution at least ``MIN_MQO_SPEEDUP``x
+    faster than sequential ReStore at full size (ISSUE 9); every entry
+    of ANY size must record ``identical: true`` (batched results
+    bit-identical to sequential), ``dup_executions == 0`` (a shared
+    sub-plan executing twice is an optimizer bug, not noise) and at
+    least one shared sub-plan (a batch that shares nothing measures
+    nothing).
 
 Usage: python tools/check_bench.py [path]   (exit 0 = all checks pass)
 """
@@ -61,10 +68,12 @@ QUERY_NOISE_TOL = float(os.environ.get("CHECK_BENCH_QUERY_NOISE_TOL", 0.05))
 MIN_DELTA_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_DELTA", 3.0))
 MIN_SERVICE_SCALING = float(os.environ.get("CHECK_BENCH_MIN_SERVICE", 1.5))
 MIN_PREFETCH_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_PREFETCH", 1.3))
+MIN_MQO_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_MQO", 1.5))
 DELTA_FLOOR_MAX_FRAC = 0.10      # the ISSUE 5 "≤10% append" regime
 DELTA_FLOOR_TEMPLATES = ("groupby", "join")
 FLOOR_MIN_ROWS = 1 << 16         # full-size entries only
 SERVICE_FLOOR_MIN_ROWS = 1 << 15  # the service bench's full size
+MQO_FLOOR_MIN_ROWS = 1 << 15     # the MQO bench's full size
 
 # run-list name -> (required fields, headline metric fn or None)
 
@@ -99,6 +108,12 @@ SCHEMAS = {
                    "speedup_prefetch", "prefetch_hit_rate",
                    "cold_start_s", "identical"),
                   lambda r: r["speedup_prefetch"]),
+    "mqo_runs": (("label", "n_rows", "n_queries", "n_tenants",
+                  "t_noreuse_s", "t_sequential_s", "t_batched_s",
+                  "speedup_batched_vs_sequential",
+                  "speedup_batched_vs_noreuse", "shared_subplans",
+                  "dup_executions", "identical"),
+                 lambda r: r["speedup_batched_vs_sequential"]),
 }
 
 
@@ -248,6 +263,34 @@ def check(path: str) -> int:
                             f"tier_runs label={rec['label']!r}: prefetch "
                             f"speedup {s:.2f} below the "
                             f"{MIN_PREFETCH_SPEEDUP:.1f}x floor "
+                            f"({rec['n_rows']} rows)")
+
+        # acceptance floors for batch-optimizer entries (ISSUE 9)
+        if list_name == "mqo_runs":
+            for rec in entries:
+                n_checked += 3
+                if not rec.get("identical", False):
+                    errors.append(
+                        f"mqo_runs label={rec['label']!r}: batched "
+                        f"results not bit-identical to sequential")
+                if rec["dup_executions"] != 0:
+                    errors.append(
+                        f"mqo_runs label={rec['label']!r}: "
+                        f"{rec['dup_executions']} duplicate shared-"
+                        f"sub-plan executions (invariant is == 0)")
+                if rec["shared_subplans"] < 1:
+                    errors.append(
+                        f"mqo_runs label={rec['label']!r}: no shared "
+                        f"sub-plans found (the batch workload must "
+                        f"overlap)")
+                if rec["n_rows"] >= MQO_FLOOR_MIN_ROWS:
+                    n_checked += 1
+                    s = rec["speedup_batched_vs_sequential"]
+                    if s < MIN_MQO_SPEEDUP:
+                        errors.append(
+                            f"mqo_runs label={rec['label']!r}: batched "
+                            f"vs sequential speedup {s:.2f} below the "
+                            f"{MIN_MQO_SPEEDUP:.1f}x floor "
                             f"({rec['n_rows']} rows)")
 
     if errors:
