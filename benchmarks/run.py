@@ -36,18 +36,18 @@ SUITES = {
     "service": service_bench.run,
     "tier": tier_bench.run,
     "mqo": mqo_bench.run,
+    "prefix": prefix_reuse_bench.run,
     "fig9_whole_job": whole_job_reuse.run,
     "fig10_12_subjob": subjob_reuse.run,
     "fig11_overhead": store_overhead.run,
     "fig13_14_table1_heuristics": heuristics.run,
     "fig16_projection": projection_sweep.run,
     "fig17_filter": filter_sweep.run,
-    "beyond_prefix_reuse": prefix_reuse_bench.run,
 }
 
 # suites that accept a --label (snapshots into BENCH_core.json)
 LABELLED = {"core", "policy", "semantic", "dist", "delta", "service",
-            "tier", "mqo"}
+            "tier", "mqo", "prefix"}
 
 
 def main() -> None:

@@ -91,6 +91,12 @@ class CostModel:
         self.prior_uses = prior_uses
         self.max_expected_uses = max_expected_uses
         self.min_splice_benefit_s = min_splice_benefit_s
+        # serve-side producer price (DESIGN.md §17): seconds of prefill
+        # per prompt token, calibrated online from measured prefill
+        # walls exactly like the IO bandwidths — it is the "producer
+        # cost" of a stored prefix entry
+        self.prefill_s_per_token = 1e-3
+        self._prefill_tokens_seen = 0
         self.op_stats: Dict[str, OpStats] = {}
         # Batch-optimizer materialization hints (DESIGN.md §16): key
         # (structural fingerprint OR artifact name) -> number of queries
@@ -148,6 +154,29 @@ class CostModel:
         st = bw("store")
         if st is not None:
             self.store_bw = st
+
+    #: minimum token mass before a prefill sample replaces the prior
+    MIN_PREFILL_TOKENS = 16
+
+    def observe_prefill(self, n_tokens: int, seconds: float) -> None:
+        """Record one measured prefill (``n_tokens`` prompt tokens in
+        ``seconds``).  The first qualifying sample replaces the prior;
+        later samples blend by the same EWMA the op-cost stats use, so
+        the per-token rate tracks compile warmup settling down."""
+        if n_tokens <= 0 or seconds <= 0.0:
+            return
+        rate = seconds / n_tokens
+        if self._prefill_tokens_seen < self.MIN_PREFILL_TOKENS:
+            self.prefill_s_per_token = rate
+        else:
+            self.prefill_s_per_token += self.alpha * (
+                rate - self.prefill_s_per_token)
+        self._prefill_tokens_seen += int(n_tokens)
+
+    def prefill_cost_s(self, n_tokens: int) -> float:
+        """Predicted wall cost of prefilling ``n_tokens`` — the producer
+        cost of a prefix entry, priced per calibrated token rate."""
+        return max(int(n_tokens), 0) * self.prefill_s_per_token
 
     def tier_bandwidth(self, tier: str) -> float:
         if tier == "disk":

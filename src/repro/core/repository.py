@@ -50,7 +50,8 @@ from .plan import PhysicalPlan, plan_signature
 
 @dataclasses.dataclass
 class RepositoryEntry:
-    plan: PhysicalPlan            # Load...→op→Store, original (unrewritten) form
+    plan: PhysicalPlan            # Load...→op→Store, original (unrewritten)
+    #                               form — or a PrefixPlan (kind="prefix")
     artifact: str                 # dataset name in the artifact store
     signature: str                # fingerprint of the output operator
     bytes_in: int = 0
@@ -77,6 +78,11 @@ class RepositoryEntry:
     # the same value match identically — but a rewrite that splices a
     # co-partitioned artifact also skips the consumer's exchange.
     partitioning: Optional[Dict] = None
+    # artifact-kind axis (DESIGN.md §17): "plan" = analytics job output,
+    # "prefix" = serving-time KV/recurrent state.  One repository, one
+    # budget, one economics engine — the kind only routes store deletes
+    # and scopes the paper's plan-specific keep rules (R1/R2).
+    kind: str = "plan"
 
     @property
     def reduction(self) -> float:
@@ -92,9 +98,15 @@ class Repository:
                  load_bandwidth_bytes_s: float = 2e9,
                  budget_bytes: Optional[int] = None,
                  policy: str = "cost",
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None,
+                 clock=None):
         if policy not in ("cost", "lru"):
             raise ValueError(f"unknown eviction policy {policy!r}")
+        # injectable time source: every recency stamp and eviction "now"
+        # flows through it, so tests (and the serve path, which defaults
+        # to a logical event counter) get deterministic eviction order
+        # instead of wall-clock-dependent LRU ties (DESIGN.md §17)
+        self._now = clock if clock is not None else time.time
         self.entries: List[RepositoryEntry] = []
         self.by_sig: Dict[str, RepositoryEntry] = {}
         self.keep_only_reducing = keep_only_reducing
@@ -114,6 +126,11 @@ class Repository:
         self.exact_hits = 0           # record_use(kind="exact")
         self.semantic_hits = 0        # record_use(kind="semantic")
         self.refreshes = 0            # delta-refreshed entries (§12)
+        # per-artifact-kind hit counters, surfaced by stats()
+        self._hits_by_kind: Dict[str, Dict[str, int]] = {}
+        # artifact-kind -> store: non-"plan" kinds bind their own tier
+        # store here so eviction routes deletes to the right backend
+        self._stores: Dict[str, object] = {}
         # stale-but-refreshable entries deferred by the cost model:
         # old entry signature -> RefreshSpec, executed on the next probe
         # whose plan would match the refreshed signature (DESIGN.md §12)
@@ -131,10 +148,16 @@ class Repository:
         self._ordered: List[RepositoryEntry] = []
 
     # ------------------------------------------------------------- binding
-    def bind_store(self, store) -> None:
+    def bind_store(self, store, kind: str = "plan") -> None:
         """Attach the artifact store so budget eviction (and R3/R4 when
-        called without an explicit store) can delete evicted artifacts."""
-        self._store = store
+        called without an explicit store) can delete evicted artifacts.
+        Non-"plan" kinds (e.g. ``"prefix"`` KV snapshots, DESIGN.md §17)
+        bind their own backend; eviction routes each dropped entry's
+        delete to its kind's store."""
+        if kind == "plan":
+            self._store = store
+        else:
+            self._stores[kind] = store
 
     def bind_journal(self, journal) -> None:
         """Attach a WAL journal; subsequent mutations are logged."""
@@ -178,13 +201,18 @@ class Repository:
         with self._lock:
             if entry.signature in self.by_sig:
                 return False
-            if self.keep_only_reducing and entry.bytes_out >= entry.bytes_in:
-                return False            # rule R1
-            if self.keep_only_time_saving:
-                load_time = entry.bytes_out / self.load_bw
-                if entry.exec_time_s <= load_time:
-                    return False        # rule R2 (Eq. 1/2 estimate)
-            entry.created_at = entry.created_at or time.time()
+            # R1/R2 are the paper's *plan* keep-rules (output vs input
+            # bytes of a relational job); prefix entries have no input
+            # byte mass and are governed by the budget economics alone
+            if entry.kind == "plan":
+                if self.keep_only_reducing \
+                        and entry.bytes_out >= entry.bytes_in:
+                    return False        # rule R1
+                if self.keep_only_time_saving:
+                    load_time = entry.bytes_out / self.load_bw
+                    if entry.exec_time_s <= load_time:
+                        return False    # rule R2 (Eq. 1/2 estimate)
+            entry.created_at = entry.created_at or self._now()
             if self.budget_bytes is not None and not self._admit(entry):
                 self.rejections += 1
                 return False
@@ -224,10 +252,15 @@ class Repository:
     def _apply_eviction(self, victims) -> None:
         if not victims:
             return
-        drop_ids = {id(v) for v in victims}
-        self._replace([e for e in self.entries if id(e) not in drop_ids],
-                      victims, self._store)
-        self.evictions += len(victims)
+        # expand to every entry sharing a victim's artifact: alias
+        # entries (intermediate prefix lengths, bytes_out=0) share the
+        # parent snapshot's arrays, so they must die with it — a
+        # dangling alias would advertise bytes the store deleted
+        arts = {v.artifact for v in victims}
+        drop = [e for e in self.entries if e.artifact in arts]
+        self._replace([e for e in self.entries if e.artifact not in arts],
+                      drop, self._store)
+        self.evictions += len(drop)
 
     def _admit(self, entry: RepositoryEntry) -> bool:
         """Knapsack-style admission: free enough bytes by evicting
@@ -243,7 +276,7 @@ class Repository:
             return True
         if entry.bytes_out > self.budget_bytes:
             return False
-        now = time.time()
+        now = self._now()
         stop = self._score(entry, now) if self.policy == "cost" else None
         victims, freed = self._select_victims(need, now, stop_score=stop)
         if freed < need:
@@ -261,7 +294,7 @@ class Repository:
             excess = self.total_stored_bytes() - self.budget_bytes
             if excess <= 0:
                 return 0
-            victims, _ = self._select_victims(excess, time.time())
+            victims, _ = self._select_victims(excess, self._now())
             self._apply_eviction(victims)
             return len(victims)
 
@@ -284,6 +317,10 @@ class Repository:
             return self._ordered
 
     def subsumes(self, a: RepositoryEntry, b: RepositoryEntry) -> bool:
+        if a.kind == "prefix" or b.kind == "prefix":
+            # prefix containment IS the subsumption analog (§17)
+            return (a.kind == b.kind == "prefix"
+                    and b.plan.is_prefix_of(a.plan))
         return match_bottom_up(a.plan, b.plan) is not None
 
     # ------------------------------------------------------------- use/evict
@@ -298,9 +335,12 @@ class Repository:
         if kind not in ("exact", "semantic"):
             raise ValueError(f"unknown reuse kind {kind!r}")
         with self._lock:
-            entry.last_used = time.time()
+            entry.last_used = self._now()
             entry.use_count += 1
             entry.saved_s_total += saved_s
+            hk = self._hits_by_kind.setdefault(
+                entry.kind, {"exact": 0, "semantic": 0})
+            hk[kind] += 1
             if kind == "semantic":
                 entry.semantic_uses += 1
                 self.semantic_hits += 1
@@ -317,7 +357,7 @@ class Repository:
         """Rule R3: drop entries not used within ``window_s`` seconds
         (artifacts deleted from ``store``, defaulting to the bound one)."""
         with self._lock:
-            now = time.time()
+            now = self._now()
             keep, drop = [], []
             for e in self.entries:
                 ref = e.last_used or e.created_at
@@ -326,13 +366,19 @@ class Repository:
                           store if store is not None else self._store)
             return len(drop)
 
-    def evict_stale(self, catalog, store=None) -> int:
+    def evict_stale(self, catalog, store=None, kinds=None) -> int:
         """Rule R4 garbage collection: an entry whose recorded source
         versions no longer match the catalog can never match again.  Its
-        artifact is deleted from ``store`` (default: the bound store)."""
+        artifact is deleted from ``store`` (default: the bound store).
+        ``kinds`` restricts the sweep to entries of those artifact kinds
+        — the serve path invalidates a model-version bump against its
+        own catalog without evaluating analytics entries (§17)."""
         with self._lock:
             keep, drop = [], []
             for e in self.entries:
+                if kinds is not None and e.kind not in kinds:
+                    keep.append(e)
+                    continue
                 stale = any(catalog.version(ds) != v
                             for ds, v in e.source_versions.items())
                 (drop if stale else keep).append(e)
@@ -347,10 +393,15 @@ class Repository:
         with self._lock:
             keep = [e for e in self.entries if e.artifact != name]
             drop = [e for e in self.entries if e.artifact == name]
-            self._replace(keep, drop, None)
+            self._replace(keep, drop, None, route=False)
             return len(drop)
 
-    def _replace(self, keep, drop, store):
+    def _replace(self, keep, drop, store, route=True):
+        """Swap the entry list; deletes dropped artifacts.  ``store`` is
+        the plan-kind backend (explicit or the bound default); with
+        ``route`` (the normal case) non-plan entries delete from their
+        kind's bound store instead.  An artifact still referenced by a
+        kept entry is never deleted (alias entries share artifacts)."""
         with self._lock:
             self.entries = keep
             self.by_sig = {e.signature: e for e in keep}
@@ -359,9 +410,22 @@ class Repository:
                 self.pending_refresh.pop(e.signature, None)
             if self.journal is not None and drop:
                 self.journal.record_drop([e.signature for e in drop])
-            if store is not None:
-                for e in drop:
-                    store.delete(e.artifact)
+            kept_by_art: Dict[str, List[RepositoryEntry]] = {}
+            for e in keep:
+                kept_by_art.setdefault(e.artifact, []).append(e)
+            for e in drop:
+                survivors = kept_by_art.get(e.artifact)
+                if survivors:
+                    # shared artifact survives; the byte charge moves to
+                    # the largest surviving entry so the budget still
+                    # counts the stored arrays exactly once
+                    if e.bytes_out:
+                        heir = max(survivors, key=lambda s: s.bytes_out)
+                        heir.bytes_out += e.bytes_out
+                    continue
+                st = self._stores.get(e.kind, store) if route else store
+                if st is not None:
+                    st.delete(e.artifact)
 
     # ------------------------------------------------- incremental refresh
     def maintain(self, catalog, engine, store=None,
@@ -421,6 +485,22 @@ class Repository:
             report["deleted"] = len(drop)
             return report
 
+    def reindex(self, entry: RepositoryEntry, old_sig: str) -> None:
+        """Re-key an entry that was refreshed/extended in place: the
+        caller already mutated ``entry`` (plan, signature, bytes, ...)
+        and this re-indexes it under the new signature, journalling the
+        transition as a refresh.  Shared by §12 delta refresh and the
+        §17 append-style prefix extension (a multi-turn conversation
+        growing a stored prefix rides this instead of re-storing)."""
+        with self._lock:
+            self.by_sig.pop(old_sig, None)
+            self.by_sig[entry.signature] = entry
+            self.pending_refresh.pop(old_sig, None)
+            self._ordered_dirty = True
+            self.refreshes += 1
+            if self.journal is not None:
+                self.journal.record_refresh(old_sig, entry)
+
     def apply_refresh(self, spec, engine, store, catalog) -> None:
         """Execute one derived refresh and re-index the entry under its
         refreshed signature (the semantic/exact matchers then see it as
@@ -430,13 +510,7 @@ class Repository:
             entry = spec.entry
             old_sig = entry.signature
             execute_refresh(spec, engine, store, catalog)
-            self.by_sig.pop(old_sig, None)
-            self.by_sig[entry.signature] = entry
-            self.pending_refresh.pop(old_sig, None)
-            self._ordered_dirty = True
-            self.refreshes += 1
-            if self.journal is not None:
-                self.journal.record_refresh(old_sig, entry)
+            self.reindex(entry, old_sig)
 
     def refresh_pending(self, plan, engine, catalog, store=None) -> int:
         """Lazy-refresh hook: execute every pending refresh whose
@@ -496,13 +570,33 @@ class Repository:
     def total_stored_bytes(self) -> int:
         return sum(e.bytes_out for e in self.entries)
 
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-artifact-kind accounting: entry/byte counts plus the hit
+        split — the audit surface for "KV state and analytics artifacts
+        share one budget" (DESIGN.md §17)."""
+        with self._lock:
+            out: Dict[str, Dict[str, int]] = {}
+            for e in self.entries:
+                k = out.setdefault(e.kind, {
+                    "entries": 0, "bytes": 0,
+                    "exact_hits": 0, "semantic_hits": 0})
+                k["entries"] += 1
+                k["bytes"] += e.bytes_out
+            for kind, hk in self._hits_by_kind.items():
+                k = out.setdefault(kind, {
+                    "entries": 0, "bytes": 0,
+                    "exact_hits": 0, "semantic_hits": 0})
+                k["exact_hits"] = hk["exact"]
+                k["semantic_hits"] = hk["semantic"]
+            return out
+
 
 def make_entry(plan: PhysicalPlan, artifact: str, *, bytes_in=0, bytes_out=0,
                rows_out=0, exec_time_s=0.0, producer_cost_s=0.0,
                history_uses=0.0,
                source_versions: Optional[Dict[str, int]] = None,
-               partitioning: Optional[Dict] = None
-               ) -> RepositoryEntry:
+               partitioning: Optional[Dict] = None,
+               kind: str = "plan") -> RepositoryEntry:
     return RepositoryEntry(plan=plan, artifact=artifact,
                            signature=plan_signature(plan),
                            bytes_in=bytes_in, bytes_out=bytes_out,
@@ -512,4 +606,5 @@ def make_entry(plan: PhysicalPlan, artifact: str, *, bytes_in=0, bytes_out=0,
                            created_at=time.time(),
                            source_versions=dict(source_versions or {}),
                            partitioning=dict(partitioning)
-                           if partitioning else None)
+                           if partitioning else None,
+                           kind=kind)

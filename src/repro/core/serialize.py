@@ -104,11 +104,21 @@ def plan_from_json(d: Dict[str, Any]) -> P.PhysicalPlan:
 # Repository
 
 
+def _payload_to_json(e) -> Dict[str, Any]:
+    if getattr(e, "kind", "plan") == "prefix":
+        return {"prefix": {"tokens": [int(t) for t in e.plan.tokens],
+                           "model_version": e.plan.model_version}}
+    return plan_to_json(e.plan)
+
+
 def entry_to_json(e) -> Dict[str, Any]:
     """One repository entry as a JSON-safe dict (shared by the state
-    snapshot and the WAL journal — one codec, one format)."""
+    snapshot and the WAL journal — one codec, one format).  Entries are
+    tagged with their artifact kind (DESIGN.md §17): a "prefix" entry
+    serializes its token chain instead of an operator DAG."""
     return {
-        "plan": plan_to_json(e.plan), "artifact": e.artifact,
+        "kind": getattr(e, "kind", "plan"),
+        "plan": _payload_to_json(e), "artifact": e.artifact,
         "signature": e.signature, "bytes_in": e.bytes_in,
         "bytes_out": e.bytes_out, "rows_out": e.rows_out,
         "exec_time_s": e.exec_time_s, "created_at": e.created_at,
@@ -126,8 +136,20 @@ def entry_from_json(d: Dict[str, Any]):
     """Decode one entry, or None when the payload fails the integrity
     check (a corrupted plan no longer matches its signature)."""
     from .repository import RepositoryEntry
-    plan = plan_from_json(d["plan"])
+    kind = d.get("kind", "plan")
+    if kind == "prefix":
+        from .prefix_plan import PrefixPlan
+        p = d["plan"]["prefix"]
+        try:
+            plan = PrefixPlan(p["tokens"], p["model_version"])
+        except (ValueError, KeyError, TypeError):
+            return None
+        if plan.signature != d["signature"]:
+            return None
+    else:
+        plan = plan_from_json(d["plan"])
     e = RepositoryEntry(
+        kind=kind,
         plan=plan, artifact=d["artifact"], signature=d["signature"],
         bytes_in=d["bytes_in"], bytes_out=d["bytes_out"],
         rows_out=d["rows_out"], exec_time_s=d["exec_time_s"],
@@ -139,7 +161,7 @@ def entry_from_json(d: Dict[str, Any]):
         saved_s_total=d.get("saved_s_total", 0.0),
         source_versions=d["source_versions"],
         partitioning=d.get("partitioning"))
-    if P.plan_signature(plan) != e.signature:
+    if kind != "prefix" and P.plan_signature(plan) != e.signature:
         return None
     return e
 

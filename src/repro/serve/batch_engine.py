@@ -1,135 +1,56 @@
-"""Continuous-batching serving engine.
+"""Deprecated alias: `BatchEngine` → `ServeSession` (DESIGN.md §17).
 
-Production serving never decodes one request at a time: a fixed-size
-batch of decode *slots* runs every step; finished sequences free their
-slot and queued requests are admitted mid-flight (Orca-style continuous
-batching).  The decode step is compiled ONCE for the slot batch; per-slot
-indices live in the cache positions, so admission is a cache write, not a
-recompile.
-
-Prefill runs per-request (optionally through the PrefixRepository) into a
-scratch cache, then the slot's cache rows are spliced in.
+Continuous batching lives in the unified `ServeSession`; this shim keeps
+the old ``submit(prompt, max_new, rid)`` / ``step`` / ``run`` surface
+for one release.  `Request` is the old name for `ServeRequest` (the
+first three fields are positionally identical).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+import warnings
+from typing import Optional
 
 from ..models.api import Model
-from .prefix_repo import PrefixRepository
+from .session import ServeRequest as Request
+from .session import ServeSession
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
-    max_new: int
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+__all__ = ["BatchEngine", "Request"]
 
 
 class BatchEngine:
     def __init__(self, model: Model, params, n_slots: int = 4,
-                 max_len: int = 256,
-                 prefix_repo: Optional[PrefixRepository] = None,
+                 max_len: int = 256, prefix_repo=None,
                  eos_token: int = -1):
+        warnings.warn(
+            "BatchEngine is deprecated; use repro.serve.ServeSession "
+            "(one submission surface for sequential and batched serving)",
+            DeprecationWarning, stacklevel=2)
+        kv = None
+        if prefix_repo is not None:
+            kv = getattr(prefix_repo, "kv", prefix_repo)
+        self._session = ServeSession(model, params, n_slots=n_slots,
+                                     max_len=max_len, kv=kv,
+                                     eos_token=eos_token, every_k=0)
         self.model = model
         self.params = params
-        self.n_slots = n_slots
-        self.max_len = max_len
         self.repo = prefix_repo
-        self.eos = eos_token
-        cfg = model.cfg
 
-        self.cache = model.init_cache(n_slots, max_len)
-        self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.slot_pos = np.zeros(n_slots, np.int32)   # next write index
-        self.next_tok = np.zeros(n_slots, np.int32)
-        self.queue: List[Request] = []
-        self._decode = jax.jit(
-            lambda p, b, c, i: model.decode_step(p, b, c, i))
+    # old surface: submit returns the request object itself
+    def submit(self, prompt, max_new: int, rid: int) -> Request:
+        t = self._session.submit(prompt, max_new)
+        t.request.rid = rid
+        return t.request
 
-    # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new: int, rid: int) -> Request:
-        r = Request(rid, np.asarray(prompt, np.int32), max_new)
-        self.queue.append(r)
-        return r
-
-    def _admit(self, slot: int, r: Request):
-        """Prefill the request into a size-1 scratch cache, splice its
-        rows into the slot, seed the first token."""
-        cfg = self.model.cfg
-        s = len(r.prompt)
-        scratch = self.model.init_cache(1, self.max_len)
-        start = 0
-        if self.repo is not None:
-            hit = self.repo.match(r.prompt)
-            if hit is not None and hit.length < s:
-                scratch, start = hit.cache, hit.length
-        pos = jnp.arange(start, s, dtype=jnp.int32)
-        if cfg.m_rope:
-            pos = jnp.tile(pos[None, None], (3, 1, 1))
-        batch = {"tokens": jnp.asarray(r.prompt[None, start:]),
-                 "positions": pos}
-        logits, scratch = self.model.prefill(self.params, batch, scratch,
-                                             start=start)
-        if self.repo is not None:
-            self.repo.store(r.prompt, scratch, logits=logits)
-
-        # splice scratch row 0 into slot `slot` of the live cache
-        def splice(live, sc):
-            if live.ndim >= 2 and live.shape[1] == self.n_slots \
-                    and sc.shape[1] == 1:
-                return live.at[:, slot].set(sc[:, 0])
-            return live
-        self.cache = jax.tree_util.tree_map(splice, self.cache, scratch)
-        self.slot_req[slot] = r
-        self.slot_pos[slot] = s
-        self.next_tok[slot] = int(jnp.argmax(logits[0, -1]))
-
-    # ------------------------------------------------------------------
-    def step(self):
-        """Admit queued requests to free slots, then one batched decode
-        step for every live slot."""
-        for slot in range(self.n_slots):
-            if self.slot_req[slot] is None and self.queue:
-                self._admit(slot, self.queue.pop(0))
-        live = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not live:
-            return False
-
-        cfg = self.model.cfg
-        # per-slot positions: a (B, 1) positions array (rope consumes the
-        # batched form); idle slots decode harmlessly at position 0
-        pos = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
-        if cfg.m_rope:
-            pos = jnp.tile(pos[None], (3, 1, 1))
-        batch = {"tokens": jnp.asarray(self.next_tok[:, None]),
-                 "positions": pos}
-        # batched decode needs per-slot cache indices: we pass the max and
-        # rely on per-slot positions for rope; the cache write index must
-        # be per-slot, so we use the vmapped path below instead when
-        # positions diverge.
-        logits, self.cache = self._decode(self.params, batch, self.cache,
-                                          jnp.asarray(self.slot_pos))
-        toks = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
-
-        for slot in live:
-            r = self.slot_req[slot]
-            r.out.append(int(self.next_tok[slot]))
-            self.slot_pos[slot] += 1
-            self.next_tok[slot] = int(toks[slot])
-            if len(r.out) >= r.max_new or int(toks[slot]) == self.eos \
-                    or self.slot_pos[slot] >= self.max_len - 1:
-                r.done = True
-                self.slot_req[slot] = None      # slot freed -> admission
-        return True
+    def step(self) -> bool:
+        return self._session.step()
 
     def run(self, max_steps: int = 10_000) -> None:
-        for _ in range(max_steps):
-            if not self.step() and not self.queue:
-                break
+        self._session.run(max_steps)
+
+    @property
+    def queue(self):
+        return [r for q in self._session._queues.values() for r in q]
+
+    @property
+    def slot_req(self):
+        return self._session.slot_req

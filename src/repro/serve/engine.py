@@ -1,104 +1,38 @@
-"""Serving engine: batched prefill/decode with ReStore-style prefix reuse.
+"""Deprecated alias: `ServeEngine` → `ServeSession` (DESIGN.md §17).
 
-serve() greedily decodes n tokens from a prompt.  With a PrefixRepository
-attached, the longest stored prefix's cache snapshot is reused and only
-the prompt suffix is prefilled — the decode-path equivalent of rewriting
-a MapReduce job to Load a stored sub-job output.
+The sequential serving engine merged into the unified `ServeSession`
+submission surface; this shim keeps the old constructor and ``serve``
+signature for one release and delegates everything to a session.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+import warnings
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from ..models.api import Model
-from .prefix_repo import PrefixRepository
+from .session import ServeSession, ServeStats
 
-
-@dataclasses.dataclass
-class ServeStats:
-    prefilled_tokens: int
-    reused_tokens: int
-    decoded_tokens: int
-    wall_s: float
+__all__ = ["ServeEngine", "ServeStats"]
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, max_len: int = 512,
-                 prefix_repo: Optional[PrefixRepository] = None):
+                 prefix_repo=None):
+        warnings.warn(
+            "ServeEngine is deprecated; use repro.serve.ServeSession "
+            "(one submission surface for sequential and batched serving)",
+            DeprecationWarning, stacklevel=2)
+        kv = None
+        if prefix_repo is not None:
+            # accept both the old PrefixRepository shim and a bare
+            # KVRepository
+            kv = getattr(prefix_repo, "kv", prefix_repo)
+        self._session = ServeSession(model, params, n_slots=1,
+                                     max_len=max_len, kv=kv)
         self.model = model
         self.params = params
         self.max_len = max_len
         self.repo = prefix_repo
-        cfg = model.cfg
-        self._decode = jax.jit(
-            lambda p, b, c, i: model.decode_step(p, b, c, i))
 
-    def _positions(self, start, length, batch=1):
-        cfg = self.model.cfg
-        pos = jnp.arange(start, start + length, dtype=jnp.int32)
-        if cfg.m_rope:
-            return jnp.tile(pos[None, None], (3, batch, 1))
-        return pos
-
-    def serve(self, prompt: np.ndarray, n_decode: int) -> tuple:
-        """prompt: (S,) int32.  Returns (generated tokens, ServeStats)."""
-        t0 = time.time()
-        cfg = self.model.cfg
-        prompt = np.asarray(prompt, np.int32)
-        s = len(prompt)
-
-        reused = 0
-        cache = self.model.init_cache(1, self.max_len)
-        start = 0
-        hit = None
-        if self.repo is not None:
-            hit = self.repo.match(prompt)
-            if hit is not None and hit.length <= s:
-                cache = hit.cache
-                start = hit.length
-                reused = hit.length
-
-        positional = (cfg.family in ("dense", "moe", "vlm", "encdec")
-                      and cfg.ssm is None and cfg.xlstm is None)
-        if start < s:
-            batch = {"tokens": jnp.asarray(prompt[None, start:]),
-                     "positions": self._positions(start, s - start)}
-            logits, cache = self.model.prefill(self.params, batch, cache,
-                                               start=start)
-        elif hit is not None and hit.logits is not None:
-            # exact hit: stored logits — a recurrent state must not be
-            # advanced again by replaying the final token
-            logits = hit.logits
-        else:
-            # positional cache: replaying the last token is idempotent
-            batch = {"tokens": jnp.asarray(prompt[None, -1:]),
-                     "positions": self._positions(s - 1, 1)}
-            logits, cache = self._decode(self.params, batch, cache,
-                                         jnp.int32(s - 1))
-
-        if self.repo is not None and reused < s:
-            # positional (attention) caches admit intermediate-prefix
-            # aliases (the sub-job enumeration analogue); recurrent
-            # states are exact-length only
-            self.repo.store(prompt, cache,
-                            every_k=8 if positional else 0,
-                            logits=logits)
-
-        out = []
-        tok = int(jnp.argmax(logits[0, -1]))
-        for i in range(n_decode):
-            out.append(tok)
-            batch = {"tokens": jnp.asarray([[tok]], jnp.int32),
-                     "positions": self._positions(s + i, 1)}
-            logits, cache = self._decode(self.params, batch, cache,
-                                         jnp.int32(s + i))
-            tok = int(jnp.argmax(logits[0, -1]))
-
-        return np.array(out, np.int32), ServeStats(
-            prefilled_tokens=s - reused, reused_tokens=reused,
-            decoded_tokens=n_decode, wall_s=time.time() - t0)
+    def serve(self, prompt, n_decode: int) -> tuple:
+        return self._session.serve(prompt, n_decode)

@@ -1,130 +1,79 @@
-"""Prefix-reuse repository for serving — ReStore's algorithms applied to
-the decode path (beyond-paper extension, DESIGN.md §4).
+"""Deprecated alias: `PrefixRepository` → `KVRepository` (DESIGN.md §17).
 
-The correspondence:
-  physical plan            <->  token prefix (chain of per-token "ops")
-  plan containment (Alg 1) <->  longest stored prefix of the request
-  job output artifact      <->  KV cache / recurrent state after prefix
-  ordering rule (best 1st) <->  longest prefix first
-  eviction R1              <->  keep only if recompute cost > store cost
-  eviction R3              <->  LRU window
-  eviction R4              <->  model/version change invalidates entries
+The serving prefix cache is no longer a standalone class — prefix
+snapshots are `RepositoryEntry(kind="prefix")` rows in the SAME ReStore
+repository that manages analytics artifacts, priced by the same
+`CostModel` under the same byte budget, stored in the §15 tier
+hierarchy.  This shim keeps the old ``match`` / ``store`` surface for
+one release; ``match`` is now literally ``probe → splice → record_use``.
 
-Entries are content-addressed with the same Merkle idea as plans: the
-fingerprint of a prefix is hash(fingerprint(prefix[:-1]), token[-1]).
+It also fixes two standing accounting bugs of the old class, carried by
+the new machinery:
+
+  * ``match`` stamped ``time.time()``, making eviction order depend on
+    the wall clock — recency now flows through the repository's logical
+    clock (deterministic under test);
+  * ``every_k`` alias entries reported ``nbytes=0`` but LRU eviction
+    could drop the parent while aliases kept advertising the deleted
+    arrays — eviction now expands to every entry sharing the artifact.
 """
 from __future__ import annotations
 
-import dataclasses
-import hashlib
-import time
-from typing import Dict, List, Optional, Tuple
+import warnings
 
-import jax
-import numpy as np
+from ..core.prefix_plan import prefix_fingerprints  # noqa: F401 (re-export)
+from .kv_repo import KVRepository, PrefixHit
 
-
-def prefix_fingerprints(tokens: np.ndarray, model_version: str) -> List[str]:
-    """Fingerprint of every prefix of a token sequence (Merkle chain)."""
-    out = []
-    h = hashlib.sha256(model_version.encode()).hexdigest()
-    for t in tokens:
-        h = hashlib.sha256(f"{h}:{int(t)}".encode()).hexdigest()
-        out.append(h)
-    return out
-
-
-@dataclasses.dataclass
-class PrefixEntry:
-    fingerprint: str
-    length: int
-    cache: object                # model cache pytree snapshot
-    nbytes: int
-    created_at: float
-    last_used: float = 0.0
-    use_count: int = 0
-    logits: object = None        # last-token logits (exact-hit fast path:
-    #                              recurrent states must NOT be re-advanced)
+__all__ = ["PrefixRepository", "PrefixHit", "prefix_fingerprints"]
 
 
 class PrefixRepository:
     def __init__(self, model_version: str = "v0",
                  capacity_bytes: int = 1 << 34):
-        self.model_version = model_version
-        self.entries: Dict[str, PrefixEntry] = {}
-        self.capacity_bytes = capacity_bytes
-        self.total_bytes = 0
+        warnings.warn(
+            "PrefixRepository is deprecated; use repro.serve.KVRepository "
+            "(prefix snapshots live in the unified ReStore repository)",
+            DeprecationWarning, stacklevel=2)
+        self.kv = KVRepository(model_version=model_version,
+                               budget_bytes=capacity_bytes)
 
-    # ------------------------------------------------------------- match
-    def match(self, tokens: np.ndarray) -> Optional[PrefixEntry]:
-        """Longest stored prefix of ``tokens`` (first match is best match:
-        scan from the full length down — the ordering rule)."""
-        fps = prefix_fingerprints(tokens, self.model_version)
-        for i in range(len(fps) - 1, -1, -1):
-            e = self.entries.get(fps[i])
-            if e is not None:
-                e.last_used = time.time()
-                e.use_count += 1
-                return e
-        return None
+    @property
+    def model_version(self) -> str:
+        return self.kv.model_version
 
-    # ------------------------------------------------------------- store
-    def store(self, tokens: np.ndarray, cache, *, every_k: int = 0,
-              logits=None) -> Optional[PrefixEntry]:
-        """Store the prefix state; with every_k > 0, ALSO register entries
-        for intermediate prefix lengths sharing the same cache arrays —
-        the sub-job-enumeration analogue (paper §4).  Only valid for
-        positional caches (attention KV): a recurrent state is exact-length
-        only, so SSM/hybrid archs must pass every_k=0."""
-        fps = prefix_fingerprints(tokens, self.model_version)
-        fp = fps[-1]
-        if fp in self.entries:
-            return self.entries[fp]
-        nbytes = sum(x.size * x.dtype.itemsize
-                     for x in jax.tree_util.tree_leaves(cache))
-        # R1 analogue: don't store states that exceed the budget per entry
-        if nbytes > self.capacity_bytes:
+    @property
+    def capacity_bytes(self) -> int:
+        return self.kv.repository.budget_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return self.kv.total_bytes
+
+    @property
+    def entries(self):
+        """Live prefix entries keyed by fingerprint (signature)."""
+        return self.kv.entries
+
+    # old verbs, expressed as the new ones
+    def match(self, tokens):
+        hit = self.kv.probe(tokens)
+        if hit is None:
             return None
-        while self.total_bytes + nbytes > self.capacity_bytes \
-                and self.entries:
-            self._evict_lru()
-        e = PrefixEntry(fp, len(tokens), cache, nbytes, time.time(),
-                        logits=logits)
-        self.entries[fp] = e
-        self.total_bytes += nbytes
-        if every_k:
-            for ln in range(every_k, len(tokens), every_k):
-                sub_fp = fps[ln - 1]
-                if sub_fp not in self.entries:
-                    # shares arrays: zero marginal bytes (alias entry)
-                    self.entries[sub_fp] = PrefixEntry(
-                        sub_fp, ln, cache, 0, time.time())
-        return e
+        hit = self.kv.splice(hit)
+        if hit is None:
+            return None
+        self.kv.record_use(hit)
+        return hit
 
-    # ------------------------------------------------------------- evict
-    def _evict_lru(self):
-        victim = min(self.entries.values(),
-                     key=lambda e: e.last_used or e.created_at)
-        self.total_bytes -= victim.nbytes
-        del self.entries[victim.fingerprint]
+    def store(self, tokens, cache, *, every_k: int = 0, logits=None):
+        return self.kv.store_prefix(tokens, cache, logits=logits,
+                                    every_k=every_k)
 
     def evict_unused(self, window_s: float) -> int:
-        """Rule R3."""
-        now = time.time()
-        drop = [e for e in self.entries.values()
-                if now - (e.last_used or e.created_at) > window_s]
-        for e in drop:
-            self.total_bytes -= e.nbytes
-            del self.entries[e.fingerprint]
-        return len(drop)
+        return self.kv.evict_unused(window_s)
 
     def invalidate_version(self, new_version: str) -> int:
-        """Rule R4: the 'input dataset' (model weights) changed."""
-        n = len(self.entries)
-        self.entries.clear()
-        self.total_bytes = 0
-        self.model_version = new_version
-        return n
+        return self.kv.invalidate_version(new_version)
 
-    def __len__(self):
-        return len(self.entries)
+    def __len__(self) -> int:
+        return len(self.kv)

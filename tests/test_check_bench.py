@@ -56,6 +56,13 @@ def _doc(**overrides):
             "speedup_prefetch": 1.46, "prefetch_hit_rate": 0.94,
             "cold_start_s": 0.25, "identical": True,
         }],
+        "prefix_runs": [{
+            "label": "full", "n_requests": 48, "n_prompts": 8,
+            "prefix_len": 320, "suffix_len": 16, "n_decode": 2,
+            "t_noreuse_s": 8.0, "t_reuse_s": 3.0, "wall_speedup": 2.7,
+            "reused_token_frac": 0.9, "p50_reuse_ms": 40.0,
+            "p95_reuse_ms": 120.0, "identical": True,
+        }],
         "mqo_runs": [{
             "label": "full", "n_rows": 1 << 15, "n_queries": 7,
             "n_tenants": 3, "trials": 3, "t_noreuse_s": 2.4,
@@ -253,6 +260,54 @@ def test_tier_same_label_regression_fails(tmp_path):
     doc["tier_runs"][0]["speedup_prefetch"] = 2.5
     second["speedup_prefetch"] = 1.5                    # above floor,
     doc["tier_runs"].append(second)                     # but a >20% drop
+    assert _run(tmp_path, doc) == 1
+
+
+# ------------------------------------------------ prefix_runs (ISSUE 10)
+
+
+def test_prefix_speedup_floor_violation_fails(tmp_path):
+    doc = _doc()
+    doc["prefix_runs"][0]["wall_speedup"] = 1.6         # < 2.0 at full
+    assert _run(tmp_path, doc) == 1
+
+
+def test_prefix_floor_exempts_small_sizes(tmp_path):
+    doc = _doc()
+    doc["prefix_runs"][0]["n_requests"] = 6             # CI smoke size
+    doc["prefix_runs"][0]["wall_speedup"] = 1.1
+    assert _run(tmp_path, doc) == 0
+    doc = _doc()
+    doc["prefix_runs"][0]["prefix_len"] = 96            # short prefixes
+    doc["prefix_runs"][0]["wall_speedup"] = 1.1
+    assert _run(tmp_path, doc) == 0
+
+
+def test_prefix_bit_identity_gates_at_any_size(tmp_path):
+    doc = _doc()
+    doc["prefix_runs"][0]["n_requests"] = 6             # even CI smoke
+    doc["prefix_runs"][0]["identical"] = False
+    assert _run(tmp_path, doc) == 1
+
+
+def test_prefix_reused_fraction_floor_fails(tmp_path):
+    doc = _doc()
+    doc["prefix_runs"][0]["reused_token_frac"] = 0.3    # < 0.5 at full
+    assert _run(tmp_path, doc) == 1
+
+
+def test_prefix_missing_field_fails(tmp_path):
+    doc = _doc()
+    del doc["prefix_runs"][0]["p95_reuse_ms"]
+    assert _run(tmp_path, doc) == 1
+
+
+def test_prefix_same_label_regression_fails(tmp_path):
+    doc = _doc()
+    second = json.loads(json.dumps(doc["prefix_runs"][0]))
+    doc["prefix_runs"][0]["wall_speedup"] = 4.0
+    second["wall_speedup"] = 2.5                        # above floor,
+    doc["prefix_runs"].append(second)                   # but a >20% drop
     assert _run(tmp_path, doc) == 1
 
 

@@ -440,3 +440,69 @@ def test_stream_driver_smoke_all_modes():
     # identical schedule across modes (same seed)
     assert [e.template for e in keep.events] == \
            [e.template for e in off.events]
+
+
+# ------------------------------------------- cross-kind budget (§17)
+
+def _cross_kind_repo(budget):
+    """One repository + budget serving BOTH artifact kinds: analytics
+    entries bound to an ArtifactStore, prefix entries to a KVTierStore,
+    recency on the deterministic logical clock."""
+    from repro.serve.kv_repo import KVRepository, LogicalClock
+    from repro.serve.kv_store import KVTierStore
+    store = ArtifactStore()
+    repo = Repository(budget_bytes=budget, cost_model=_fresh_cm(),
+                      clock=LogicalClock())
+    repo.bind_store(store)
+    kv = KVRepository(repository=repo, store=KVTierStore())
+    return repo, store, kv
+
+
+def test_hot_kv_prefix_evicts_cold_analytics_artifact():
+    import jax.numpy as jnp
+    repo, store, kv = _cross_kind_repo(budget=3000)
+    cold = _entry(store, "art/cold", bytes_out=2000,
+                  producer_cost_s=0.001)
+    assert repo.add(cold)
+    # a hot prompt prefix (32 tokens, 4 observed reuses) is worth more
+    # per byte than the barely-used analytics artifact: admitting it
+    # under the SHARED budget evicts the plan entry from ITS store
+    e = kv.store_prefix(np.arange(32),
+                        {"k": jnp.zeros((2000,), jnp.uint8)},
+                        history_uses=4.0)
+    assert e is not None
+    assert not store.exists("art/cold")
+    assert kv.store.exists(e.artifact)
+    assert [x.kind for x in repo.entries] == ["prefix"]
+
+
+def test_hot_analytics_artifact_evicts_cold_kv_prefix():
+    import jax.numpy as jnp
+    repo, store, kv = _cross_kind_repo(budget=3000)
+    e = kv.store_prefix(np.arange(4),
+                        {"k": jnp.zeros((2000,), jnp.uint8)})
+    assert e is not None
+    hot = _entry(store, "art/hot", bytes_out=2000, producer_cost_s=5.0)
+    assert repo.add(hot)
+    # the eviction routed the delete to the PREFIX kind's store
+    assert not kv.store.exists(e.artifact)
+    assert store.exists("art/hot")
+    assert [x.kind for x in repo.entries] == ["plan"]
+
+
+def test_stats_report_both_kinds_under_one_budget():
+    import jax.numpy as jnp
+    repo, store, kv = _cross_kind_repo(budget=10_000)
+    repo.add(_entry(store, "art/a", bytes_out=1000))
+    e = kv.store_prefix(np.arange(8),
+                        {"k": jnp.zeros((1000,), jnp.uint8)})
+    kv.record_use(kv.probe(np.arange(8)))
+    hit = kv.probe(np.arange(8 + 4))     # covering prefix of a longer
+    kv.record_use(hit)                   # prompt: semantic hit
+    s = repo.stats()
+    assert s["plan"]["entries"] == 1 and s["plan"]["bytes"] == 1000
+    assert s["prefix"]["entries"] == 1 and s["prefix"]["bytes"] == 1000
+    assert s["prefix"]["exact_hits"] == 1
+    assert s["prefix"]["semantic_hits"] == 1
+    assert repo.total_stored_bytes() == 2000
+    assert e.bytes_out == 1000

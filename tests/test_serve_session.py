@@ -1,0 +1,338 @@
+"""Unified serving session (DESIGN.md §17): prefix-KV reuse through the
+ReStore repository — bit-identical decodes across reuse and tiers, the
+submission semantics (singleflight, tenants, deadlines, backpressure),
+deterministic accounting, and the deprecated aliases."""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import build
+from repro.serve.kv_repo import KVRepository, LogicalClock
+from repro.serve.kv_store import KVTierStore
+from repro.serve.session import (ServeSession, SessionSaturated,
+                                 ServeStats)
+from repro.service.faults import FaultInjector, FaultSchedule
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _kv(tmp_path=None, budget=1 << 34, injector=None):
+    store = KVTierStore(
+        remote_root=str(tmp_path / "kv-remote") if tmp_path else None,
+        injector=injector)
+    return KVRepository(budget_bytes=budget, store=store)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: cold vs prefix-warm vs tier-round-tripped
+
+
+def test_warm_and_tier_roundtrip_bit_identical(setup, tmp_path):
+    cfg, model, params = setup
+    cold = ServeSession(model, params, max_len=64)
+    kv = _kv(tmp_path)
+    warm = ServeSession(model, params, max_len=64, kv=kv)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size, 24)
+    p1 = np.concatenate([shared, rng.integers(1, cfg.vocab_size, 8)])
+    p2 = np.concatenate([shared, rng.integers(1, cfg.vocab_size, 8)])
+
+    ref1, _ = cold.serve(p1, 6)
+    ref2, _ = cold.serve(p2, 6)
+    a1, s1 = warm.serve(p1, 6)           # cold store
+    a2, s2 = warm.serve(p2, 6)           # alias hit on the shared 24
+    assert (a1 == ref1).all() and (a2 == ref2).all()
+    assert s1.reused_tokens == 0 and s2.reused_tokens >= 24
+
+    # demote every snapshot device -> remote blob, then serve again:
+    # the splice promotes back through the tiers, decode unchanged
+    names = {e.artifact for e in kv.repository.entries}
+    for n in names:
+        assert kv.store.demote_to_remote(n)
+        assert kv.store.residency(n) == "remote"
+    a2r, s2r = warm.serve(p2, 6)
+    assert (a2r == ref2).all()
+    assert s2r.reused_tokens >= 24
+    assert kv.store.stats["remote_hits"] >= 1
+
+
+def test_exact_hit_uses_stored_logits(setup):
+    cfg, model, params = setup
+    kv = _kv()
+    sess = ServeSession(model, params, max_len=48, kv=kv)
+    cold = ServeSession(model, params, max_len=48)
+    rng = np.random.default_rng(3)
+    p = rng.integers(1, cfg.vocab_size, 16)
+    ref, _ = cold.serve(p, 4)
+    a1, _ = sess.serve(p, 4)
+    a2, s2 = sess.serve(p, 4)            # exact full-prompt hit
+    assert (a1 == ref).all() and (a2 == ref).all()
+    assert s2.reused_tokens == 16 and s2.prefilled_tokens == 0
+    assert kv.stats()["exact_hits"] >= 1
+
+
+def test_recurrent_arch_exact_length_only():
+    """SSM/recurrent caches cannot be truncated: no every_k aliases are
+    registered, and the exact hit replays stored logits rather than
+    re-advancing the state."""
+    cfg = get_config("xlstm-350m", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    kv = _kv()
+    sess = ServeSession(model, params, max_len=48, kv=kv)
+    rng = np.random.default_rng(1)
+    p = rng.integers(1, cfg.vocab_size, 16)
+    sess.serve(p, 4)
+    # one entry: the full 16-token state, no intermediate aliases
+    assert len(kv) == 1
+    (e,) = kv.entries.values()
+    assert e.plan.n_ops() == 16
+    _, s2 = sess.serve(p, 4)
+    assert s2.reused_tokens == 16 and s2.prefilled_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# R4 + fault injection
+
+
+def test_version_invalidation_r4(setup):
+    cfg, model, params = setup
+    kv = _kv()
+    sess = ServeSession(model, params, max_len=48, kv=kv)
+    rng = np.random.default_rng(2)
+    p = rng.integers(1, cfg.vocab_size, 16)
+    sess.serve(p, 2)
+    assert len(kv) >= 1
+    n = kv.invalidate_version("v2")
+    assert n >= 1 and len(kv) == 0
+    assert len(kv.store) == 0            # artifacts deleted, not leaked
+    assert kv.probe(p) is None           # new version: nothing matches
+
+
+def test_corrupt_remote_blob_quarantined_then_cold_prefill(
+        setup, tmp_path):
+    """A bit-flipped remote KV blob fails the RSB1 checksum on splice:
+    the snapshot is quarantined, its entries un-advertised, and the
+    request falls back to a cold prefill — same output, no crash."""
+    cfg, model, params = setup
+    inj = FaultInjector(FaultSchedule(0, rates={"flip": 1.0},
+                                      max_faults=1))
+    kv = _kv(tmp_path, injector=inj)
+    sess = ServeSession(model, params, max_len=48, kv=kv)
+    cold = ServeSession(model, params, max_len=48)
+    rng = np.random.default_rng(4)
+    p = rng.integers(1, cfg.vocab_size, 16)
+    ref, _ = cold.serve(p, 4)
+    sess.serve(p, 4)
+    for e in list(kv.entries.values()):
+        kv.store.demote_to_remote(e.artifact)   # flip fires on publish
+    assert inj.total_injected() == 1
+    a, s = sess.serve(p, 4)
+    assert (a == ref).all()
+    assert s.reused_tokens == 0          # quarantined -> cold prefill
+    assert kv.store.stats["quarantined"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Submission semantics
+
+
+def test_singleflight_identical_inflight_prompts(setup):
+    cfg, model, params = setup
+    sess = ServeSession(model, params, n_slots=2, max_len=48)
+    rng = np.random.default_rng(5)
+    p = rng.integers(1, cfg.vocab_size, 9)
+    t1 = sess.submit(p, 4)
+    t2 = sess.submit(p, 4)               # identical in-flight: follower
+    t3 = sess.submit(p, 5)               # different max_new: own decode
+    sess.run()
+    assert sess.stats["singleflight_hits"] == 1
+    assert sess.stats["dup_executions"] == 0
+    assert t1.done() and t2.done() and t3.done()
+    assert (t1.result() == t2.result()).all()
+    assert len(t3.result()) == 5
+
+
+def test_tenant_round_robin_admission(setup):
+    cfg, model, params = setup
+    sess = ServeSession(model, params, n_slots=1, max_len=48)
+    rng = np.random.default_rng(6)
+    pa1 = rng.integers(1, cfg.vocab_size, 7)
+    pa2 = rng.integers(1, cfg.vocab_size, 7)
+    pb1 = rng.integers(1, cfg.vocab_size, 7)
+    ta1 = sess.submit(pa1, 1, tenant="a")
+    ta2 = sess.submit(pa2, 1, tenant="a")
+    tb1 = sess.submit(pb1, 1, tenant="b")
+    sess.step()                          # admits + finishes a1
+    assert ta1.done() and not ta2.done() and not tb1.done()
+    sess.step()                          # round-robin: b1 before a2
+    assert tb1.done() and not ta2.done()
+    sess.step()
+    assert ta2.done()
+
+
+def test_deadline_expiry_and_backpressure(setup):
+    cfg, model, params = setup
+    sess = ServeSession(model, params, n_slots=1, max_len=48,
+                        max_queue=2)
+    rng = np.random.default_rng(7)
+    long = sess.submit(rng.integers(1, cfg.vocab_size, 8), 6)
+    late = sess.submit(rng.integers(1, cfg.vocab_size, 8), 2,
+                       deadline_steps=1)
+    with pytest.raises(SessionSaturated):
+        sess.submit(rng.integers(1, cfg.vocab_size, 8), 2)
+    sess.run()
+    assert long.done() and len(long.result()) == 6
+    assert late.done()
+    with pytest.raises(RuntimeError, match="deadline"):
+        late.result()
+    assert sess.stats["expired"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Deterministic accounting + alias budget charging (regression tests for
+# the pre-§17 PrefixRepository bugs)
+
+
+def _fake_cache(kib):
+    return {"k": jnp.zeros((kib << 8,), jnp.float32)}   # kib KiB
+
+
+def test_eviction_order_is_wall_clock_free():
+    """Recency flows through the injectable logical clock: two
+    repositories replaying the same operations pick the same R3
+    victims, however much wall time the replay took (the old
+    PrefixRepository stamped time.time() inside match)."""
+    survivors = []
+    for _ in range(2):
+        kv = KVRepository(budget_bytes=1 << 22)
+        a = np.arange(10)
+        b = np.arange(12)
+        kv.store_prefix(a, _fake_cache(4))      # created_at = 1
+        hit = kv.probe(a)
+        kv.record_use(hit)                      # a.last_used = 2
+        kv.store_prefix(b, _fake_cache(4))      # created_at = 3
+        kv.evict_unused(window_s=1)             # now = 4: drops a only
+        survivors.append(sorted(kv.entries.keys()))
+    assert survivors[0] == survivors[1]
+    assert len(survivors[0]) == 1
+
+
+def test_alias_entries_never_budget_charged_and_die_with_parent():
+    """every_k alias entries share the parent's arrays: they charge
+    zero bytes to the budget, and evicting the parent snapshot drops
+    them too (the old class left aliases advertising deleted arrays)."""
+    kv = KVRepository(budget_bytes=5 << 20)
+    a = np.arange(24)
+    parent = kv.store_prefix(a, _fake_cache(4096), every_k=8)  # 4 MiB
+    assert parent is not None and len(kv) == 3     # parent + 8, 16
+    # shared arrays charged exactly once
+    assert kv.repository.total_stored_bytes() == parent.bytes_out
+    assert kv.total_bytes == parent.bytes_out
+
+    # admitting a second 4 MiB snapshot under a 5 MiB budget must evict
+    # the parent — and every alias with it, atomically
+    b = np.arange(100, 124)
+    kept = kv.store_prefix(b, _fake_cache(4096))
+    assert kept is not None
+    assert all(e.artifact == kept.artifact
+               for e in kv.entries.values())
+    assert not kv.store.exists(parent.artifact)
+    assert kv.probe(a) is None                     # no dangling aliases
+
+
+def test_append_extension_rides_refresh_path():
+    """Multi-turn growth: extending a stored prefix re-keys the entry
+    in place (§12 reindex) instead of storing a second snapshot."""
+    kv = KVRepository(budget_bytes=1 << 22)
+    a = np.arange(8)
+    e = kv.store_prefix(a, _fake_cache(4))
+    old_art = e.artifact
+    grown = np.concatenate([a, np.arange(50, 54)])
+    hit = kv.probe(grown)
+    assert hit is not None and hit.length == 8 and not hit.exact
+    e2 = kv.extend(hit, grown, _fake_cache(6))
+    assert e2 is e                       # same entry object, re-keyed
+    assert len(kv) == 1
+    assert kv.repository.refreshes == 1
+    assert not kv.store.exists(old_art)  # superseded snapshot freed
+    hit2 = kv.probe(grown)
+    assert hit2 is not None and hit2.exact
+    with pytest.raises(ValueError):
+        kv.extend(hit2, np.arange(100, 104), _fake_cache(4))
+
+
+def test_pinned_snapshot_never_evicted():
+    kv = KVRepository(budget_bytes=5 << 20)
+    a = kv.store_prefix(np.arange(10), _fake_cache(4096))
+    kv.pin(a)
+    b = kv.store_prefix(np.arange(20, 30), _fake_cache(4096))
+    assert b is None                     # rejected: incumbent is pinned
+    assert kv.probe(np.arange(10)) is not None
+    kv.unpin(a)
+    assert kv.store_prefix(np.arange(20, 30),
+                           _fake_cache(4096)) is not None
+
+
+# ---------------------------------------------------------------------------
+# Serialization + aliases
+
+
+def test_prefix_entry_serialize_roundtrip():
+    from repro.core.serialize import entry_from_json, entry_to_json
+    kv = KVRepository(budget_bytes=1 << 22)
+    e = kv.store_prefix(np.arange(12), _fake_cache(4))
+    kv.record_use(kv.probe(np.arange(12)))
+    d = entry_to_json(e)
+    assert d["kind"] == "prefix"
+    back = entry_from_json(d)
+    assert back is not None and back.kind == "prefix"
+    assert back.signature == e.signature
+    assert list(back.plan.tokens) == list(range(12))
+    assert back.use_count == e.use_count
+    # integrity: a corrupted token chain no longer matches its signature
+    bad = dict(d)
+    bad["plan"] = {"prefix": {"tokens": [9] * 12, "model_version": "v0"}}
+    assert entry_from_json(bad) is None
+
+
+def test_deprecated_aliases_delegate(setup):
+    """Old entry points warn once and produce the new path's results."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(8)
+    p = rng.integers(1, cfg.vocab_size, 9)
+    new = ServeSession(model, params, max_len=48)
+    ref, _ = new.serve(p, 4)
+
+    from repro.serve.engine import ServeEngine
+    from repro.serve.batch_engine import BatchEngine
+    from repro.serve.prefix_repo import PrefixRepository
+    with pytest.warns(DeprecationWarning):
+        eng = ServeEngine(model, params, max_len=48)
+    a, st = eng.serve(p, 4)
+    assert (a == ref).all() and isinstance(st, ServeStats)
+
+    with pytest.warns(DeprecationWarning):
+        be = BatchEngine(model, params, n_slots=2, max_len=48)
+    r = be.submit(p, 4, rid=7)
+    be.run()
+    assert r.done and r.rid == 7 and (np.array(r.out) == ref).all()
+
+    with pytest.warns(DeprecationWarning):
+        repo = PrefixRepository(capacity_bytes=1 << 22)
+    # old verbs are the new verbs: match == probe+splice+record_use
+    repo.store(np.arange(10), _fake_cache(4))
+    hit = repo.match(np.arange(10))
+    assert hit is not None and hit.length == 10
+    assert repo.kv.stats()["exact_hits"] == 1
+    assert repo.total_bytes == repo.kv.total_bytes

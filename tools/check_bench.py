@@ -38,6 +38,14 @@ exempt):
     (ISSUE 8); every entry of ANY size must record ``identical: true``
     (both arms returned bit-identical tables) and a finite, positive
     ``cold_start_s`` (the cold start from the remote tier completed);
+  * ``prefix_runs`` — the serving prefix-reuse stream at full size
+    (``PREFIX_FLOOR_MIN_REQUESTS`` requests and
+    ``PREFIX_FLOOR_MIN_PREFIX`` prefix tokens) must run at least
+    ``MIN_PREFIX_SPEEDUP``x faster with KV reuse than without, with a
+    reused-token fraction of at least ``MIN_PREFIX_REUSED_FRAC``
+    (ISSUE 10); every entry of ANY size must record
+    ``identical: true`` — greedy decodes with reuse must be
+    bit-identical to the no-reuse arm;
   * ``mqo_runs`` — batched execution at least ``MIN_MQO_SPEEDUP``x
     faster than sequential ReStore at full size (ISSUE 9); every entry
     of ANY size must record ``identical: true`` (batched results
@@ -69,6 +77,11 @@ MIN_DELTA_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_DELTA", 3.0))
 MIN_SERVICE_SCALING = float(os.environ.get("CHECK_BENCH_MIN_SERVICE", 1.5))
 MIN_PREFETCH_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_PREFETCH", 1.3))
 MIN_MQO_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_MQO", 1.5))
+MIN_PREFIX_SPEEDUP = float(os.environ.get("CHECK_BENCH_MIN_PREFIX", 2.0))
+MIN_PREFIX_REUSED_FRAC = float(
+    os.environ.get("CHECK_BENCH_MIN_PREFIX_FRAC", 0.5))
+PREFIX_FLOOR_MIN_REQUESTS = 32   # the prefix bench's full size...
+PREFIX_FLOOR_MIN_PREFIX = 256    # ...in requests and prefix tokens
 DELTA_FLOOR_MAX_FRAC = 0.10      # the ISSUE 5 "≤10% append" regime
 DELTA_FLOOR_TEMPLATES = ("groupby", "join")
 FLOOR_MIN_ROWS = 1 << 16         # full-size entries only
@@ -108,6 +121,11 @@ SCHEMAS = {
                    "speedup_prefetch", "prefetch_hit_rate",
                    "cold_start_s", "identical"),
                   lambda r: r["speedup_prefetch"]),
+    "prefix_runs": (("label", "n_requests", "n_prompts", "prefix_len",
+                     "suffix_len", "n_decode", "wall_speedup",
+                     "reused_token_frac", "p50_reuse_ms", "p95_reuse_ms",
+                     "identical"),
+                    lambda r: r["wall_speedup"]),
     "mqo_runs": (("label", "n_rows", "n_queries", "n_tenants",
                   "t_noreuse_s", "t_sequential_s", "t_batched_s",
                   "speedup_batched_vs_sequential",
@@ -264,6 +282,33 @@ def check(path: str) -> int:
                             f"speedup {s:.2f} below the "
                             f"{MIN_PREFETCH_SPEEDUP:.1f}x floor "
                             f"({rec['n_rows']} rows)")
+
+        # acceptance floors for serving prefix-reuse entries (ISSUE 10)
+        if list_name == "prefix_runs":
+            for rec in entries:
+                n_checked += 1
+                if not rec.get("identical", False):
+                    errors.append(
+                        f"prefix_runs label={rec['label']!r}: greedy "
+                        f"decodes with reuse not bit-identical to the "
+                        f"no-reuse arm")
+                if (rec["n_requests"] >= PREFIX_FLOOR_MIN_REQUESTS
+                        and rec["prefix_len"] >= PREFIX_FLOOR_MIN_PREFIX):
+                    n_checked += 2
+                    s = rec["wall_speedup"]
+                    if s < MIN_PREFIX_SPEEDUP:
+                        errors.append(
+                            f"prefix_runs label={rec['label']!r}: wall "
+                            f"speedup {s:.2f} below the "
+                            f"{MIN_PREFIX_SPEEDUP:.1f}x floor "
+                            f"({rec['n_requests']} requests, prefix "
+                            f"{rec['prefix_len']})")
+                    fr = rec["reused_token_frac"]
+                    if fr < MIN_PREFIX_REUSED_FRAC:
+                        errors.append(
+                            f"prefix_runs label={rec['label']!r}: "
+                            f"reused-token fraction {fr:.2f} below the "
+                            f"{MIN_PREFIX_REUSED_FRAC:.2f} floor")
 
         # acceptance floors for batch-optimizer entries (ISSUE 9)
         if list_name == "mqo_runs":
